@@ -1,0 +1,31 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+
+def save_result(name: str, payload: dict) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=2, default=float))
+    return path
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return out, (time.perf_counter() - t0) / iters
+
+
+def fmt_row(*cols):
+    return ",".join(str(c) for c in cols)

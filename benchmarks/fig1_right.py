@@ -1,0 +1,91 @@
+"""Fig 1 (Right) reproduction: gain trigger (eq. 11+30) vs the
+gradient-magnitude baseline (eq. 31, Remark 3).
+
+Paper setup: n=10, random diagonal 𝔼xxᵀ, random w*, N=20, ε=0.2, K=10,
+m=2; sweep λ (gain) and μ (grad-norm), compare J-vs-communication curves.
+
+Claim validated: at matched communication budgets the gain trigger
+reaches lower J — "significantly better", growing with stepsize
+(EXPERIMENTS.md §Paper).  We quantify it as the area-between-curves and
+per-budget J ratio.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_row, save_result
+from repro.configs.paper_linreg import FIG1_RIGHT
+from repro.core import regression as R
+
+LAMBDAS = [0.0, 0.01, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0, 30.0]
+MUS = [0.0, 1.0, 3.0, 10.0, 30.0, 100.0, 300.0, 1000.0, 3000.0]
+TRIALS = 512
+
+
+def _curve(problem, key, mode, params, steps):
+    out = []
+    for p in params:
+        kw = {"lam": float(p)} if mode != "grad_norm" else {"mu": float(p)}
+        res = R.run_many(problem, key, steps, TRIALS, mode=mode, **kw)
+        out.append((
+            float(jnp.mean(jnp.sum(res.alphas, (1, 2)))),
+            float(jnp.mean(res.J_traj[:, -1])),
+        ))
+    return sorted(out)
+
+
+def _j_at_budget(curve, budget):
+    """Interpolate final-J at a given communication budget."""
+    xs = np.array([c for c, _ in curve])
+    ys = np.array([j for _, j in curve])
+    return float(np.interp(budget, xs, ys))
+
+
+def run(verbose: bool = True) -> dict:
+    problem = R.make_problem(FIG1_RIGHT, jax.random.key(10))
+    key = jax.random.key(11)
+    gain_curve = _curve(problem, key, "gain_estimated", LAMBDAS, FIG1_RIGHT.steps)
+    norm_curve = _curve(problem, key, "grad_norm", MUS, FIG1_RIGHT.steps)
+
+    budgets = np.linspace(2, FIG1_RIGHT.steps * 2 * 0.9, 8)
+    ratios = []
+    per_budget = []
+    for b in budgets:
+        jg = _j_at_budget(gain_curve, b)
+        jn = _j_at_budget(norm_curve, b)
+        per_budget.append({"budget": float(b), "J_gain": jg, "J_grad_norm": jn})
+        ratios.append(jn / max(jg, 1e-9))
+
+    # the paper's operating regime is the LOW-communication end (that is
+    # the whole point of gating); compare there and on average
+    low = ratios[: max(2, len(ratios) // 3)]
+    payload = {
+        "config": "fig1_right (n=10, random diag cov, N=20, eps=0.2, K=10, m=2)",
+        "trials": TRIALS,
+        "gain_curve": [{"comm": c, "J": j} for c, j in gain_curve],
+        "grad_norm_curve": [{"comm": c, "J": j} for c, j in norm_curve],
+        "per_budget": per_budget,
+        "claims": {
+            "mean_J_ratio_grad_over_gain": float(np.mean(ratios)),
+            "low_budget_J_ratio": float(np.mean(low)),
+            "gain_better_at_low_budget": bool(np.mean(low) > 1.15),
+            "gain_significantly_better_somewhere": bool(max(ratios) > 1.3),
+        },
+    }
+    if verbose:
+        print("scheme,comm,final_J")
+        for c, j in gain_curve:
+            print(fmt_row("gain", f"{c:.2f}", f"{j:.4f}"))
+        for c, j in norm_curve:
+            print(fmt_row("grad_norm", f"{c:.2f}", f"{j:.4f}"))
+        print("claims:", payload["claims"])
+    save_result("fig1_right", payload)
+    assert payload["claims"]["gain_significantly_better_somewhere"]
+    assert payload["claims"]["gain_better_at_low_budget"], payload["claims"]
+    return payload
+
+
+if __name__ == "__main__":
+    run()

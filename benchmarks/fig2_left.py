@@ -1,0 +1,62 @@
+"""Fig 2 (Left) reproduction: communication-rate vs learning-performance
+tradeoff of the gain trigger (eq. 11 + 30).
+
+Paper setup: n=2, 𝔼xxᵀ=diag(3,1), w*=(3,5), w₀=0, ε=0.1, N=5, K=10,
+m=2 agents; sweep λ, plot mean J(w_K) against total comm Σ_k Σ_i α_k^i.
+
+Claim validated: the curve is monotone — larger λ ⇒ less communication ⇒
+higher final J, smoothly trading one for the other (EXPERIMENTS.md §Paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, save_result
+from repro.configs.paper_linreg import FIG2_LEFT
+from repro.core import regression as R
+
+LAMBDAS = [0.0, 0.02, 0.05, 0.1, 0.2, 0.4, 0.8, 1.6, 3.2, 6.4]
+TRIALS = 512
+
+
+def run(verbose: bool = True) -> dict:
+    problem = R.make_problem(FIG2_LEFT, jax.random.key(0))
+    Js, comms, any_tx = R.lambda_sweep(
+        problem, jax.random.key(1), FIG2_LEFT.steps, LAMBDAS, TRIALS
+    )
+    rows = []
+    for lam, J, c, a in zip(LAMBDAS, Js, comms, any_tx):
+        rows.append({
+            "lam": lam, "mean_final_J": float(J),
+            "total_comm": float(c), "total_any_tx": float(a),
+        })
+    # monotone tradeoff checks (the paper's qualitative claim)
+    comm_vals = [r["total_comm"] for r in rows]
+    J_vals = [r["mean_final_J"] for r in rows]
+    monotone_comm = all(a >= b - 1e-6 for a, b in zip(comm_vals, comm_vals[1:]))
+    max_comm = FIG2_LEFT.steps * FIG2_LEFT.num_agents
+    payload = {
+        "config": "fig2_left (n=2, cov=diag(3,1), w*=(3,5), eps=0.1, N=5, K=10, m=2)",
+        "trials": TRIALS,
+        "rows": rows,
+        "claims": {
+            "comm_monotone_decreasing_in_lambda": bool(monotone_comm),
+            "comm_range_spans_tradeoff": comm_vals[0] > 0.9 * max_comm
+            and comm_vals[-1] < 0.2 * max_comm,
+            "J_degrades_as_comm_drops": J_vals[-1] > J_vals[0],
+        },
+    }
+    if verbose:
+        print("lam,mean_final_J,total_comm,total_any_tx")
+        for r in rows:
+            print(fmt_row(r["lam"], f"{r['mean_final_J']:.4f}",
+                          f"{r['total_comm']:.2f}", f"{r['total_any_tx']:.2f}"))
+        print("claims:", payload["claims"])
+    save_result("fig2_left", payload)
+    assert all(payload["claims"].values()), payload["claims"]
+    return payload
+
+
+if __name__ == "__main__":
+    run()

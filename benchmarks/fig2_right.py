@@ -1,0 +1,64 @@
+"""Fig 2 (Right) reproduction: exact gain (eq. 28, needs the data
+distribution) vs estimated gain (eq. 30, data-only).
+
+Paper setup: same linreg problem, N=5 samples/agent, ε=0.2, a single
+time step, sweeping λ.  Paper's (surprising) claim: "we do not observe a
+significant difference due to the estimation procedure".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, save_result
+from repro.configs.paper_linreg import FIG2_RIGHT
+from repro.core import regression as R
+
+LAMBDAS = [0.0, 0.05, 0.1, 0.2, 0.4, 0.8, 1.6, 3.2]
+TRIALS = 2048
+
+
+def run(verbose: bool = True) -> dict:
+    problem = R.make_problem(FIG2_RIGHT, jax.random.key(0))
+    key = jax.random.key(1)
+    rows = []
+    for lam in LAMBDAS:
+        r_ex = R.run_many(problem, key, FIG2_RIGHT.steps, TRIALS,
+                          mode="gain_exact", lam=float(lam))
+        r_es = R.run_many(problem, key, FIG2_RIGHT.steps, TRIALS,
+                          mode="gain_estimated", lam=float(lam))
+        rows.append({
+            "lam": float(lam),
+            "J_exact": float(jnp.mean(r_ex.J_traj[:, -1])),
+            "J_estimated": float(jnp.mean(r_es.J_traj[:, -1])),
+            "comm_exact": float(jnp.mean(jnp.sum(r_ex.alphas, (1, 2)))),
+            "comm_estimated": float(jnp.mean(jnp.sum(r_es.alphas, (1, 2)))),
+            "alpha_agreement": float(jnp.mean(r_ex.alphas == r_es.alphas)),
+        })
+    # "no significant difference": relative gap in J small across the sweep
+    gaps = [abs(r["J_exact"] - r["J_estimated"]) / max(r["J_exact"], 1e-9)
+            for r in rows]
+    payload = {
+        "config": "fig2_right (n=2, eps=0.2, N=5, K=1)",
+        "trials": TRIALS,
+        "rows": rows,
+        "claims": {
+            "max_relative_J_gap": max(gaps),
+            "no_significant_difference": max(gaps) < 0.08,
+            "decision_agreement_min": min(r["alpha_agreement"] for r in rows),
+        },
+    }
+    if verbose:
+        print("lam,J_exact,J_estimated,comm_exact,comm_estimated,alpha_agreement")
+        for r in rows:
+            print(fmt_row(r["lam"], f"{r['J_exact']:.4f}", f"{r['J_estimated']:.4f}",
+                          f"{r['comm_exact']:.2f}", f"{r['comm_estimated']:.2f}",
+                          f"{r['alpha_agreement']:.3f}"))
+        print("claims:", payload["claims"])
+    save_result("fig2_right", payload)
+    assert payload["claims"]["no_significant_difference"], payload["claims"]
+    return payload
+
+
+if __name__ == "__main__":
+    run()

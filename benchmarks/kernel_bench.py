@@ -1,0 +1,70 @@
+"""Kernel micro-benchmarks: interpret-mode correctness timing is
+meaningless for speed (CPU interpreter), so this bench reports the
+ANALYTIC kernel-vs-XLA HBM-traffic model — the roofline quantity the
+Pallas kernels exist to improve — plus wall-time of the pure-jnp
+reference path as a CPU sanity anchor.
+
+gain_reduce: fused (gᵀg, gᵀHg) single pass vs two jnp reductions
+swa_attention: flash SWA (O(S·w) traffic) vs materialized scores (O(S²))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, save_result, timed
+from repro.kernels.gain_reduce import ref as gr_ref
+from repro.kernels.swa_attention import ref as swa_ref
+
+
+def gain_reduce_traffic(n: int):
+    """HBM bytes: fused one-pass vs two passes over g and h."""
+    fused = 2 * n * 4          # read g, h once
+    two_pass = 4 * n * 4       # read g twice (g·g), then g,h
+    return fused, two_pass
+
+
+def swa_traffic(s: int, w: int, b: int, h: int, hd: int, kv: int):
+    """HBM bytes/layer: Pallas flash SWA vs XLA materialized path."""
+    qkv_out = (b * s * h * hd * 2 + 2 * b * s * kv * hd * 2) + b * s * h * hd * 2
+    flash = qkv_out + b * s * (w * 2) * hd * 2 * h // max(1, (s // 128))  # k/v re-reads per q tile
+    scores_roundtrips = 5 * b * h * s * min(s, w + 128) * 4  # dot+mask+softmax+convert stages
+    xla = qkv_out + scores_roundtrips
+    return flash, xla
+
+
+def run(verbose: bool = True) -> dict:
+    rows = []
+    for n in (1 << 16, 1 << 20, 1 << 24):
+        fused, two = gain_reduce_traffic(n)
+        g = jax.random.normal(jax.random.key(0), (n,))
+        _, t_ref = timed(jax.jit(lambda g: gr_ref.gain_reduce_ref(g, g)), g)
+        rows.append({"kernel": "gain_reduce", "size": n,
+                     "bytes_fused": fused, "bytes_xla": two,
+                     "traffic_ratio": two / fused, "jnp_ref_s": t_ref})
+    for s in (4096, 32768):
+        w = 4096
+        flash, xla = swa_traffic(s, w, b=1, h=8, hd=64, kv=2)
+        rows.append({"kernel": "swa_attention", "size": s,
+                     "bytes_fused": flash, "bytes_xla": xla,
+                     "traffic_ratio": xla / flash, "jnp_ref_s": None})
+    # fused CE: logits (T, V) never leave VMEM vs fp32 HBM roundtrip
+    for T, V, D in ((4096, 49152, 576), (65536, 151936, 5120)):
+        fused = (T * D + V * D) * 2 + T * 4          # read x + table, write nll
+        xla = fused + 2 * T * V * 4                  # logits write + read (fp32)
+        rows.append({"kernel": "fused_ce", "size": T * V,
+                     "bytes_fused": fused, "bytes_xla": xla,
+                     "traffic_ratio": xla / fused, "jnp_ref_s": None})
+    payload = {"rows": rows}
+    if verbose:
+        print("kernel,size,bytes_fused,bytes_xla,traffic_ratio,jnp_ref_s")
+        for r in rows:
+            print(fmt_row(r["kernel"], r["size"], f"{r['bytes_fused']:.3g}",
+                          f"{r['bytes_xla']:.3g}", f"{r['traffic_ratio']:.2f}",
+                          "-" if r["jnp_ref_s"] is None else f"{r['jnp_ref_s']*1e3:.2f}ms"))
+    save_result("kernel_bench", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Beyond-paper table: diminishing-λ schedules (the paper's post-eq.(23)
+remark — "choose a diminishing parameter λ to eliminate this effect").
+
+Compares constant λ, λ/(1+k), λ·ρ^k and always-transmit on the Fig-2
+setup: steady-state J vs total communication.  The claim: diminishing
+schedules recover the dense steady state while keeping a large part of
+the early-round communication savings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, save_result
+from repro.configs.paper_linreg import FIG2_LEFT
+from repro.core import regression as R
+
+STEPS, TRIALS, LAM0 = 120, 512, 2.0
+
+
+def run(verbose: bool = True) -> dict:
+    problem = R.make_problem(FIG2_LEFT, jax.random.key(0))
+    key = jax.random.key(1)
+    rows = []
+    for name, kw in (
+        ("always", dict(mode="always")),
+        ("const λ=2", dict(mode="gain_exact", lam=LAM0)),
+        ("inv_t λ0=2", dict(mode="gain_exact", lam=LAM0, lam_decay="inv_t")),
+        ("geometric λ0=2", dict(mode="gain_exact", lam=LAM0, lam_decay="geometric")),
+    ):
+        res = R.run_many(problem, key, STEPS, TRIALS, **kw)
+        rows.append({
+            "schedule": name,
+            "steady_J": float(jnp.mean(res.J_traj[:, -10:])),
+            "total_comm": float(jnp.mean(jnp.sum(res.alphas, (1, 2)))),
+        })
+    dense = rows[0]
+    decayed = [r for r in rows if "λ0" in r["schedule"]]
+    payload = {
+        "steps": STEPS, "trials": TRIALS, "rows": rows,
+        "claims": {
+            "decay_recovers_dense_J": all(
+                r["steady_J"] < dense["steady_J"] * 1.3 for r in decayed
+            ),
+            "decay_saves_communication": all(
+                r["total_comm"] < 0.95 * dense["total_comm"] for r in decayed
+            ),
+            "const_keeps_penalty": rows[1]["steady_J"] > dense["steady_J"] * 1.3,
+        },
+    }
+    if verbose:
+        print("schedule,steady_J,total_comm")
+        for r in rows:
+            print(fmt_row(r["schedule"], f"{r['steady_J']:.4f}",
+                          f"{r['total_comm']:.1f}"))
+        print("claims:", payload["claims"])
+    save_result("lambda_decay", payload)
+    assert all(payload["claims"].values()), payload["claims"]
+    return payload
+
+
+if __name__ == "__main__":
+    run()

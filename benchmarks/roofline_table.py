@@ -1,0 +1,73 @@
+"""Render the §Dry-run / §Roofline tables from the cached dry-run JSONs.
+
+Reads ``experiments/dryrun/*.json`` (produced by
+``python -m repro.launch.dryrun --all [--opt]``) and prints/returns the
+roofline table; ``--markdown`` emits the EXPERIMENTS.md sections."""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(tag: str = "base", mesh: str = "pod1"):
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob(f"*_{mesh}_{tag}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def _key(r):
+    return (r.get("arch", r["name"].split("_")[0]),
+            SHAPE_ORDER.index(r.get("shape", "train_4k"))
+            if r.get("shape") in SHAPE_ORDER else 9)
+
+
+def table(tag="base", mesh="pod1", markdown=False):
+    recs = sorted(load(tag, mesh), key=_key)
+    hdr = ["arch", "shape", "mem/dev GB", "t_comp s", "t_mem s", "t_coll s",
+           "bottleneck", "useful_flop_ratio", "MFU bound"]
+    rows = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append([r["name"].split("_")[0],
+                         "_".join(r["name"].split("_")[1:3]),
+                         "skip", "-", "-", "-", r["reason"][:40], "-", "-"])
+            continue
+        if r.get("status") != "ok":
+            continue
+        ro = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"],
+            f"{r['memory_analysis']['total_bytes'] / 1e9:.2f}",
+            f"{ro['t_compute_s']:.4f}", f"{ro['t_memory_s']:.4f}",
+            f"{ro['t_collective_s']:.4f}", ro["bottleneck"],
+            f"{ro['useful_flop_ratio']:.3f}", f"{ro['mfu_bound']:.3f}",
+        ])
+    if markdown:
+        out = ["| " + " | ".join(hdr) + " |",
+               "|" + "---|" * len(hdr)]
+        out += ["| " + " | ".join(str(c) for c in row) + " |" for row in rows]
+        return "\n".join(out)
+    out = [",".join(hdr)] + [",".join(str(c) for c in row) for row in rows]
+    return "\n".join(out)
+
+
+def run(verbose: bool = True) -> dict:
+    txt = table()
+    if verbose:
+        print(txt)
+    n = len([r for r in load() if r.get("status") == "ok"])
+    return {"rows": n, "table": txt}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="base")
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--markdown", action="store_true")
+    a = ap.parse_args()
+    print(table(a.tag, a.mesh, a.markdown))

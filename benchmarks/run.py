@@ -1,0 +1,61 @@
+"""Benchmark driver: one module per paper figure/table + framework tables.
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run fig2_left  # one benchmark
+
+Prints each benchmark's CSV and a final summary line per benchmark.
+Dry-run-derived tables (roofline) read cached JSONs from
+``experiments/dryrun`` — run ``python -m repro.launch.dryrun --all``
+first if missing."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig1_right,
+    fig2_left,
+    fig2_right,
+    kernel_bench,
+    lambda_decay,
+    roofline_table,
+    theory_bounds,
+    triggered_lm,
+)
+
+ALL = {
+    "fig2_left": fig2_left.run,        # paper Fig 2 (Left)
+    "fig2_right": fig2_right.run,      # paper Fig 2 (Right)
+    "fig1_right": fig1_right.run,      # paper Fig 1 (Right)
+    "theory_bounds": theory_bounds.run,  # Thm 1 / Thm 2 table
+    "lambda_decay": lambda_decay.run,  # beyond-paper: diminishing λ
+    "triggered_lm": triggered_lm.run,  # beyond-paper: trigger on real arch
+    "kernel_bench": kernel_bench.run,  # kernel traffic model
+    "roofline_table": roofline_table.run,  # §Roofline from dry-run cache
+}
+
+
+def main() -> int:
+    names = sys.argv[1:] or list(ALL)
+    failures = []
+    for name in names:
+        fn = ALL.get(name)
+        if fn is None:
+            print(f"unknown benchmark {name!r}; available: {', '.join(ALL)}")
+            return 2
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn(verbose=True)
+            print(f"[{name}] OK in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:
+            failures.append(name)
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    print(f"\n{len(names) - len(failures)}/{len(names)} benchmarks passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

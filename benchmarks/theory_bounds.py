@@ -1,0 +1,61 @@
+"""Theorem 1 / Theorem 2 bound-tightness table (paper §3).
+
+Not a figure in the paper, but the paper's two theorems ARE its main
+table-equivalents: for a λ grid we report the measured quantities next
+to the theoretical bounds and the slack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, save_result
+from repro.configs.paper_linreg import FIG2_LEFT
+from repro.core import regression as R
+from repro.core import theory as T
+
+LAMBDAS = [0.05, 0.1, 0.2, 0.5, 1.0]
+TRIALS = 512
+STEPS = 60
+
+
+def run(verbose: bool = True) -> dict:
+    problem = R.make_problem(FIG2_LEFT, jax.random.key(0))
+    J0 = float(problem.J(jnp.zeros(problem.n)))
+    Js = float(problem.J_star())
+    trG = float(T.gradient_covariance_trace(
+        problem.sigma_diag, jnp.zeros(problem.n), problem.w_star,
+        problem.noise_std, problem.n_samples))
+    rows = []
+    for lam in LAMBDAS:
+        res = R.run_many(problem, jax.random.key(2), STEPS, TRIALS,
+                         mode="gain_exact", lam=float(lam))
+        meanJ = float(jnp.mean(res.J_traj[:, -1]))
+        silence = float(jnp.mean(1.0 - res.alphas))
+        b1 = float(T.thm1_bound(J0, Js, problem.eps, problem.sigma_diag,
+                                trG, lam, silence, STEPS))
+        any_tx = jnp.sum(jnp.max(res.alphas, axis=2), axis=1)
+        b2 = T.thm2_comm_bound(J0, Js, lam)
+        rows.append({
+            "lam": lam,
+            "mean_J_N": meanJ, "thm1_bound": b1, "thm1_holds": meanJ <= b1 * 1.02,
+            "max_any_tx": float(jnp.max(any_tx)),
+            "mean_any_tx": float(jnp.mean(any_tx)),
+            "thm2_bound": float(b2),
+            "thm2_holds_as": bool(jnp.all(any_tx <= b2 + 1e-6)),
+        })
+    payload = {"steps": STEPS, "trials": TRIALS, "rows": rows,
+               "all_bounds_hold": all(r["thm1_holds"] and r["thm2_holds_as"]
+                                      for r in rows)}
+    if verbose:
+        print("lam,mean_J_N,thm1_bound,max_any_tx,thm2_bound,holds")
+        for r in rows:
+            print(fmt_row(r["lam"], f"{r['mean_J_N']:.4f}", f"{r['thm1_bound']:.4f}",
+                          f"{r['max_any_tx']:.0f}", f"{r['thm2_bound']:.1f}",
+                          r["thm1_holds"] and r["thm2_holds_as"]))
+    save_result("theory_bounds", payload)
+    assert payload["all_bounds_hold"]
+    return payload
+
+
+if __name__ == "__main__":
+    run()

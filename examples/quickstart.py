@@ -1,0 +1,38 @@
+"""Quickstart: the paper in ~60 lines.
+
+Reproduces the core experiment — gain-triggered distributed linear
+regression (eq. 10+11+30) — and prints the communication/learning
+tradeoff plus both theorem checks.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_linreg import LinRegConfig
+from repro.core import regression as R
+from repro.core import theory as T
+
+# the paper's Fig-2 setup: 2 agents, N=5 fresh samples each per round
+cfg = LinRegConfig(
+    name="quickstart", n=2, num_agents=2, samples_per_agent=5,
+    stepsize=0.1, steps=25, cov_diag=(3.0, 1.0), w_star=(3.0, 5.0),
+)
+problem = R.make_problem(cfg, jax.random.key(0))
+J0 = float(problem.J(jnp.zeros(cfg.n)))
+print(f"problem: n={cfg.n}, Exx^T=diag{tuple(cfg.cov_diag)}, w*={cfg.w_star}")
+print(f"J(w0)={J0:.3f}, J*={problem.J_star():.3f}, rho={problem.rho():.3f}\n")
+
+print(" lam | final J | total tx | Thm2 budget | within budget")
+for lam in (0.0, 0.1, 0.5, 2.0):
+    res = R.run_many(problem, jax.random.key(1), cfg.steps, 256,
+                     mode="gain_estimated", lam=lam)
+    finalJ = float(jnp.mean(res.J_traj[:, -1]))
+    any_tx = jnp.sum(jnp.max(res.alphas, axis=2), axis=1)  # Thm 2's counter
+    budget = T.thm2_comm_bound(J0, problem.J_star(), lam) if lam else float("inf")
+    ok = bool(jnp.all(any_tx <= budget + 1e-6))
+    print(f"{lam:4.1f} | {finalJ:7.3f} | {float(jnp.mean(jnp.sum(res.alphas,(1,2)))):8.2f} "
+          f"| {budget:11.1f} | {ok}")
+
+print("\nlarger λ ⇒ fewer transmissions (provably ≤ (J0−J*)/λ) ⇒ higher J:")
+print("the paper's communication/learning tradeoff, reproduced.")

@@ -1,0 +1,50 @@
+"""Scenario: batched multi-architecture serving through the decode path.
+
+Serves three different FAMILIES (dense, SSM, hybrid) with the same API:
+prefill a batch of prompts, then decode tokens step-by-step against each
+family's native cache (KV ring buffer / mLSTM matrix memory / Mamba2
+state) — the paths the ``decode_32k``/``long_500k`` dry-run shapes lower.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.data import synthetic as D
+from repro.models import build
+
+BATCH, PROMPT, GEN = 2, 24, 8
+
+for arch in ("smollm-135m", "xlstm-350m", "zamba2-1.2b"):
+    cfg = reduced(get_config(arch))
+    model = build(cfg)
+    params, _ = model.init(jax.random.key(0))
+    prompts = D.sample_lm_tokens(jax.random.key(1), BATCH, PROMPT, cfg.vocab_size)
+
+    t0 = time.time()
+    logits, cache = model.prefill(params, {"tokens": prompts},
+                                  cache_len=PROMPT + GEN + 4)
+    last = logits[:, -1] if logits.ndim == 3 else logits[:, 0]
+    toks = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+
+    decode = jax.jit(model.decode_step)
+    outs = [toks]
+    for i in range(GEN - 1):
+        logits, cache = decode(params, cache, toks, jnp.int32(PROMPT + i))
+        toks = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+        outs.append(toks)
+    jax.block_until_ready(toks)
+    gen = jnp.concatenate(outs, axis=1)
+
+    cache_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree_util.tree_leaves(cache))
+    print(f"{arch:14s} [{cfg.arch_type:6s}] {GEN} tok × {BATCH} req "
+          f"in {time.time()-t0:5.1f}s | cache {cache_bytes/1e6:6.2f} MB | "
+          f"req0 -> {gen[0].tolist()}")
+
+print("\nnote the cache scaling: the SSM/hybrid caches are O(1) in context "
+      "length — that is why long_500k only runs for those families (plus "
+      "SWA variants) in the dry-run.")

@@ -1,0 +1,104 @@
+"""Collective-traffic extraction from compiled (post-SPMD) HLO text.
+
+``cost_analysis`` does not report collective bytes, so we scan the
+per-device HLO module for communication ops and sum their operand
+sizes.  Wire-byte factors per op (ring algorithms, group size n):
+
+    all-reduce         2·b·(n−1)/n  ≈ 2·b     (reduce-scatter + all-gather)
+    all-gather         b·(n−1)               (operand b is the local shard)
+    reduce-scatter     b·(n−1)/n    ≈ b
+    all-to-all         b·(n−1)/n    ≈ b
+    collective-permute b
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[dims]' shape string."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    if dtype == "token" or dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota form [G,n]
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def collective_stats(hlo_text: str) -> Dict[str, dict]:
+    """Per-op-kind {count, operand_bytes, wire_bytes} from HLO text."""
+    stats: Dict[str, dict] = defaultdict(
+        lambda: {"count": 0, "operand_bytes": 0, "wire_bytes": 0}
+    )
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result-shape = opname(...) form:  %x = f32[..] all-gather(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*((?:\([^)]*\)|[\w\[\],]+))\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        result_shape, opname = m.groups()
+        kind = next((c for c in _COLLECTIVES if opname.startswith(c)), None)
+        if kind is None or opname.startswith("all-reduce-scatter"):
+            continue
+        n = _group_size(ls)
+        # operand shapes: from the call args  op(f32[...] %a, ...)
+        args = re.findall(r"(\w+\[[\d,]*\])\s*%?[\w.\-]+", ls.split(opname, 1)[1])
+        op_bytes = sum(_shape_bytes(a) for a in args)
+        if op_bytes == 0:
+            op_bytes = sum(_shape_bytes(s) for s in re.findall(r"\w+\[[\d,]*\]", result_shape))
+        if kind == "all-reduce":
+            wire = int(2 * op_bytes * (n - 1) / max(n, 1))
+        elif kind == "all-gather":
+            wire = op_bytes * (n - 1)
+        elif kind in ("reduce-scatter", "all-to-all"):
+            wire = int(op_bytes * (n - 1) / max(n, 1))
+        else:  # collective-permute
+            wire = op_bytes
+        s = stats[kind]
+        s["count"] += 1
+        s["operand_bytes"] += op_bytes
+        s["wire_bytes"] += wire
+    return dict(stats)
+
+
+def total_wire_bytes(stats: Dict[str, dict]) -> int:
+    return sum(s["wire_bytes"] for s in stats.values())
+
+
+def scan_flops_note(hlo_text: str) -> Dict[str, int]:
+    """Aux diagnostics: count ops that hint at remat/layout waste."""
+    counts = {"transpose": 0, "reshape": 0, "while": 0, "fusion": 0}
+    for line in hlo_text.splitlines():
+        for k in counts:
+            if re.search(rf"=\s*(?:\([^)]*\)|[\w\[\],]+)\s+{k}", line):
+                counts[k] += 1
+    return counts

@@ -1,0 +1,109 @@
+"""Three-term roofline model for TPU v5e (target hardware).
+
+    compute    = HLO_FLOPs_global   / (chips × PEAK_FLOPS)
+    memory     = HLO_bytes_global   / (chips × HBM_BW)
+    collective = wire_bytes_per_dev / LINK_BW
+
+``compiled.cost_analysis()`` reports the *per-device* partitioned
+program, so global = per-device × chips and the chip terms reduce to
+per-device quantities over per-chip peaks.  Collective wire bytes come
+from ``repro.analysis.hlo_stats`` (per-device HLO, already per-chip).
+
+MODEL_FLOPS (analytic "useful" compute) = 6·N·D for training (fwd+bwd)
+and 2·N·D for inference, with N = active parameter count — the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch/padding waste.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link (1 link assumed per stream)
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops_global: float
+    collectives: Dict[str, dict] = field(default_factory=dict)
+    peak_memory_per_device: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def bound_step_time(self) -> float:
+        """Lower bound on step time: max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on model FLOPs utilization implied by the roofline."""
+        t = self.bound_step_time
+        if not t:
+            return 0.0
+        return self.model_flops_global / (self.chips * PEAK_FLOPS * t)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "model_flops_global": self.model_flops_global,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "mfu_bound": self.mfu_bound,
+            "collectives": self.collectives,
+            "peak_memory_per_device": self.peak_memory_per_device,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs per step: 6·N_active·D train, 2·N_active·D/token decode."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpointer import restore, save, latest_step  # noqa: F401

@@ -1,0 +1,71 @@
+"""Minimal dependency-free checkpointing: npz payload + json manifest.
+
+Layout:  <dir>/step_<k>/arrays.npz   (flat leaves, keyed by index)
+         <dir>/step_<k>/manifest.json  (treedef repr, shapes, dtypes, step)
+
+``restore`` takes a template pytree (``like=``) to rebuild structure —
+the standard restore-into-abstract-state pattern.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "num_leaves": len(leaves),
+        "treedef": str(treedef),
+        "shapes": [list(np.shape(x)) for x in leaves],
+        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Any:
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    if manifest["num_leaves"] != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {manifest['num_leaves']} leaves, template has {len(leaves_like)}"
+        )
+    leaves = []
+    for i, tmpl in enumerate(leaves_like):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(np.shape(tmpl)):
+            raise ValueError(
+                f"leaf {i} shape mismatch: ckpt {arr.shape} vs template {np.shape(tmpl)}"
+            )
+        leaves.append(jax.numpy.asarray(arr, dtype=np.asarray(tmpl).dtype if hasattr(tmpl, 'dtype') else arr.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,18 @@
+"""DeepSeek 7B — dense llama-architecture model.
+
+[arXiv:2401.02954] 30L d_model=4096 32H (GQA kv=32, i.e. MHA) d_ff=11008
+vocab=102400.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b",
+    arch_type="dense",
+    num_layers=30,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=11008,
+    vocab_size=102400,
+    source="arXiv:2401.02954",
+)

@@ -1,0 +1,16 @@
+"""Core of the reproduction: the paper's technique and its theory.
+
+- ``triggers``     — eq. (11)/(30)/(31) + generalizations
+- ``aggregation``  — eq. (10) server rule (+ quantized transmission)
+- ``regression``   — faithful §2/§4 linear-regression setup
+- ``theory``       — Thm 1 / Thm 2 closed forms
+- ``api``          — EventTriggeredDataParallel train-step builder
+"""
+from repro.core.api import (  # noqa: F401
+    TrainState,
+    init_train_state,
+    make_plain_train_step,
+    make_triggered_train_step,
+)
+from repro.core.triggers import make_trigger  # noqa: F401
+from repro.core.aggregation import masked_mean, masked_mean_quantized  # noqa: F401

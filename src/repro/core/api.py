@@ -1,0 +1,178 @@
+"""EventTriggeredDataParallel — the paper's technique as a train-step transform.
+
+``make_triggered_train_step`` turns any per-batch loss into a distributed
+train step implementing the paper's full loop:
+
+  1. server broadcast of ``w_k``          → parameter replication /
+                                            FSDP all-gather under pjit
+  2. per-agent stochastic gradients g_k^i → ``vmap(value_and_grad)`` over
+                                            the batch's leading agent axis
+                                            (sharded over mesh data axes,
+                                            so each device group computes
+                                            only its own agent's gradient)
+  3. local trigger decisions α_k^i        → ``repro.core.triggers`` (pure
+                                            local computation, eq. 11/30/31)
+  4. server aggregation, eq. (10)         → masked mean = one all-reduce
+  5. parameter update                     → pluggable optimizer
+
+With ``optimizer="sgd"`` and ``trigger.kind="gain_lookahead"`` this is
+*exactly* the paper's algorithm (the lookahead gain equals eq. (30) for
+quadratic losses); every other combination is a labelled generalization.
+Note eq. (10)'s "hold when silent" is exact under SGD (zero aggregated
+gradient ⇒ zero update); adaptive optimizers still advance their moments.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core.aggregation import (
+    aggregate_stats,
+    masked_mean,
+    masked_mean_quantized,
+    masked_mean_topk,
+)
+from repro.core.triggers import make_trigger
+from repro.sharding.constraint import constrain_params
+from repro.utils.tree import tree_add_scaled, tree_zeros_like
+
+
+METRIC_KEYS = ("loss", "comm_rate", "any_tx", "num_tx", "mean_gain", "grad_norm")
+
+
+def _microbatched(fn, m: int):
+    """Scan ``fn(params, batch) -> scalar`` over ``m`` equal microbatches.
+
+    Gradients of the scanned mean equal the full-batch gradient (the loss
+    is a token mean over equal-sized slices), but the live activation set
+    is 1/m of the batch — the standard fit-in-HBM knob
+    (EXPERIMENTS.md §Perf, qwen3 iter-9)."""
+
+    def scanned(params, batch):
+        mb = jax.tree_util.tree_map(
+            lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch
+        )
+
+        def body(acc, b):
+            return acc + fn(params, b), None
+
+        tot, _ = jax.lax.scan(body, jnp.float32(0.0), mb)
+        return tot / m
+
+    return scanned
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt_state: Any
+    ef_memory: Optional[Any] = None  # error-feedback residuals (A, *param)
+
+
+def init_train_state(params, optimizer, cfg: TrainConfig) -> TrainState:
+    ef = None
+    if (cfg.quantize_grads or cfg.topk_frac > 0) and cfg.error_feedback:
+        ef = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((cfg.num_agents,) + p.shape, p.dtype), params
+        )
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=optimizer.init(params),
+        ef_memory=ef,
+    )
+
+
+def make_triggered_train_step(
+    loss_fn: Callable,
+    optimizer,
+    cfg: TrainConfig,
+    *,
+    aux_loss_fn: Optional[Callable] = None,
+    use_kernel: bool = False,
+):
+    """Build ``train_step(state, batch) -> (state, metrics)``.
+
+    ``loss_fn(params, batch) -> scalar`` is the local empirical loss; the
+    batch pytree's leaves must carry a leading agent axis of size
+    ``cfg.num_agents``.  ``aux_loss_fn`` (e.g. MoE load-balance) is added
+    to the differentiated objective but not to the trigger's gain.
+    """
+    if cfg.microbatches > 1:
+        loss_fn = _microbatched(loss_fn, cfg.microbatches)
+        if aux_loss_fn is not None:
+            aux_loss_fn = _microbatched(aux_loss_fn, cfg.microbatches)
+
+    trigger = make_trigger(
+        cfg.trigger, loss_fn=loss_fn, probe_eps=cfg.lr, use_kernel=use_kernel
+    )
+
+    def objective(params, batch):
+        main = loss_fn(params, batch)
+        if aux_loss_fn is not None:
+            return main + aux_loss_fn(params, batch), main
+        return main, main
+
+    def train_step(state: TrainState, batch):
+        def per_agent(agent_batch):
+            (obj, main), g = jax.value_and_grad(objective, has_aux=True)(
+                state.params, agent_batch
+            )
+            # Per-agent gradient (and probe) trees CANNOT inherit the
+            # FSDP embed@data layout — the agent axis IS the data axis.
+            # Pin them to model-axis (TP-style) sharding so each device
+            # holds params/TP per agent, not a replicated full tree
+            # (EXPERIMENTS.md §Perf, qwen3 iter-6 → iter-7).  No-op when
+            # no gather hook is installed (non-FSDP plans, CPU tests).
+            g = constrain_params(g, "")
+            alpha, gain = trigger(state.params, g, agent_batch, main, state.step)
+            return main, g, alpha, gain
+
+        losses, grads, alphas, gains = jax.vmap(per_agent)(batch)
+
+        if cfg.quantize_grads:
+            agg, new_ef = masked_mean_quantized(grads, alphas, state.ef_memory)
+        elif cfg.topk_frac > 0:
+            agg, new_ef = masked_mean_topk(
+                grads, alphas, cfg.topk_frac, state.ef_memory
+            )
+        else:
+            agg, new_ef = masked_mean(grads, alphas), state.ef_memory
+
+        updates, opt_state = optimizer.update(
+            agg, state.opt_state, state.params, state.step
+        )
+        params = tree_add_scaled(state.params, updates, 1.0)
+        stats = aggregate_stats(alphas, gains)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "comm_rate": stats.comm_rate,
+            "any_tx": stats.any_tx,
+            "num_tx": stats.num_tx,
+            "mean_gain": stats.mean_gain,
+            "grad_norm": jnp.sqrt(
+                sum(
+                    jnp.sum(jnp.square(x.astype(jnp.float32)))
+                    for x in jax.tree_util.tree_leaves(agg)
+                )
+            ),
+        }
+        return (
+            TrainState(state.step + 1, params, opt_state, new_ef),
+            metrics,
+        )
+
+    return train_step
+
+
+def make_plain_train_step(loss_fn, optimizer, cfg: TrainConfig, **kw):
+    """Dense baseline: every agent always transmits (synchronous SGD)."""
+    import dataclasses
+
+    from repro.configs.base import TriggerConfig
+
+    dense_cfg = dataclasses.replace(cfg, trigger=TriggerConfig(kind="always"))
+    return make_triggered_train_step(loss_fn, optimizer, dense_cfg, **kw)

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    batch_iterator,
+    lm_batch,
+    sample_lm_tokens,
+)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: fused cross-entropy over vocab tiles (forward).
+
+The train-shape §Roofline bottleneck after attention: materializing
+(B,S,V) fp32 logits for the softmax-CE.  The jnp fallback
+(``layers.cross_entropy_fused``) already chunks over SEQUENCE; this
+kernel additionally tiles over VOCAB with an online logsumexp, so the
+live logits tile is (BT, BV) in VMEM and full logits never exist in HBM
+at all — the same recurrence flash attention uses for its denominator.
+
+Grid = (token_tiles, vocab_tiles); vocab innermost, so the sequential
+TPU grid carries the running (max m, sumexp l, gold logit) scratch
+across vocab tiles with no HBM round trips.
+
+* logits tile = x_tile (BT, D) @ table_tileᵀ (BV, D) — one MXU matmul,
+  fp32 accumulation, hardware-aligned when BT, BV are 128-multiples.
+* the gold logit is extracted with a one-hot mask inside the tile where
+  ``labels ∈ [j·BV, (j+1)·BV)`` — no gather over the vocab axis.
+* vocab padding is masked by absolute position (``v_total``), so padded
+  table rows contribute nothing to the logsumexp.
+
+Layouts: x (T, D); table (V, D); labels (T, 1) int32; out nll (T, 1) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(x_ref, t_ref, lab_ref, o_ref, m_ref, l_ref, g_ref, *, bv, v_total):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        g_ref[...] = jnp.full_like(g_ref, NEG)
+
+    x = x_ref[...].astype(jnp.float32)               # (BT, D)
+    tbl = t_ref[...].astype(jnp.float32)             # (BV, D)
+    logits = jax.lax.dot_general(
+        x, tbl, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                 # (BT, BV)
+
+    bt = logits.shape[0]
+    v_pos = j * bv + jax.lax.broadcasted_iota(jnp.int32, (bt, bv), 1)
+    valid = v_pos < v_total
+    logits = jnp.where(valid, logits, NEG)
+
+    # online logsumexp
+    m_prev = m_ref[...]                               # (BT, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+    l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(logits - m_new) * valid.astype(jnp.float32), axis=1, keepdims=True
+    )
+    m_ref[...] = m_new
+
+    # gold logit via in-tile one-hot
+    labels = lab_ref[...]                             # (BT, 1) int32
+    hit = v_pos == labels                             # (BT, BV)
+    g_tile = jnp.max(jnp.where(hit, logits, NEG), axis=1, keepdims=True)
+    g_ref[...] = jnp.maximum(g_ref[...], g_tile)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[...] = (
+            jnp.log(jnp.maximum(l_ref[...], 1e-30)) + m_ref[...] - g_ref[...]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bv", "interpret"))
+def fused_ce_kernel(
+    x: jax.Array,       # (T, D)
+    table: jax.Array,   # (V, D)
+    labels: jax.Array,  # (T, 1) int32
+    *,
+    bt: int = 128,
+    bv: int = 512,
+    interpret: bool = True,
+):
+    T, D = x.shape
+    V = table.shape[0]
+    assert T % bt == 0, (T, bt)
+    pad_v = (-V) % bv
+    if pad_v:
+        table = jnp.concatenate(
+            [table, jnp.zeros((pad_v, D), table.dtype)], axis=0
+        )
+    nv = table.shape[0] // bv
+
+    grid = (T // bt, nv)
+    kernel = functools.partial(_kernel, bv=bv, v_total=V)
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, table, labels)

@@ -1,0 +1,1 @@
+from repro.kernels.gain_reduce.ops import gain_reduce  # noqa: F401

@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the gain-reduce Pallas kernel.
+
+Handles arbitrary-length inputs: zero-pads to a (8·128)-tile multiple
+(zeros contribute nothing to either dot product) and reshapes to the
+kernel's (nblk, 8, 128) layout.  ``interpret=True`` on CPU (this box);
+on TPU the same call compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gain_reduce.kernel import BLOCK, LANE, SUBLANE, gain_reduce_kernel
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _tile(x: jax.Array) -> jax.Array:
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, SUBLANE, LANE)
+
+
+def gain_reduce(g: jax.Array, h: jax.Array):
+    """(gᵀg, gᵀh) over flattened inputs, single fused pass."""
+    assert g.size == h.size, (g.shape, h.shape)
+    return gain_reduce_kernel(_tile(g), _tile(h), interpret=not _ON_TPU)
+
+
+def gain_estimate(g: jax.Array, h: jax.Array, eps: float):
+    """Eq. (28): −ε gᵀg + (ε²/2) gᵀ(Hg), fused."""
+    gsq, ghg = gain_reduce(g, h)
+    return -eps * gsq + 0.5 * eps * eps * ghg

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the gain-reduce kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gain_reduce_ref(g, h):
+    """Returns (gᵀg, gᵀh) as f32 scalars over flattened inputs."""
+    gf = g.reshape(-1).astype(jnp.float32)
+    hf = h.reshape(-1).astype(jnp.float32)
+    return jnp.sum(gf * gf), jnp.sum(gf * hf)
+
+
+def gain_estimate_ref(g, h, eps: float):
+    """Eq. (28) given Hg: −ε gᵀg + (ε²/2) gᵀ(Hg)."""
+    gsq, ghg = gain_reduce_ref(g, h)
+    return -eps * gsq + 0.5 * eps * eps * ghg

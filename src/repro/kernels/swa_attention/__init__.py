@@ -1,0 +1,1 @@
+from repro.kernels.swa_attention.ops import swa_attention  # noqa: F401

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: sliding-window flash attention (forward).
+
+Long-context serving/prefill hot spot (Mixtral SWA; dense archs' SWA
+variant for ``long_500k``).  TPU-native design (DESIGN.md §3):
+
+* grid = (batch, q_heads, q_blocks, kv_blocks_per_window) — the last
+  axis is innermost, so on TPU's sequential grid the VMEM scratch
+  (running max ``m``, denominator ``l``, output accumulator ``acc``)
+  implements the online-softmax recurrence across the window's kv
+  blocks with no HBM round trips.
+* Each q block of size BQ only ever touches ``W/BK + 1`` kv blocks —
+  compute is O(S·W), not O(S²); the BlockSpec index map clamps the
+  leading edge and the kernel masks out-of-window / clamped duplicate
+  blocks explicitly.
+* GQA is free: the k/v index maps divide the head index by the group
+  size, so kv tiles are fetched once per group without materializing
+  the head-repeated K/V in HBM.
+* BQ = BK = 128 keeps the (BQ, BK) score tile and (BK, hd) value tile
+  MXU-shaped; fp32 accumulation, bf16/fp32 inputs.
+
+Layouts: q (B, H, S, hd); k/v (B, KV, S, hd); out (B, H, S, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, window, bq, bk, nkv):
+    iq = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # intended kv block for this (iq, j); negative ⇒ before the sequence
+    intended = iq - (nkv - 1) + j
+
+    @pl.when(intended >= 0)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (BQ, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (BK, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                     # (BQ, BK)
+
+        q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = intended * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_ref[...]                           # (BQ, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new) * mask.astype(jnp.float32)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == nkv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "bq", "bk", "interpret")
+)
+def swa_attention_kernel(
+    q: jax.Array,  # (B, H, S, hd)
+    k: jax.Array,  # (B, KV, S, hd)
+    v: jax.Array,
+    *,
+    window: int,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+):
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq = S // bq
+    nkv = -(-window // bk) + 1  # kv blocks covering (q_pos - W, q_pos]
+
+    grid = (B, H, nq, nkv)
+    q_spec = pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, j: (b, h, iq, 0))
+
+    def kv_index(b, h, iq, j):
+        intended = iq - (nkv - 1) + j
+        return (b, h // rep, jnp.maximum(intended, 0), 0)
+
+    kv_spec = pl.BlockSpec((1, 1, bk, hd), kv_index)
+    out_spec = pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, j: (b, h, iq, 0))
+
+    kernel = functools.partial(_kernel, window=window, bq=bq, bk=bk, nkv=nkv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=_scratch(bq, hd),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(bq, hd):
+    """VMEM fp32 accumulators: running max m, denominator l, output acc."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return [
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, hd), jnp.float32),
+    ]

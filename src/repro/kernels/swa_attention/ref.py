@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for sliding-window attention (model layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def swa_attention_ref(q, k, v, *, window: int):
+    """q (B,S,H,hd); k/v (B,S,KV,hd) -> (B,S,H,hd).
+
+    Causal attention restricted to positions (t − window, t].
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, rep, hd)).reshape(b, s, h, hd)
+    v = jnp.broadcast_to(v[:, :, :, None, :], (b, s, kv, rep, hd)).reshape(b, s, h, hd)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = (kp <= qp) & (kp > qp - window)
+    scores = jnp.where(mask[None, None], scores, NEG)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqs,bshk->bqhk", w, v).astype(q.dtype)

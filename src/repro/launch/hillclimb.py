@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: lower ONE (arch × shape) with explicit knob
+settings and print the three roofline terms + collective breakdown +
+top HBM contributors, so each hypothesis→change→measure iteration is a
+single command.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch qwen3-32b \
+      --shape train_4k --remat --flash 512 [--inner-batch] [--seq-shard] \
+      [--no-fsdp] [--optimizer sgd] [--trigger gain_lookahead]
+"""
+import argparse
+import json
+from collections import defaultdict
+from pathlib import Path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--flash", type=int, default=None, help="attn q-block size")
+    ap.add_argument("--inner-batch", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--cache-seq-shard", action="store_true")
+    ap.add_argument("--fsdp", default=None, choices=["on", "off"])
+    ap.add_argument("--trigger", default="gain_lookahead")
+    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--dtype", default="bfloat16")
+    ap.add_argument("--top", type=int, default=8, help="top HBM contributors")
+    ap.add_argument("--save", default=None, help="record JSON under this tag")
+    args = ap.parse_args()
+
+    import jax  # after XLA_FLAGS
+
+    from repro.analysis import hlo_cost as H
+    from repro.analysis.roofline import Roofline, model_flops
+    from repro.configs import SHAPES, get_config
+    from repro.configs.base import TriggerConfig
+    from repro.launch import steps as S
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    fsdp = None if args.fsdp is None else args.fsdp == "on"
+    plan = S.plan_run(
+        cfg, shape, mesh,
+        trigger=TriggerConfig(kind=args.trigger),
+        optimizer=args.optimizer, fsdp=fsdp,
+        remat=args.remat, attn_q_block=args.flash,
+        inner_batch_shard=args.inner_batch, seq_shard=args.seq_shard,
+        cache_seq_shard=args.cache_seq_shard,
+        microbatches=args.microbatches,
+    )
+    lowered = S.lower_for(mesh, plan, compute_dtype=args.dtype)
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    txt = compiled.as_text()
+    cost = H.analyze(txt)
+    chips = int(mesh.devices.size)
+    roof = Roofline(
+        arch=args.arch, shape=args.shape,
+        mesh="pod2" if args.multi_pod else "pod1", chips=chips,
+        flops_per_device=cost.flops, bytes_per_device=cost.hbm_bytes,
+        wire_bytes_per_device=cost.wire_bytes,
+        model_flops_global=model_flops(plan.cfg, shape),
+        collectives=cost.collectives,
+        peak_memory_per_device=float(
+            ma.temp_size_in_bytes + ma.argument_size_in_bytes + ma.output_size_in_bytes
+        ),
+    )
+    knobs = dict(remat=args.remat, flash=args.flash, inner_batch=args.inner_batch,
+                 seq_shard=args.seq_shard, fsdp=plan.fsdp, trigger=args.trigger,
+                 optimizer=args.optimizer, microbatches=args.microbatches,
+                 cache_seq_shard=args.cache_seq_shard)
+    print(f"=== {args.arch} × {args.shape} ({roof.mesh}) knobs={knobs}")
+    print(f"mem/dev      {roof.peak_memory_per_device/1e9:10.2f} GB "
+          f"(v5e HBM = 16 GB {'OK' if roof.peak_memory_per_device < 16e9 else 'OVER'})")
+    print(f"t_compute    {roof.t_compute:10.4f} s")
+    print(f"t_memory     {roof.t_memory:10.4f} s")
+    print(f"t_collective {roof.t_collective:10.4f} s   -> bottleneck: {roof.bottleneck}")
+    print(f"useful_flops {roof.useful_flop_ratio:10.3f}   MFU bound: {roof.mfu_bound:.4f}")
+    print("collectives:")
+    for kind, v in sorted(cost.collectives.items()):
+        print(f"  {kind:20s} count={v['count']:6.0f} wire={v['wire_bytes']/1e9:9.3f} GB")
+
+    # top HBM contributors (computation, op) with trip multiplication
+    comps, entry = H.parse_module(txt)
+    fusedset = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                m = H._CALLS_RE.search(ins.attrs)
+                if m:
+                    fusedset.add(m.group(1))
+    contrib = defaultdict(float)
+
+    def walk(name, mult):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        isf = name in fusedset or name.startswith("fused_")
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                b = H._BODY_RE.search(ins.attrs)
+                t = H._TRIP_RE.search(ins.attrs)
+                trip = int(t.group(1)) if t else 1
+                if b:
+                    walk(b.group(1), mult * trip)
+                continue
+            if op == "fusion":
+                by = H._fusion_operand_bytes(ins, comp, comps) + H._fusion_output_bytes(
+                    ins, comps
+                )
+                contrib[(name[:36], ins.name.split(".")[0])] += mult * by
+                continue
+            if op in ("call", "async-start"):
+                m = H._CALLS_RE.search(ins.attrs)
+                if m:
+                    walk(m.group(1), mult)
+                continue
+            if op in H._FREE_OPS or isf:
+                continue
+            if op in H._SLICERS:
+                by = 2 * H._shape_bytes(ins.shape)
+            elif op == "dynamic-update-slice" and len(ins.operands) >= 2:
+                upd = comp.by_name.get(ins.operands[1])
+                by = 2 * (H._shape_bytes(upd.shape) if upd else H._shape_bytes(ins.shape))
+            else:
+                by = H._operand_bytes(ins, comp) + H._shape_bytes(ins.shape)
+            contrib[(name[:36], ins.name.split(".")[0])] += mult * by
+
+    walk(entry, 1.0)
+    print(f"top-{args.top} HBM contributors:")
+    for (cname, iname), v in sorted(contrib.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"  {v/1e9:10.1f} GB  {cname:36s} {iname}")
+
+    if args.save:
+        out = Path("experiments/hillclimb")
+        out.mkdir(parents=True, exist_ok=True)
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": roof.mesh,
+               "knobs": knobs, "roofline": roof.to_dict(),
+               "mem_per_dev": roof.peak_memory_per_device}
+        (out / f"{args.arch}_{args.shape}_{args.save}.json").write_text(
+            json.dumps(rec, indent=2))
+        print(f"saved -> experiments/hillclimb/{args.arch}_{args.shape}_{args.save}.json")
+
+
+if __name__ == "__main__":
+    main()

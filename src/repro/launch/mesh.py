@@ -1,0 +1,24 @@
+"""Production mesh definitions (TPU v5e pods).
+
+``make_production_mesh`` is a FUNCTION (not module state) so importing
+this module never touches jax device initialization — only the dry-run
+process sets ``--xla_force_host_platform_device_count=512``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the locally available devices (tests/examples)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))

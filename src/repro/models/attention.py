@@ -1,0 +1,228 @@
+"""Attention: GQA with RoPE, optional QK-norm and sliding windows.
+
+Three execution paths:
+
+* ``attend``            — direct masked einsum (S ≤ BLOCKWISE_THRESHOLD)
+* ``attend_blockwise``  — lax.scan over query blocks with a bounded score
+                          tile (pure-JAX flash-style; keeps the 32k-prefill
+                          working set out of trouble).  Same math, checked
+                          against ``attend`` in tests.  The Pallas TPU
+                          kernel for the sliding-window case lives in
+                          ``repro.kernels.swa_attention`` (this module is
+                          its lowering-friendly fallback).
+* ``decode_attend``     — one new token against a KV cache (ring buffer
+                          for sliding windows, linear in window size).
+
+Layout convention: activations (B, S, D); q (B, S, H, hd); k/v
+(B, S, KV, hd); caches (B, C, KV, hd).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rms_norm
+
+BLOCKWISE_THRESHOLD = 8192
+Q_BLOCK = 1024
+
+NEG_INF = -1e30
+
+
+def build_attention(scope, cfg):
+    hd = cfg.head_dim_
+    scope.param("wq", (cfg.d_model, cfg.num_heads, hd), ("embed", "heads", None))
+    scope.param("wk", (cfg.d_model, cfg.num_kv_heads, hd), ("embed", "kv_heads", None))
+    scope.param("wv", (cfg.d_model, cfg.num_kv_heads, hd), ("embed", "kv_heads", None))
+    scope.param("wo", (cfg.num_heads, hd, cfg.d_model), ("heads", None, "embed"))
+    if cfg.qk_norm:
+        scope.param("q_norm", (hd,), (None,), init="ones")
+        scope.param("k_norm", (hd,), (None,), init="ones")
+
+
+def qkv(p, cfg, x, positions, *, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k, num_heads):
+    """GQA: (B,S,KV,hd) -> (B,S,H,hd) by repeating each kv head."""
+    b, s, kv, hd = k.shape
+    rep = num_heads // kv
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, rep, hd)).reshape(
+        b, s, num_heads, hd
+    )
+
+
+def _mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(Q, K) additive mask from absolute positions."""
+    m = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    if causal:
+        m = jnp.where(k_pos[None, :] > q_pos[:, None], NEG_INF, m)
+    if window is not None:
+        m = jnp.where(k_pos[None, :] <= q_pos[:, None] - window, NEG_INF, m)
+    return m
+
+
+def attend(q, k, v, *, causal=True, window=None, q_offset=0):
+    """Direct attention. q (B,Sq,H,hd); k/v (B,Sk,KV,hd)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    k, v = _expand_kv(k, h), _expand_kv(v, h)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(sk)
+    scores = scores + _mask(q_pos, k_pos, causal, window)[None, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+
+def attend_blockwise(q, k, v, *, causal=True, window=None, q_block=Q_BLOCK):
+    """Same math as ``attend``; scans query blocks to bound the score tile.
+
+    Each block attends the full prefix (or its sliding window), so peak
+    score memory is (B,H,q_block,Sk) instead of (B,H,Sq,Sk).  The block
+    body is ``jax.checkpoint``ed so the backward pass rematerializes the
+    per-block softmax instead of saving nblk tiles.
+    """
+    b, sq, h, hd = q.shape
+    if sq % q_block:
+        q_block = sq  # fall back for ragged sizes
+    nblk = sq // q_block
+    k_, v_ = _expand_kv(k, h), _expand_kv(v, h)
+    k_pos = jnp.arange(k.shape[1])
+
+    qb = q.reshape(b, nblk, q_block, h, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def block(i, qi, k_, v_):
+        q_pos = i * q_block + jnp.arange(q_block)
+        scores = jnp.einsum("bqhk,bshk->bhqs", qi, k_).astype(jnp.float32)
+        scores = scores / jnp.sqrt(jnp.float32(hd))
+        m = jnp.zeros_like(scores)
+        if causal:
+            m = jnp.where(k_pos[None, None, None, :] > q_pos[None, None, :, None], NEG_INF, m)
+        if window is not None:
+            m = jnp.where(
+                k_pos[None, None, None, :] <= q_pos[None, None, :, None] - window,
+                NEG_INF,
+                m,
+            )
+        w = jax.nn.softmax(scores + m, axis=-1).astype(qi.dtype)
+        return jnp.einsum("bhqs,bshk->bqhk", w, v_)
+
+    def body(_, args):
+        i, qi = args
+        return None, block(i, qi, k_, v_)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(nblk), qb))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def attention(q, k, v, *, causal=True, window=None, q_block=None):
+    if q_block is not None and q.shape[1] > q_block:
+        return attend_blockwise(q, k, v, causal=causal, window=window, q_block=q_block)
+    if q.shape[1] > BLOCKWISE_THRESHOLD:
+        return attend_blockwise(q, k, v, causal=causal, window=window)
+    return attend(q, k, v, causal=causal, window=window)
+
+
+# ----------------------------------------------------------------------
+# Decode path (KV cache)
+# ----------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Per-layer cache. ``k``/``v``: (B, C, KV, hd) where C = cache_len
+    (= window size for SWA ring buffers). ``pos_ids``: (C,) absolute
+    position stored in each slot, −1 when empty (rope is pre-applied to
+    cached keys, so slots need no rotation at read time)."""
+
+    k: jax.Array
+    v: jax.Array
+    pos_ids: jax.Array
+
+
+def init_kv_cache(batch: int, cache_len: int, kv_heads: int, head_dim: int, dtype):
+    z = jnp.zeros((batch, cache_len, kv_heads, head_dim), dtype)
+    return KVCache(k=z, v=z, pos_ids=jnp.full((cache_len,), -1, jnp.int32))
+
+
+def abstract_kv_cache(batch, cache_len, kv_heads, head_dim, dtype):
+    sh = jax.ShapeDtypeStruct((batch, cache_len, kv_heads, head_dim), dtype)
+    return KVCache(k=sh, v=sh, pos_ids=jax.ShapeDtypeStruct((cache_len,), jnp.int32))
+
+
+def kv_cache_axes():
+    kv = ("batch", "cache_seq", "kv_heads", None)
+    return KVCache(k=kv, v=kv, pos_ids=("cache_seq",))
+
+
+def decode_attend(p, cfg, x, cache: KVCache, pos):
+    """One-token attention against the cache.
+
+    x: (B, 1, D); pos: scalar int32 absolute position of the new token.
+    Returns (out (B,1,H,hd), new_cache).
+    """
+    q, k_new, v_new = qkv(p, cfg, x, jnp.full((x.shape[0], 1), pos), rope=True)
+    C = cache.k.shape[1]
+    if cfg.swa_window is not None:
+        slot = pos % C  # ring buffer: cache holds only the window
+    else:
+        slot = jnp.minimum(pos, C - 1)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+    pos_ids = jax.lax.dynamic_update_slice(cache.pos_ids, pos[None].astype(jnp.int32), (slot,))
+
+    from repro.sharding.constraint import constrain_act
+
+    h = cfg.num_heads
+    kv_heads = cfg.num_kv_heads
+    rep = h // kv_heads
+    # GQA-native grouped attention: never materialize the rep-expanded
+    # K/V (that would read rep× the cache per step).  Layouts pinned:
+    # cache stays cache_seq-sharded (flash-decoding style), the head dim
+    # follows the plan's decode_heads rule — stops XLA from
+    # all-gathering the cache to re-shard heads (kimi §Perf iter-4/5/7).
+    b = q.shape[0]
+    qg = q.reshape(b, 1, kv_heads, rep, cfg.head_dim_)
+    qg = constrain_act(qg, ("batch", None, "decode_heads", None, None))
+    k = constrain_act(k, ("batch", "cache_seq", "decode_heads", None))
+    v = constrain_act(v, ("batch", "cache_seq", "decode_heads", None))
+    scores = jnp.einsum("bqgrd,bsgd->bgrqs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(cfg.head_dim_))
+    valid = (pos_ids >= 0) & (pos_ids <= pos)
+    if cfg.swa_window is not None:
+        valid &= pos_ids > pos - cfg.swa_window
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqs,bsgd->bqgrd", w, v).reshape(b, 1, h, cfg.head_dim_)
+    return out, KVCache(k=k, v=v, pos_ids=pos_ids)
+
+
+def prefill_into_cache(p, cfg, k, v, cache_len: int):
+    """Build a cache from prefill K/V (B,S,KV,hd); keeps the last
+    ``cache_len`` positions (all of them when S ≤ cache_len)."""
+    b, s, kv, hd = k.shape
+    if s >= cache_len:
+        k_c, v_c = k[:, s - cache_len :], v[:, s - cache_len :]
+        pos_ids = jnp.arange(s - cache_len, s, dtype=jnp.int32)
+    else:
+        pad = cache_len - s
+        zk = jnp.zeros((b, pad, kv, hd), k.dtype)
+        k_c = jnp.concatenate([k, zk], axis=1)
+        v_c = jnp.concatenate([v, zk], axis=1)
+        pos_ids = jnp.concatenate(
+            [jnp.arange(s, dtype=jnp.int32), jnp.full((pad,), -1, jnp.int32)]
+        )
+    return KVCache(k=k_c, v=v_c, pos_ids=pos_ids)

@@ -1,0 +1,330 @@
+"""Serving path: KV/state caches, one-token decode steps, prefill.
+
+``decode_step`` consumes ONE new token against a cache of ``cache_len``
+past positions — this is what the ``decode_32k`` / ``long_500k`` shapes
+lower.  Cache choices per family (DESIGN.md §5):
+
+* dense/moe/vlm — per-layer KV cache; ring buffer of ``swa_window``
+  slots when sliding-window attention is on (bounded state for
+  ``long_500k``), else ``cache_len`` slots.
+* hybrid (zamba2) — Mamba2 (conv, ssm) states per layer + one KV cache
+  per shared-attention application site.
+* ssm (xlstm) — mLSTM matrix memory + sLSTM scalar states per pair
+  (O(1) in context length — the whole point).
+* audio (whisper) — decoder self-attn cache (≤448 slots, architectural
+  cap) + cross-attention K/V computed once from the encoder output
+  (``cache_len`` = encoder frames).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.layers import embed, rms_norm, unembed
+from repro.models.transformer import (
+    _attn_out,
+    _ff,
+    _group_bounds,
+    forward,
+)
+from repro.sharding.constraint import constrain_params
+
+
+def _effective_cache_len(cfg: ModelConfig, cache_len: int) -> int:
+    if cfg.swa_window is not None:
+        return min(cache_len, cfg.swa_window)
+    return cache_len
+
+
+def _stacked_kv(n: int, batch: int, C: int, cfg, dtype, abstract: bool):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim_
+    if abstract:
+        sh = jax.ShapeDtypeStruct((n, batch, C, kv, hd), dtype)
+        pos = jax.ShapeDtypeStruct((n, C), jnp.int32)
+        return A.KVCache(k=sh, v=sh, pos_ids=pos)
+    z = jnp.zeros((n, batch, C, kv, hd), dtype)
+    return A.KVCache(k=z, v=z, pos_ids=jnp.full((n, C), -1, jnp.int32))
+
+
+def _stacked_kv_axes():
+    base = A.kv_cache_axes()
+    return A.KVCache(
+        k=("layer",) + base.k, v=("layer",) + base.v, pos_ids=("layer",) + base.pos_ids
+    )
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    cache_len: int,
+    *,
+    abstract: bool = False,
+    dtype=None,
+) -> Tuple[Any, Any]:
+    """Returns (cache, logical_axes) for one-token decoding."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        C = _effective_cache_len(cfg, cache_len)
+        return (
+            _stacked_kv(cfg.num_layers, batch, C, cfg, dtype, abstract),
+            _stacked_kv_axes(),
+        )
+
+    if cfg.arch_type == "hybrid":
+        n_sites = len(_group_bounds(cfg.num_layers, cfg.shared_attn_every))
+        mk = SSM.abstract_mamba_state if abstract else SSM.init_mamba_state
+        one = mk(cfg, batch, dtype)
+        if abstract:
+            mamba = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((cfg.num_layers,) + s.shape, s.dtype), one
+            )
+        else:
+            mamba = jax.tree_util.tree_map(
+                lambda s: jnp.broadcast_to(s[None], (cfg.num_layers,) + s.shape), one
+            )
+        base_ax = SSM.mamba_state_axes()
+        mamba_ax = jax.tree_util.tree_map(
+            lambda a: ("layer",) + a, base_ax,
+            is_leaf=lambda x: isinstance(x, tuple) and not hasattr(x, "_fields"),
+        )
+        attn_cache = _stacked_kv(n_sites, batch, cache_len, cfg, dtype, abstract)
+        return (
+            {"mamba": mamba, "attn": attn_cache},
+            {"mamba": mamba_ax, "attn": _stacked_kv_axes()},
+        )
+
+    if cfg.arch_type == "ssm":
+        pairs = cfg.num_layers // 2
+        inner = int(cfg.d_model * cfg.xlstm.mlstm_proj_factor)
+        hd = inner // cfg.num_heads
+        if abstract:
+            m = XL.MLSTMState(
+                C=jax.ShapeDtypeStruct((pairs, batch, cfg.num_heads, hd, hd), jnp.float32),
+                n=jax.ShapeDtypeStruct((pairs, batch, cfg.num_heads, hd), jnp.float32),
+            )
+            z = jax.ShapeDtypeStruct((pairs, batch, cfg.d_model), jnp.float32)
+            s = XL.SLSTMState(c=z, n=z, m=z, h=z)
+        else:
+            m = XL.MLSTMState(
+                C=jnp.zeros((pairs, batch, cfg.num_heads, hd, hd), jnp.float32),
+                n=jnp.zeros((pairs, batch, cfg.num_heads, hd), jnp.float32),
+            )
+            z = jnp.zeros((pairs, batch, cfg.d_model), jnp.float32)
+            s = XL.SLSTMState(c=z, n=z, m=z - 20.0, h=z)
+        axes = {
+            "mlstm": XL.MLSTMState(
+                C=("layer", "batch", "heads", None, None),
+                n=("layer", "batch", "heads", None),
+            ),
+            "slstm": XL.SLSTMState(*([("layer", "batch", "embed")] * 4)),
+        }
+        return {"mlstm": m, "slstm": s}, axes
+
+    if cfg.arch_type == "audio":
+        from repro.configs.whisper_medium import DECODER_LEN
+
+        self_cache = _stacked_kv(cfg.num_layers, batch, DECODER_LEN, cfg, dtype, abstract)
+        kv, hd = cfg.num_kv_heads, cfg.head_dim_
+        shape = (cfg.num_layers, batch, cache_len, kv, hd)
+        cross = (
+            jax.ShapeDtypeStruct(shape, dtype)
+            if abstract
+            else jnp.zeros(shape, dtype)
+        )
+        ax = ("layer", "batch", "cache_seq", "kv_heads", None)
+        return (
+            {"self": self_cache, "cross_k": cross, "cross_v": cross},
+            {"self": _stacked_kv_axes(), "cross_k": ax, "cross_v": ax},
+        )
+
+    raise ValueError(cfg.arch_type)
+
+
+# ======================================================================
+# decode_step
+# ======================================================================
+
+def _attn_block_decode(lp, cfg, x, cache_l, pos):
+    h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+    o, cache_l = A.decode_attend(lp["attn"], cfg, h, cache_l, pos)
+    x = x + _attn_out(lp["attn"], o)
+    ff, _ = _ff(lp, cfg, x)
+    return x + ff, cache_l
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens (B, 1) int32; pos scalar int32. Returns (logits (B,1,V), cache)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = embed(params["embedding"], tokens, dtype)
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        def body(h, inp):
+            lp, cl = inp
+            h, cl = _attn_block_decode(constrain_params(lp, "blocks"), cfg, h, cl, pos)
+            return h, cl
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+    elif cfg.arch_type == "hybrid":
+        shared = params["shared_attn"]
+        bounds = _group_bounds(cfg.num_layers, cfg.shared_attn_every)
+        new_mamba, attn_caches = [], []
+        for gi, (s, e) in enumerate(bounds):
+            grp = jax.tree_util.tree_map(lambda t: t[s:e], params["blocks"])
+            grp_state = jax.tree_util.tree_map(lambda t: t[s:e], cache["mamba"])
+            def body(h, inp):
+                lp, st = inp
+                y, st = SSM.mamba2_decode_step(
+                    lp["mamba"], cfg, rms_norm(h, lp["ln"], cfg.norm_eps), st
+                )
+                return h + y, st
+            x, st_new = jax.lax.scan(body, x, (grp, grp_state))
+            new_mamba.append(st_new)
+            cl = jax.tree_util.tree_map(lambda t: t[gi], cache["attn"])
+            h = rms_norm(x, shared["ln_attn"], cfg.norm_eps)
+            o, cl = A.decode_attend(shared["attn"], cfg, h, cl, pos)
+            x = x + _attn_out(shared["attn"], o)
+            ff, _ = _ff(shared, cfg, x)
+            x = x + ff
+            attn_caches.append(cl)
+        new_cache = {
+            "mamba": jax.tree_util.tree_map(
+                lambda *ts: jnp.concatenate(ts, axis=0), *new_mamba
+            ),
+            "attn": jax.tree_util.tree_map(
+                lambda *ts: jnp.stack(ts, axis=0), *attn_caches
+            ),
+        }
+
+    elif cfg.arch_type == "ssm":
+        def body(h, inp):
+            lp, mst, sst = inp
+            y, mst = XL.mlstm_decode_step(
+                lp["mlstm"], cfg, rms_norm(h, lp["ln_m"], cfg.norm_eps), mst
+            )
+            h = h + y
+            y, sst = XL.slstm_decode_step(
+                lp["slstm"], cfg, rms_norm(h, lp["ln_s"], cfg.norm_eps), sst
+            )
+            h = h + y
+            h = h + XL.slstm_block_mlp(lp["slstm"], cfg, h)
+            return h, (mst, sst)
+        x, (m_new, s_new) = jax.lax.scan(
+            body, x, (params["pairs"], cache["mlstm"], cache["slstm"])
+        )
+        new_cache = {"mlstm": m_new, "slstm": s_new}
+
+    elif cfg.arch_type == "audio":
+        x = x + params["dec_pos"][pos].astype(dtype)[None, None]
+        def body(h, inp):
+            lp, cl, ck, cv = inp
+            hn = rms_norm(h, lp["ln_attn"], cfg.norm_eps)
+            o, cl = A.decode_attend(lp["attn"], cfg, hn, cl, pos)
+            h = h + _attn_out(lp["attn"], o)
+            hn = rms_norm(h, lp["ln_cross"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", hn, lp["cross"]["wq"].astype(dtype))
+            o = A.attend(q, ck, cv, causal=False)
+            h = h + _attn_out(lp["cross"], o)
+            ff, _ = _ff(lp, cfg, h, gelu=True)
+            return h + ff, cl
+        x, self_new = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["self"], cache["cross_k"], cache["cross_v"])
+        )
+        new_cache = {**cache, "self": self_new}
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    from repro.models.transformer import output_table
+
+    return unembed(output_table(cfg, params), x), new_cache
+
+
+# ======================================================================
+# prefill
+# ======================================================================
+
+def prefill(cfg: ModelConfig, params, batch, cache_len: int):
+    """Run the prompt, return (logits, cache ready for decode_step).
+
+    Attention families capture K/V during a blockwise pass; recurrent
+    families (ssm/hybrid) replay the prompt through ``decode_step`` —
+    their state is O(1) so this is the canonical recurrent prefill.
+    """
+    dtype = jnp.dtype(cfg.compute_dtype)
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        tokens = batch["tokens"]
+        x = embed(params["embedding"], tokens, dtype)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        C = _effective_cache_len(cfg, cache_len)
+
+        def body(carry, lp):
+            h = carry
+            lp = constrain_params(lp, "blocks")  # ZeRO-3 gather-at-use
+            hn = rms_norm(h, lp["ln_attn"], cfg.norm_eps)
+            q, k, v = A.qkv(lp["attn"], cfg, hn, positions)
+            o = A.attention(q, k, v, causal=True, window=cfg.swa_window)
+            h = h + _attn_out(lp["attn"], o)
+            ff, _ = _ff(lp, cfg, h)
+            cache_l = A.prefill_into_cache(lp["attn"], cfg, k, v, C)
+            return h + ff, cache_l
+
+        x, cache = jax.lax.scan(body, x, params["blocks"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        from repro.models.transformer import output_table
+
+        return unembed(output_table(cfg, params), x), cache
+
+    if cfg.arch_type == "audio":
+        # encode once, precompute per-layer cross K/V
+        from repro.models.transformer import whisper_encode
+
+        enc = whisper_encode(cfg, params, batch)
+
+        def kv(lp):
+            k = jnp.einsum("bsd,dhk->bshk", enc, lp["cross"]["wk"].astype(dtype))
+            v = jnp.einsum("bsd,dhk->bshk", enc, lp["cross"]["wv"].astype(dtype))
+            return k, v
+
+        ks, vs = _map_layers_kv(params["dec_blocks"], kv)
+        cache, _ = init_cache(cfg, enc.shape[0], enc.shape[1], dtype=dtype)
+        cache["cross_k"], cache["cross_v"] = ks, vs
+        return None, cache
+
+    if cfg.arch_type in ("ssm", "hybrid"):
+        # recurrent prefill: replay the prompt through decode_step (state
+        # is O(1), so this is the canonical linear-time prefill)
+        cache, _ = init_cache(cfg, batch["tokens"].shape[0], cache_len, dtype=dtype)
+        toks = batch["tokens"].T  # (S, B)
+        poss = jnp.arange(toks.shape[0])
+        init_logits = jnp.zeros((toks.shape[1], 1, cfg.vocab_size), jnp.float32)
+
+        def body(carry, inp):
+            cache_c, _ = carry
+            tok, pos = inp
+            logits, cache_c = decode_step(cfg, params, cache_c, tok[:, None], pos)
+            return (cache_c, logits), None
+
+        (cache, last_logits), _ = jax.lax.scan(body, (cache, init_logits), (toks, poss))
+        return last_logits, cache
+
+    raise ValueError(cfg.arch_type)
+
+
+def _map_layers_kv(stacked_params, fn):
+    """Apply fn to each layer slice of a stacked param tree, restack."""
+    L = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+    ks, vs = [], []
+    for i in range(L):
+        lp = jax.tree_util.tree_map(lambda t: t[i], stacked_params)
+        k, v = fn(lp)
+        ks.append(k)
+        vs.append(v)
+    return jnp.stack(ks), jnp.stack(vs)

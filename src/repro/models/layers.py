@@ -1,0 +1,159 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, embeddings, losses.
+
+All functions are pure; parameters come in as pytrees built by
+``repro.models.param.Scope``.  Logical sharding axes are declared at
+parameter-creation sites (see ``repro.sharding.rules`` for the axis
+vocabulary).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def build_rms_norm(scope, name: str, dim: int, axis: str = "embed"):
+    return scope.param(name, (dim,), (axis,), init="ones")
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int, dtype=jnp.float32):
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        jnp.arange(0, dim, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / dim)
+    )
+    pe = jnp.zeros((seq_len, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+
+def build_swiglu(scope, d_model: int, d_ff: int):
+    scope.param("w_gate", (d_model, d_ff), ("embed", "ff"))
+    scope.param("w_up", (d_model, d_ff), ("embed", "ff"))
+    scope.param("w_down", (d_ff, d_model), ("ff", "embed"))
+
+
+def swiglu(p, x):
+    gate = jax.nn.silu(x @ p["w_gate"])
+    return (gate * (x @ p["w_up"])) @ p["w_down"]
+
+
+def build_gelu_mlp(scope, d_model: int, d_ff: int):
+    scope.param("w_in", (d_model, d_ff), ("embed", "ff"))
+    scope.param("b_in", (d_ff,), ("ff",), init="zeros")
+    scope.param("w_out", (d_ff, d_model), ("ff", "embed"))
+    scope.param("b_out", (d_model,), ("embed",), init="zeros")
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"])
+    return h @ p["w_out"] + p["b_out"]
+
+
+# ----------------------------------------------------------------------
+# Embeddings / head / loss
+# ----------------------------------------------------------------------
+
+def build_embedding(scope, vocab: int, d_model: int, name: str = "embedding"):
+    return scope.param(name, (vocab, d_model), ("vocab", "embed"), scale=0.02)
+
+
+def embed(table, tokens, dtype):
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def unembed(table, x):
+    """logits = x @ tableᵀ; fp32 for a stable softmax."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32)
+    )
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token-level CE.  logits (..., V) fp32, labels (...) int."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def cross_entropy_fused(table, x, labels, mask=None, chunk: int = 512):
+    """Mean token CE from hidden states, never materializing (B,S,V).
+
+    ``lax.scan`` over sequence chunks; each chunk computes its fp32
+    logits tile (B, chunk, V), reduces to (logsumexp − gold), and the
+    tile is rematerialized in the backward pass (``jax.checkpoint``), so
+    peak live logits are (B, chunk, V) instead of (B, S, V).  This is
+    the production-LLM loss layout (vocab dims of the tile still shard
+    over the model axis under pjit).
+    """
+    B, S, D = x.shape
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+    xs = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    ys = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    ms = (
+        mask.reshape(B, nc, chunk).transpose(1, 0, 2).astype(jnp.float32)
+        if mask is not None
+        else None
+    )
+
+    @jax.checkpoint
+    def chunk_nll(x_c, y_c, m_c):
+        logits = jnp.einsum(
+            "btd,vd->btv", x_c.astype(jnp.float32), table.astype(jnp.float32)
+        )
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        nll = logz - gold
+        if m_c is None:
+            return jnp.sum(nll), jnp.float32(nll.size)
+        return jnp.sum(nll * m_c), jnp.sum(m_c)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        if ms is None:
+            x_c, y_c = inp
+            s, c = chunk_nll(x_c, y_c, None)
+        else:
+            x_c, y_c, m_c = inp
+            s, c = chunk_nll(x_c, y_c, m_c)
+        return (tot + s, cnt + c), None
+
+    inps = (xs, ys) if ms is None else (xs, ys, ms)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), inps)
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts with sort-based, fixed-capacity dispatch.
+
+Design targets (TPU-native, roofline-honest):
+
+* Expert compute is a single batched einsum over an ``(E, cap, D)``
+  buffer — MXU-friendly, and its FLOPs equal the *active* expert FLOPs
+  (× capacity factor), not the dense all-experts product.  A one-hot
+  dispatch-einsum formulation would bill O(T·E·cap·D) fake FLOPs, which
+  would poison the roofline table (DESIGN.md §4).
+* Token→buffer routing is pure data movement: argsort by expert id,
+  position-in-expert via a segment offset, capacity overflow dropped
+  (``mode="drop"`` scatters, standard Switch-style).
+* The expert axis carries logical name ``"expert"`` → sharded over the
+  ``model`` mesh axis when divisible (kimi-k2: 384/16 = 24 experts per
+  chip; mixtral's 8 experts fall back to ff-sharding automatically via
+  the rules' divisibility guard).
+
+Router aux loss is the Switch load-balance loss
+``E · Σ_e f_e · p̄_e`` returned alongside the output.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def build_moe(scope, cfg):
+    moe = cfg.moe
+    d = cfg.d_model
+    scope.param("router", (d, moe.num_experts), ("embed", "expert"), scale=0.02)
+    scope.param("w_gate", (moe.num_experts, d, moe.d_ff_expert), ("expert", "embed", "ff"))
+    scope.param("w_up", (moe.num_experts, d, moe.d_ff_expert), ("expert", "embed", "ff"))
+    scope.param("w_down", (moe.num_experts, moe.d_ff_expert, d), ("expert", "ff", "embed"))
+    if moe.num_shared_experts:
+        f = moe.d_ff_expert * moe.num_shared_experts
+        scope.param("shared_w_gate", (d, f), ("embed", "ff"))
+        scope.param("shared_w_up", (d, f), ("embed", "ff"))
+        scope.param("shared_w_down", (f, d), ("ff", "embed"))
+
+
+def capacity(num_tokens: int, k: int, num_experts: int, factor: float) -> int:
+    cap = int(num_tokens * k * factor / num_experts) + 1
+    return max(8, -(-cap // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_layer(p, cfg, x) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = moe.num_experts, moe.experts_per_token
+    cap = capacity(T, K, E, moe.capacity_factor)
+
+    xt = x.reshape(T, D)
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- Switch load-balance aux loss -------------------------------
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=1), axis=0
+    )  # fraction routed (counting top-k hits)
+    p_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e * p_e) / K
+
+    # ---- sort-based dispatch ----------------------------------------
+    flat_e = expert_ids.reshape(-1)                      # (T*K,)
+    flat_tok = jnp.repeat(jnp.arange(T), K)              # (T*K,)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_e)                          # stable
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    seg_start = jnp.cumsum(counts) - counts              # exclusive cumsum
+    pos_in_seg = jnp.arange(T * K) - seg_start[sorted_e]
+    keep = pos_in_seg < cap
+    buf_idx = jnp.where(keep, sorted_e * cap + pos_in_seg, E * cap)  # drop slot
+
+    buf = jnp.zeros((E * cap, D), xt.dtype).at[buf_idx].set(
+        xt[sorted_tok], mode="drop"
+    )
+    buf = buf.reshape(E, cap, D)
+
+    # ---- expert compute (active FLOPs only) -------------------------
+    gate_h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(buf.dtype)))
+    up_h = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(buf.dtype))
+    out_buf = jnp.einsum("ecf,efd->ecd", gate_h * up_h, p["w_down"].astype(buf.dtype))
+    out_buf = out_buf.reshape(E * cap, D)
+
+    # ---- combine back ------------------------------------------------
+    gathered = jnp.where(
+        keep[:, None], out_buf.at[buf_idx, :].get(mode="fill", fill_value=0.0), 0.0
+    )
+    out = jnp.zeros((T, D), xt.dtype).at[sorted_tok].add(
+        gathered * flat_gate[order][:, None].astype(xt.dtype)
+    )
+
+    # ---- shared experts (dense path, kimi-k2) ------------------------
+    if moe.num_shared_experts:
+        g = jax.nn.silu(xt @ p["shared_w_gate"].astype(xt.dtype))
+        out = out + (g * (xt @ p["shared_w_up"].astype(xt.dtype))) @ p[
+            "shared_w_down"
+        ].astype(xt.dtype)
+
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,119 @@
+"""Parameter construction with logical sharding axes.
+
+Models build parameters through a :class:`Scope`, which records — for
+every tensor — a tuple of *logical axis names* alongside the value.  The
+sharding layer (``repro.sharding``) later maps logical names to mesh axes
+via per-run rules, so model code never mentions the mesh.
+
+Two parallel pytrees come out: ``scope.params`` (arrays) and
+``scope.axes`` (tuples of str/None with matching structure).
+
+``Scope.abstract=True`` builds ``jax.ShapeDtypeStruct`` leaves instead of
+materializing arrays — used by the dry-run to describe trillion-parameter
+models without allocating them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Scope:
+    def __init__(self, key: Optional[jax.Array], dtype=jnp.float32, abstract: bool = False):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    # ------------------------------------------------------------------
+    def sub(self, name: str) -> "Scope":
+        child_key = None
+        if not self.abstract:
+            self._key, child_key = jax.random.split(self._key)
+        child = Scope(child_key, self.dtype, self.abstract)
+        self.params[name] = child.params
+        self.axes[name] = child.axes
+        return child
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    # ------------------------------------------------------------------
+    def param(
+        self,
+        name: str,
+        shape: Tuple[int, ...],
+        axes: Tuple[Optional[str], ...],
+        init: str = "normal",
+        scale: Optional[float] = None,
+    ):
+        assert len(shape) == len(axes), (name, shape, axes)
+        if self.abstract:
+            value = jax.ShapeDtypeStruct(shape, self.dtype)
+        elif init == "normal":
+            fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+            s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+            value = (jax.random.normal(self._next_key(), shape, jnp.float32) * s).astype(self.dtype)
+        elif init == "zeros":
+            value = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            value = jnp.ones(shape, self.dtype)
+        elif init == "small_uniform":
+            value = jax.random.uniform(
+                self._next_key(), shape, jnp.float32, -0.05, 0.05
+            ).astype(self.dtype)
+        else:
+            raise ValueError(f"unknown init {init!r}")
+        self.params[name] = value
+        self.axes[name] = tuple(axes)
+        return value
+
+    # ------------------------------------------------------------------
+    def stacked(self, name: str, n: int, build_fn):
+        """Build ``n`` structurally identical sub-trees stacked on axis 0.
+
+        ``build_fn(scope)`` defines one instance; leaves gain a leading
+        ``(n, ...)`` axis with logical name ``"layer"`` (never sharded —
+        it is the ``lax.scan`` axis).  This keeps HLO size independent of
+        depth.
+        """
+        proto = Scope(None, self.dtype, abstract=True)
+        build_fn(proto)
+
+        if self.abstract:
+            stacked_params = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), proto.params
+            )
+        else:
+            def build_one(key):
+                sc = Scope(key, self.dtype, abstract=False)
+                build_fn(sc)
+                return sc.params
+
+            keys = jax.random.split(self._next_key(), n)
+            stacked_params = jax.vmap(build_one)(keys)
+
+        stacked_axes = jax.tree_util.tree_map(
+            lambda a: ("layer",) + a,
+            proto.axes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x),
+        )
+        self.params[name] = stacked_params
+        self.axes[name] = stacked_axes
+        return stacked_params
+
+
+def init_pair(key, dtype, abstract, build_fn):
+    """Run ``build_fn(scope)`` and return ``(params, axes)`` trees."""
+    sc = Scope(key, dtype, abstract)
+    build_fn(sc)
+    return sc.params, sc.axes
+
+
+def is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x)

@@ -1,0 +1,180 @@
+"""Mamba2 (SSD) block — chunked, MXU-friendly TPU adaptation.
+
+The CUDA Mamba2 kernel is a fused warp-level scan; the TPU-native
+formulation (DESIGN.md §3) is the *chunked dual form*: within a chunk
+the recurrence is a masked matmul (MXU work), across chunks a short
+``lax.scan`` carries the (heads, state, head_dim) SSM state.  All decay
+exponents are ≤ 0 by construction (A < 0, dt > 0), so the chunked
+exponentials are overflow-free.
+
+Recurrence (per head h, state n, channel p):
+    H_t = exp(dt_t A_h) H_{t-1} + dt_t B_t x_tᵀ
+    y_t = C_tᵀ H_t + D_h x_t
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+def build_mamba2(scope, cfg):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    inner = ssm.expand * d
+    nheads = inner // ssm.head_dim
+    scope.param("wz", (d, inner), ("embed", "ff"))
+    scope.param("wx", (d, inner), ("embed", "ff"))
+    scope.param("wB", (d, ssm.state_dim), ("embed", "state"))
+    scope.param("wC", (d, ssm.state_dim), ("embed", "state"))
+    scope.param("wdt", (d, nheads), ("embed", "heads"))
+    scope.param("dt_bias", (nheads,), ("heads",), init="zeros")
+    scope.param("A_log", (nheads,), ("heads",), init="zeros")
+    scope.param("D_skip", (nheads,), ("heads",), init="ones")
+    scope.param("conv_w", (ssm.conv_width, inner), (None, "ff"), init="small_uniform")
+    scope.param("norm", (inner,), ("ff",), init="ones")
+    scope.param("w_out", (inner, d), ("ff", "embed"))
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array   # (B, H, N, P)
+    conv: jax.Array  # (B, W-1, inner) trailing inputs for the causal conv
+
+
+def init_mamba_state(cfg, batch: int, dtype):
+    ssm = cfg.ssm
+    inner = ssm.expand * cfg.d_model
+    nheads = inner // ssm.head_dim
+    return MambaState(
+        ssm=jnp.zeros((batch, nheads, ssm.state_dim, ssm.head_dim), dtype),
+        conv=jnp.zeros((batch, ssm.conv_width - 1, inner), dtype),
+    )
+
+
+def abstract_mamba_state(cfg, batch: int, dtype):
+    ssm = cfg.ssm
+    inner = ssm.expand * cfg.d_model
+    nheads = inner // ssm.head_dim
+    return MambaState(
+        ssm=jax.ShapeDtypeStruct((batch, nheads, ssm.state_dim, ssm.head_dim), dtype),
+        conv=jax.ShapeDtypeStruct((batch, ssm.conv_width - 1, inner), dtype),
+    )
+
+
+def mamba_state_axes():
+    return MambaState(
+        ssm=("batch", "heads", "state", None), conv=("batch", None, "ff")
+    )
+
+
+def _causal_conv(x, w, prev=None):
+    """Depthwise causal conv. x (B,S,inner); w (W,inner); prev (B,W-1,inner)."""
+    W = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return out, xp[:, -(W - 1) :, :] if W > 1 else prev
+
+
+def _project(p, cfg, x, conv_prev=None):
+    ssm = cfg.ssm
+    z = x @ p["wz"].astype(x.dtype)
+    xin = x @ p["wx"].astype(x.dtype)
+    xin, conv_state = _causal_conv(xin, p["conv_w"].astype(x.dtype), conv_prev)
+    xin = jax.nn.silu(xin)
+    B = x @ p["wB"].astype(x.dtype)
+    C = x @ p["wC"].astype(x.dtype)
+    dt = jax.nn.softplus(
+        (x @ p["wdt"].astype(x.dtype)).astype(jnp.float32) + p["dt_bias"]
+    )
+    bshape = x.shape[:-1]
+    nheads = p["A_log"].shape[0]
+    xh = xin.reshape(*bshape, nheads, ssm.head_dim)
+    return z, xh, B, C, dt, conv_state
+
+
+def ssd_chunked(xh, dt, A, B, C, chunk: int, h0=None):
+    """Chunked SSD. xh (b,s,h,p); dt (b,s,h) fp32; A (h,)<0; B/C (b,s,n).
+
+    Returns (y (b,s,h,p), h_final (b,h,n,p)).
+    """
+    b, s, nh, p = xh.shape
+    n = B.shape[-1]
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    L = chunk
+
+    # chunk-major so a single lax.scan over chunks bounds memory to one
+    # chunk's (b,L,L,h) decay tile.
+    xc = xh.reshape(b, nc, L, nh, p).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, L, nh).transpose(1, 0, 2, 3)
+    Bc = B.reshape(b, nc, L, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Cc = C.reshape(b, nc, L, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, n, p), jnp.float32)
+
+    def body(h_prev, inp):
+        x_, dt_, B_, C_ = inp                        # (b,L,h,p) (b,L,h) (b,L,n)
+        dA = dt_ * A[None, None, :]                  # (b,L,h), ≤ 0
+        cum = jnp.cumsum(dA, axis=1)
+        total = cum[:, -1, :]                        # (b,h)
+        # intra-chunk: masked matmul (MXU work)
+        G = jnp.einsum("bin,bjn->bij", C_, B_)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]          # (b,i,j,h)
+        # double-where: masked (i<j) entries have decay>0 → exp overflows →
+        # 0·inf = NaN in the VJP unless the argument itself is masked first.
+        decay = jnp.where(mask[None, :, :, None], decay, 0.0)
+        M = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        W = G[..., None] * M * dt_[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W, x_)
+        # inter-chunk: carried state
+        y_inter = jnp.einsum("bln,blh,bhnp->blhp", C_, jnp.exp(cum), h_prev)
+        # state update to chunk end
+        to_end = jnp.exp(total[:, None, :] - cum)                # (b,L,h)
+        S_c = jnp.einsum("blh,bln,blhp->bhnp", to_end * dt_, B_, x_)
+        h_new = jnp.exp(total)[:, :, None, None] * h_prev + S_c
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(body, h0.astype(jnp.float32), (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, p)
+    return y, h_final
+
+
+def mamba2_forward(p, cfg, x) -> jax.Array:
+    """Train/prefill path. x (B,S,D) -> (B,S,D)."""
+    ssm = cfg.ssm
+    z, xh, B, C, dt, _ = _project(p, cfg, x)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xh, dt, A, B, C, ssm.chunk_size)
+    y = y.astype(x.dtype) + p["D_skip"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(x.shape[0], x.shape[1], -1)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["w_out"].astype(x.dtype)
+
+
+def mamba2_decode_step(p, cfg, x, state: MambaState) -> Tuple[jax.Array, MambaState]:
+    """One-token recurrent step. x (B,1,D)."""
+    z, xh, B, C, dt, conv_state = _project(p, cfg, x, conv_prev=state.conv)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    lam = jnp.exp(dt[:, 0] * A[None, :])  # (B,H)
+    h = state.ssm.astype(jnp.float32)
+    upd = jnp.einsum(
+        "bh,bn,bhp->bhnp", dt[:, 0], B[:, 0].astype(jnp.float32), xh[:, 0].astype(jnp.float32)
+    )
+    h_new = lam[:, :, None, None] * h + upd
+    y = jnp.einsum("bn,bhnp->bhp", C[:, 0].astype(jnp.float32), h_new)
+    y = y.astype(x.dtype) + p["D_skip"].astype(x.dtype)[None, :, None] * xh[:, 0]
+    y = y.reshape(x.shape[0], 1, -1)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["w_out"].astype(x.dtype), MambaState(
+        ssm=h_new.astype(state.ssm.dtype), conv=conv_state
+    )

@@ -1,0 +1,336 @@
+"""Unified model stack for all assigned architecture families.
+
+Families and their building blocks:
+
+* dense / vlm / moe — pre-norm decoder blocks (GQA attention + SwiGLU or
+  MoE), ``lax.scan`` over a stacked-parameter layer axis so HLO size is
+  depth-independent.
+* hybrid (zamba2)   — stacked Mamba2 blocks with one *shared-weight*
+  attention block applied every ``shared_attn_every`` layers (unrolled
+  per group so compiled FLOPs reflect the real schedule).
+* ssm (xlstm)       — alternating mLSTM/sLSTM pairs, scanned pairwise.
+* audio (whisper)   — encoder (non-causal) + decoder (causal+cross)
+  stacks; the conv/mel frontend is a stub that supplies frame embeddings.
+
+Public entry points (dispatch on ``cfg.arch_type``):
+    init / forward / loss_fn / init_cache / decode_step
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.layers import (
+    build_embedding,
+    build_rms_norm,
+    build_swiglu,
+    build_gelu_mlp,
+    cross_entropy,
+    cross_entropy_fused,
+    embed,
+    gelu_mlp,
+    rms_norm,
+    sinusoidal_positions,
+    swiglu,
+    unembed,
+)
+from repro.models.param import Scope, init_pair
+from repro.sharding.constraint import constrain_params
+
+
+# ======================================================================
+# Block builders
+# ======================================================================
+
+def _build_attn_block(scope: Scope, cfg: ModelConfig, *, cross: bool = False):
+    build_rms_norm(scope, "ln_attn", cfg.d_model)
+    A.build_attention(scope.sub("attn"), cfg)
+    if cross:
+        build_rms_norm(scope, "ln_cross", cfg.d_model)
+        A.build_attention(scope.sub("cross"), cfg)
+
+
+def _build_ff(scope: Scope, cfg: ModelConfig, *, gelu: bool = False):
+    build_rms_norm(scope, "ln_ff", cfg.d_model)
+    if cfg.moe is not None:
+        MOE.build_moe(scope.sub("moe"), cfg)
+    elif gelu:
+        build_gelu_mlp(scope.sub("mlp"), cfg.d_model, cfg.d_ff)
+    else:
+        build_swiglu(scope.sub("mlp"), cfg.d_model, cfg.d_ff)
+
+
+def _build_decoder_block(scope: Scope, cfg: ModelConfig):
+    _build_attn_block(scope, cfg)
+    _build_ff(scope, cfg)
+
+
+def _attn_out(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+def _self_attn(p, cfg, x, positions, *, causal=True, rope=True, window="cfg"):
+    q, k, v = A.qkv(p["attn"], cfg, x, positions, rope=rope)
+    win = cfg.swa_window if window == "cfg" else window
+    o = A.attention(q, k, v, causal=causal, window=win, q_block=cfg.attn_q_block)
+    return _attn_out(p["attn"], o)
+
+
+def _maybe_remat(cfg, fn):
+    """Checkpoint a (params, carry…) block body when cfg.remat is set."""
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _ff(p, cfg, x, *, gelu: bool = False):
+    """Returns (out, aux)."""
+    h = rms_norm(x, p["ln_ff"], cfg.norm_eps)
+    if cfg.moe is not None:
+        return MOE.moe_layer(p["moe"], cfg, h)
+    out = gelu_mlp(p["mlp"], h) if gelu else swiglu(p["mlp"], h)
+    return out, jnp.float32(0.0)
+
+
+def _decoder_block(p, cfg, x, positions):
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    x = x + _self_attn(p, cfg, h, positions)
+    ff, aux = _ff(p, cfg, x)
+    return x + ff, aux
+
+
+# ======================================================================
+# init
+# ======================================================================
+
+def init(cfg: ModelConfig, key=None, *, abstract: bool = False, dtype=None):
+    """Returns (params, logical_axes). ``abstract=True`` allocates nothing."""
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    if key is None:
+        assert abstract, "need a PRNG key for concrete init"
+
+    def build(sc: Scope):
+        build_embedding(sc, cfg.vocab_size, cfg.d_model)
+        if not cfg.tie_embeddings and not cfg.is_encoder_decoder:
+            sc.param("out_embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=0.02)
+        build_rms_norm(sc, "final_norm", cfg.d_model)
+
+        if cfg.arch_type in ("dense", "moe", "vlm"):
+            if cfg.arch_type == "vlm":
+                proj = sc.sub("vision_proj")
+                proj.param("w", (cfg.d_model, cfg.d_model), ("embed", "embed"))
+                proj.param("b", (cfg.d_model,), ("embed",), init="zeros")
+            sc.stacked("blocks", cfg.num_layers, lambda s: _build_decoder_block(s, cfg))
+
+        elif cfg.arch_type == "hybrid":
+            def mamba_block(s):
+                build_rms_norm(s, "ln", cfg.d_model)
+                SSM.build_mamba2(s.sub("mamba"), cfg)
+            sc.stacked("blocks", cfg.num_layers, mamba_block)
+            shared = sc.sub("shared_attn")
+            _build_attn_block(shared, cfg)
+            _build_ff(shared, cfg)
+
+        elif cfg.arch_type == "ssm":  # xlstm
+            def pair(s):
+                build_rms_norm(s, "ln_m", cfg.d_model)
+                XL.build_mlstm(s.sub("mlstm"), cfg)
+                build_rms_norm(s, "ln_s", cfg.d_model)
+                XL.build_slstm(s.sub("slstm"), cfg)
+            sc.stacked("pairs", cfg.num_layers // 2, pair)
+
+        elif cfg.arch_type == "audio":  # whisper
+            from repro.configs.whisper_medium import DECODER_LEN
+
+            sc.param("dec_pos", (DECODER_LEN, cfg.d_model), (None, "embed"), scale=0.02)
+            def enc_block(s):
+                _build_attn_block(s, cfg)
+                _build_ff(s, cfg, gelu=True)
+            sc.stacked("enc_blocks", cfg.encoder_layers, enc_block)
+            build_rms_norm(sc, "enc_norm", cfg.d_model)
+            def dec_block(s):
+                _build_attn_block(s, cfg, cross=True)
+                _build_ff(s, cfg, gelu=True)
+            sc.stacked("dec_blocks", cfg.num_layers, dec_block)
+        else:
+            raise ValueError(f"unknown arch_type {cfg.arch_type!r}")
+
+    return init_pair(key, dtype, abstract, build)
+
+
+# ======================================================================
+# forward (train / prefill)
+# ======================================================================
+
+def _group_bounds(n_layers: int, every: int):
+    out, s = [], 0
+    while s < n_layers:
+        out.append((s, min(s + every, n_layers)))
+        s += every
+    return out
+
+
+def forward_hidden(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, jax.Array, int]:
+    """Backbone only. Returns (final hidden (B,S,D), aux_loss, prefix_len)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+
+    if cfg.arch_type == "audio":
+        return _whisper_hidden(cfg, params, batch) + (0,)
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embedding"], tokens, dtype)
+    prefix = 0
+
+    if cfg.arch_type == "vlm" and "patch_embeds" in batch:
+        vp = params["vision_proj"]
+        pe = batch["patch_embeds"].astype(dtype) @ vp["w"].astype(dtype) + vp["b"].astype(dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        prefix = pe.shape[1]
+
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    aux = jnp.float32(0.0)
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        # constraint INSIDE the remat boundary: the rematted backward
+        # must also see gathered weights, or XLA re-introduces the
+        # activation all-reduce there (§Perf qwen3 iter-5).
+        blk = _maybe_remat(
+            cfg,
+            lambda lp, h: _decoder_block(constrain_params(lp, "blocks"), cfg, h, positions),
+        )
+
+        def body(carry, lp):
+            h, a = carry
+            h, al = blk(lp, h)
+            return (h, a + al), None
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+
+    elif cfg.arch_type == "hybrid":
+        shared = params["shared_attn"]
+        for s, e in _group_bounds(cfg.num_layers, cfg.shared_attn_every):
+            grp = jax.tree_util.tree_map(lambda t: t[s:e], params["blocks"])
+            blk = _maybe_remat(
+                cfg,
+                lambda lp, h: (lambda lpc: h + SSM.mamba2_forward(
+                    lpc["mamba"], cfg, rms_norm(h, lpc["ln"], cfg.norm_eps)
+                ))(constrain_params(lp, "blocks")),
+            )
+
+            def body(h, lp):
+                return blk(lp, h), None
+            x, _ = jax.lax.scan(body, x, grp)
+            h = rms_norm(x, shared["ln_attn"], cfg.norm_eps)
+            x = x + _self_attn(shared, cfg, h, positions, window=None)
+            ff, _ = _ff(shared, cfg, x)
+            x = x + ff
+
+    elif cfg.arch_type == "ssm":
+        def pair_blk(lp, h):
+            lp = constrain_params(lp, "pairs")
+            h = h + XL.mlstm_forward(lp["mlstm"], cfg, rms_norm(h, lp["ln_m"], cfg.norm_eps))
+            h = h + XL.slstm_forward(lp["slstm"], cfg, rms_norm(h, lp["ln_s"], cfg.norm_eps))
+            return h + XL.slstm_block_mlp(lp["slstm"], cfg, h)
+        pair_blk = _maybe_remat(cfg, pair_blk)
+
+        def body(h, lp):
+            return pair_blk(lp, h), None
+        x, _ = jax.lax.scan(body, x, params["pairs"])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, prefix
+
+
+def output_table(cfg: ModelConfig, params):
+    if cfg.tie_embeddings or cfg.is_encoder_decoder:
+        return constrain_params(params["embedding"], "embedding")
+    return constrain_params(params["out_embed"], "out_embed")
+
+
+def forward(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits over token positions, aux_loss)."""
+    x, aux, prefix = forward_hidden(cfg, params, batch)
+    logits = unembed(output_table(cfg, params), x)
+    if prefix:
+        logits = logits[:, prefix:]
+    return logits, aux
+
+
+def whisper_encode(cfg, params, batch):
+    """Encoder over (stubbed) frame embeddings -> (B, S_enc, D)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    frames = batch["frame_embeds"].astype(dtype)
+    enc = frames + sinusoidal_positions(frames.shape[1], cfg.d_model, dtype)[None]
+    pos_e = jnp.broadcast_to(jnp.arange(enc.shape[1]), enc.shape[:2])
+
+    def enc_blk(lp, h):
+        lp = constrain_params(lp, "enc_blocks")
+        hn = rms_norm(h, lp["ln_attn"], cfg.norm_eps)
+        h = h + _self_attn(lp, cfg, hn, pos_e, causal=False, rope=False)
+        ff, _ = _ff(lp, cfg, h, gelu=True)
+        return h + ff
+    enc_blk = _maybe_remat(cfg, enc_blk)
+
+    def enc_body(h, lp):
+        return enc_blk(lp, h), None
+
+    enc, _ = jax.lax.scan(enc_body, enc, params["enc_blocks"])
+    return rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+
+
+def _whisper_hidden(cfg, params, batch):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    enc = whisper_encode(cfg, params, batch)
+
+    tokens = batch["tokens"]
+    x = embed(params["embedding"], tokens, dtype)
+    x = x + params["dec_pos"][: tokens.shape[1]].astype(dtype)[None]
+    pos_d = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    def dec_blk(lp, h, enc):
+        lp = constrain_params(lp, "dec_blocks")
+        hn = rms_norm(h, lp["ln_attn"], cfg.norm_eps)
+        h = h + _self_attn(lp, cfg, hn, pos_d, causal=True, rope=False)
+        hn = rms_norm(h, lp["ln_cross"], cfg.norm_eps)
+        q, _, _ = A.qkv(lp["cross"], cfg, hn, pos_d, rope=False)
+        k = jnp.einsum("bsd,dhk->bshk", enc, lp["cross"]["wk"].astype(dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc, lp["cross"]["wv"].astype(dtype))
+        o = A.attention(q, k, v, causal=False, window=None, q_block=cfg.attn_q_block)
+        h = h + _attn_out(lp["cross"], o)
+        ff, _ = _ff(lp, cfg, h, gelu=True)
+        return h + ff
+    dec_blk = _maybe_remat(cfg, dec_blk)
+
+    def dec_body(h, lp):
+        return dec_blk(lp, h, enc), None
+
+    x, _ = jax.lax.scan(dec_body, x, params["dec_blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.float32(0.0)
+
+
+def _whisper_forward(cfg, params, batch):
+    x, aux = _whisper_hidden(cfg, params, batch)
+    return unembed(params["embedding"], x), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jax.Array:
+    """Token CE + router load-balance aux (single scalar objective).
+
+    Uses the fused chunked CE — full (B,S,V) logits are never live
+    (DESIGN.md §Perf: the memory term at train shapes is logits-bound
+    otherwise)."""
+    x, aux, prefix = forward_hidden(cfg, params, batch)
+    if prefix:
+        x = x[:, prefix:]
+    ce = cross_entropy_fused(
+        output_table(cfg, params), x, batch["labels"], batch.get("loss_mask")
+    )
+    if cfg.moe is not None:
+        ce = ce + cfg.moe.router_aux_weight * aux
+    return ce

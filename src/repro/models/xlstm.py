@@ -1,0 +1,250 @@
+"""xLSTM blocks: chunkwise mLSTM (matrix memory) + recurrent sLSTM.
+
+[arXiv:2405.04517] adapted for TPU (DESIGN.md §3):
+
+* **mLSTM** is a gated linear-attention recurrence; we implement the
+  *chunkwise dual form* (masked matmuls within a chunk, a short scan
+  across chunks) — same structure as our SSD kernel, MXU-aligned, and
+  linear in sequence length (this is what makes ``long_500k`` decode and
+  32k prefill tractable; a quadratic parallel form would be 16 GB of
+  score matrix at 32k).
+* **sLSTM** has a true elementwise recurrence (its defining feature) —
+  a ``lax.scan`` over time with block-diagonal per-head recurrent
+  weights and the paper's (m, n) exponential-gating stabilizers.
+* Deviation (documented): mLSTM input gates are soft-capped at
+  ``exp(min(ĩ, 8))`` instead of running-max restabilization across
+  chunks; all other exponents are ≤ 0 so the chunked form is stable in
+  fp32.  Blocks alternate mLSTM / sLSTM (num_layers = 24 → 12 pairs).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import build_gelu_mlp, build_rms_norm, gelu_mlp, rms_norm
+
+I_GATE_CAP = 8.0
+
+
+# ======================================================================
+# mLSTM
+# ======================================================================
+
+def build_mlstm(scope, cfg):
+    d = cfg.d_model
+    pf = cfg.xlstm.mlstm_proj_factor
+    inner = int(d * pf)
+    h = cfg.num_heads
+    hd = inner // h
+    assert hd * h == inner, (inner, h)
+    scope.param("w_up", (d, inner), ("embed", "ff"))
+    scope.param("w_gate", (d, inner), ("embed", "ff"))
+    scope.param("wq", (inner, h, hd), ("ff", "heads", None))
+    scope.param("wk", (inner, h, hd), ("ff", "heads", None))
+    scope.param("wv", (inner, h, hd), ("ff", "heads", None))
+    scope.param("w_if", (d, 2 * h), ("embed", "heads"))
+    scope.param("b_if", (2 * h,), ("heads",), init="zeros")
+    scope.param("norm", (inner,), ("ff",), init="ones")
+    scope.param("w_down", (inner, d), ("ff", "embed"))
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # (B, H, hd, hd) matrix memory
+    n: jax.Array  # (B, H, hd) normalizer
+
+
+def _mlstm_gates(p, x):
+    """Returns (log_i capped, log_f) each (B, S, H) fp32."""
+    gf = (x @ p["w_if"].astype(x.dtype)).astype(jnp.float32) + p["b_if"]
+    h = gf.shape[-1] // 2
+    log_i = jnp.minimum(gf[..., :h], I_GATE_CAP)
+    log_f = jax.nn.log_sigmoid(gf[..., h:])
+    return log_i, log_f
+
+
+def _mlstm_qkv(p, cfg, x):
+    inner = x @ p["w_up"].astype(x.dtype)
+    gate = x @ p["w_gate"].astype(x.dtype)
+    q = jnp.einsum("bsf,fhk->bshk", inner, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsf,fhk->bshk", inner, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsf,fhk->bshk", inner, p["wv"].astype(x.dtype))
+    return q, k, v, gate
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, chunk: int, state: MLSTMState = None):
+    """Chunkwise mLSTM. q/k/v (b,s,h,p); gates (b,s,h) fp32."""
+    b, s, nh, p = q.shape
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    L = chunk
+    scale = 1.0 / jnp.sqrt(jnp.float32(p))
+
+    cm = lambda t, shp: t.reshape(b, nc, L, *shp).transpose(1, 0, 2, *range(3, 3 + len(shp)))
+    qc = cm(q.astype(jnp.float32), (nh, p))
+    kc = cm(k.astype(jnp.float32), (nh, p))
+    vc = cm(v.astype(jnp.float32), (nh, p))
+    lic = cm(log_i, (nh,))
+    lfc = cm(log_f, (nh,))
+
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    if state is None:
+        C0 = jnp.zeros((b, nh, p, p), jnp.float32)
+        n0 = jnp.zeros((b, nh, p), jnp.float32)
+    else:
+        C0, n0 = state.C.astype(jnp.float32), state.n.astype(jnp.float32)
+
+    def body(carry, inp):
+        C_prev, n_prev = carry
+        q_, k_, v_, li_, lf_ = inp
+        cum = jnp.cumsum(lf_, axis=1)                 # (b,L,h) ≤ 0
+        total = cum[:, -1, :]
+        # intra: scores[t,j] = exp(cum_t - cum_j + li_j) (q_t·k_j)/√p, j ≤ t
+        G = jnp.einsum("bihp,bjhp->bijh", q_, k_) * scale
+        decay = cum[:, :, None, :] - cum[:, None, :, :] + li_[:, None, :, :]
+        Wt = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0) * G
+        num_intra = jnp.einsum("bijh,bjhp->bihp", Wt, v_)
+        den_intra = jnp.sum(Wt, axis=2)               # (b,L,h)
+        # inter: carried matrix memory
+        qd = q_ * jnp.exp(cum)[..., None]
+        num_inter = jnp.einsum("blhp,bhpv->blhv", qd, C_prev) * scale
+        den_inter = jnp.einsum("blhp,bhp->blh", qd, n_prev) * scale
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        h_out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # state update
+        w_end = jnp.exp(total[:, None, :] - cum + li_)          # (b,L,h)
+        C_new = jnp.exp(total)[:, :, None, None] * C_prev + jnp.einsum(
+            "blh,blhp,blhv->bhpv", w_end, k_, v_
+        )
+        n_new = jnp.exp(total)[:, :, None] * n_prev + jnp.einsum(
+            "blh,blhp->bhp", w_end, k_
+        )
+        return (C_new, n_new), h_out
+
+    (C_f, n_f), ys = jax.lax.scan(body, (C0, n0), (qc, kc, vc, lic, lfc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, p)
+    return y, MLSTMState(C=C_f, n=n_f)
+
+
+def mlstm_forward(p, cfg, x):
+    q, k, v, gate = _mlstm_qkv(p, cfg, x)
+    log_i, log_f = _mlstm_gates(p, x)
+    y, _ = mlstm_chunkwise(q, k, v, log_i, log_f, cfg.xlstm.chunk_size)
+    b, s = x.shape[:2]
+    y = y.reshape(b, s, -1).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(gate)
+    return y @ p["w_down"].astype(x.dtype)
+
+
+def mlstm_decode_step(p, cfg, x, state: MLSTMState):
+    """x (B,1,D) one-token recurrent update."""
+    q, k, v, gate = _mlstm_qkv(p, cfg, x)
+    log_i, log_f = _mlstm_gates(p, x)
+    i_ = jnp.exp(log_i[:, 0])                       # (B,H)
+    f_ = jnp.exp(log_f[:, 0])
+    qf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    C = f_[:, :, None, None] * state.C.astype(jnp.float32) + i_[
+        :, :, None, None
+    ] * jnp.einsum("bhp,bhv->bhpv", kf, vf)
+    n = f_[:, :, None] * state.n.astype(jnp.float32) + i_[:, :, None] * kf
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    num = jnp.einsum("bhp,bhpv->bhv", qf, C) * scale
+    den = jnp.einsum("bhp,bhp->bh", qf, n) * scale
+    h_out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    b = x.shape[0]
+    y = h_out.reshape(b, 1, -1).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(gate)
+    return y @ p["w_down"].astype(x.dtype), MLSTMState(
+        C=C.astype(state.C.dtype), n=n.astype(state.n.dtype)
+    )
+
+
+# ======================================================================
+# sLSTM
+# ======================================================================
+
+def build_slstm(scope, cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    scope.param("w_in", (d, 4 * d), ("embed", "ff"))
+    scope.param("b_in", (4 * d,), ("ff",), init="zeros")
+    scope.param("r", (h, dh, 4 * dh), ("heads", None, None), scale=0.02)
+    scope.param("norm", (d,), ("embed",), init="ones")
+    scope.param("w_out", (d, d), ("embed", "embed"))
+    # post-recurrence MLP (the sLSTM block's up/down projection)
+    mlp = scope.sub("mlp")
+    build_gelu_mlp(mlp, d, int(d * cfg.xlstm.slstm_proj_factor))
+    build_rms_norm(scope, "mlp_norm", d)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, D) cell
+    n: jax.Array  # (B, D) normalizer
+    m: jax.Array  # (B, D) stabilizer
+    h: jax.Array  # (B, D) hidden (feeds the recurrent weights)
+
+
+def init_slstm_state(cfg, batch, dtype=jnp.float32):
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return SLSTMState(c=z, n=z, m=z - 20.0, h=z)
+
+
+def abstract_slstm_state(cfg, batch, dtype=jnp.float32):
+    z = jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.float32)
+    return SLSTMState(c=z, n=z, m=z, h=z)
+
+
+def slstm_state_axes():
+    a = ("batch", "embed")
+    return SLSTMState(c=a, n=a, m=a, h=a)
+
+
+def _slstm_cell(p, cfg, x_t, state: SLSTMState):
+    """One timestep. x_t (B,D) pre-activation input projection applied here."""
+    b, d = x_t.shape
+    h_ = cfg.num_heads
+    dh = d // h_
+    raw = (x_t @ p["w_in"].astype(x_t.dtype)).astype(jnp.float32) + p["b_in"]
+    hprev = state.h.reshape(b, h_, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hprev, p["r"].astype(jnp.float32))
+    raw = raw + rec.reshape(b, 4 * d)
+    zt, it, ft, ot = jnp.split(raw, 4, axis=-1)
+    m_new = jnp.maximum(ft + state.m, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + state.m - m_new)
+    c_new = f_ * state.c + i_ * jnp.tanh(zt)
+    n_new = f_ * state.n + i_
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return SLSTMState(c=c_new, n=n_new, m=m_new, h=h_new)
+
+
+def slstm_forward(p, cfg, x):
+    """x (B,S,D); sequential scan over time (the sLSTM's nature)."""
+    b, s, d = x.shape
+    state = init_slstm_state(cfg, b)
+
+    def body(st, x_t):
+        st2 = _slstm_cell(p, cfg, x_t, st)
+        return st2, st2.h
+
+    _, hs = jax.lax.scan(body, state, x.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = y @ p["w_out"].astype(x.dtype)
+    return y
+
+
+def slstm_decode_step(p, cfg, x, state: SLSTMState) -> Tuple[jax.Array, SLSTMState]:
+    st = _slstm_cell(p, cfg, x[:, 0], state)
+    y = st.h[:, None, :].astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["w_out"].astype(x.dtype), st
+
+
+def slstm_block_mlp(p, cfg, x):
+    """The sLSTM block's post-recurrence MLP (pre-norm residual)."""
+    return gelu_mlp(p["mlp"], rms_norm(x, p["mlp_norm"], cfg.norm_eps))

@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    clip_by_global_norm,
+    from_config,
+    momentum,
+    sgd,
+    with_grad_clip,
+)
+from repro.optim import schedules  # noqa: F401

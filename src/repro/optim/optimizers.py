@@ -1,0 +1,156 @@
+"""Optimizers (SGD / momentum / AdamW), pytree-native, schedule-aware.
+
+Interface (optax-like but self-contained):
+
+    opt = adamw(schedule, ...)
+    opt_state = opt.init(params)
+    updates, opt_state = opt.update(grads, opt_state, params, step)
+    params = tree_map(lambda p, u: p + u, params, updates)
+
+Updates are *deltas to add*.  All moments are fp32 regardless of the
+parameter dtype (mixed-precision safe); updates are cast back to the
+parameter dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params, step) -> (updates, state)
+
+
+def _as_schedule(lr: Union[float, Callable]) -> Callable:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.float32(lr)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads
+    norm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree_util.tree_leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+def sgd(lr: Union[float, Callable]) -> Optimizer:
+    """Plain SGD — the paper's eq. (3)/(6) update."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        s = sched(step)
+        upd = jax.tree_util.tree_map(lambda g: (-s * g).astype(g.dtype), grads)
+        return upd, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Union[float, Callable], beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, m, params, step):
+        s = sched(step)
+        m = jax.tree_util.tree_map(
+            lambda mi, g: beta * mi + g.astype(jnp.float32), m, grads
+        )
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda mi, g: (-s * (beta * mi + g.astype(jnp.float32))).astype(g.dtype),
+                m,
+                grads,
+            )
+        else:
+            upd = jax.tree_util.tree_map(
+                lambda mi, g: (-s * mi).astype(g.dtype), m, grads
+            )
+        return upd, m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def adamw(
+    lr: Union[float, Callable],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            mu=jax.tree_util.tree_map(z, params),
+            nu=jax.tree_util.tree_map(z, params),
+        )
+
+    def update(grads, state, params, step):
+        s = sched(step)
+        t = (step + 1).astype(jnp.float32) if hasattr(step, "astype") else float(step) + 1.0
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(m, v, p):
+            step_ = m / bc1 / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (-s * step_).astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamState(mu, nu)
+
+    return Optimizer(init, update)
+
+
+def with_grad_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    if max_norm <= 0:
+        return opt
+
+    def update(grads, state, params, step):
+        return opt.update(clip_by_global_norm(grads, max_norm), state, params, step)
+
+    return Optimizer(opt.init, update)
+
+
+def from_config(cfg) -> Optimizer:
+    """Build the optimizer described by a :class:`TrainConfig`."""
+    from repro.optim.schedules import from_config as sched_from_config
+
+    sched = sched_from_config(cfg)
+    if cfg.optimizer == "sgd":
+        opt = sgd(sched)
+    elif cfg.optimizer == "momentum":
+        opt = momentum(sched, beta=cfg.beta1)
+    elif cfg.optimizer == "adamw":
+        opt = adamw(
+            sched, b1=cfg.beta1, b2=cfg.beta2, eps=cfg.eps, weight_decay=cfg.weight_decay
+        )
+    else:
+        raise ValueError(f"unknown optimizer {cfg.optimizer!r}")
+    return with_grad_clip(opt, cfg.grad_clip)

@@ -1,0 +1,46 @@
+"""Learning-rate schedules (no optax on the box — built here)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def sched(step):
+        return jnp.float32(lr)
+    return sched
+
+
+def linear_warmup(base, warmup_steps: int):
+    def sched(step):
+        if warmup_steps <= 0:
+            return base(step)
+        warm = jnp.minimum(1.0, (step + 1) / warmup_steps)
+        return base(step) * warm
+    return sched
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr * (final_frac + (1 - final_frac) * cos))
+    return sched
+
+
+def linear_decay(lr: float, total_steps: int, final_frac: float = 0.0):
+    def sched(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return jnp.float32(lr * (1.0 - (1.0 - final_frac) * t))
+    return sched
+
+
+def from_config(cfg) -> callable:
+    if cfg.schedule == "constant":
+        base = constant(cfg.lr)
+    elif cfg.schedule == "cosine":
+        base = cosine(cfg.lr, cfg.total_steps)
+    elif cfg.schedule == "linear":
+        base = linear_decay(cfg.lr, cfg.total_steps)
+    else:
+        raise ValueError(f"unknown schedule {cfg.schedule!r}")
+    return linear_warmup(base, cfg.warmup_steps)

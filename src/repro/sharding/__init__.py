@@ -1,0 +1,6 @@
+from repro.sharding.rules import (  # noqa: F401
+    resolve_pspec,
+    resolve_rules,
+    tree_pspecs,
+    tree_shardings,
+)

@@ -1,0 +1,115 @@
+"""Gather-at-use constraints for FSDP (ZeRO-3) parameters.
+
+With ``embed`` sharded over the data axes, XLA's SPMD partitioner may
+contract an activation against the still-sharded weight and all-reduce
+the ACTIVATION over data — per layer, in fp32.  On qwen3-32b × train_4k
+that was 5.6 TB of wire per step (EXPERIMENTS.md §Perf, iter-4 → iter-5).
+ZeRO-3's intent is the opposite: all-gather the (much smaller) WEIGHT at
+its use site, then contract locally.
+
+Model code calls ``constrain_params(subtree, key)`` on each layer slice
+inside the scan body (and on the unembed table); the step builder
+installs a hook that re-annotates every leaf with its *data-axes-free*
+PartitionSpec (``with_sharding_constraint``), which forces the per-layer
+weight all-gather.  Without a hook installed the call is a no-op, so
+pure model usage (tests, examples, CPU) is unaffected.
+"""
+from __future__ import annotations
+
+import contextvars
+from typing import Callable, Optional
+
+_HOOK: contextvars.ContextVar[Optional[Callable]] = contextvars.ContextVar(
+    "fsdp_gather_hook", default=None
+)
+_ACT_HOOK: contextvars.ContextVar[Optional[Callable]] = contextvars.ContextVar(
+    "act_constraint_hook", default=None
+)
+
+
+def set_act_hook(fn: Optional[Callable]):
+    """fn(x, logical_axes) -> constrained x (or None to clear)."""
+    return _ACT_HOOK.set(fn)
+
+
+def constrain_act(x, logical_axes):
+    """Pin an activation to the plan's sharding for ``logical_axes``.
+    No-op unless a hook is installed (tests/CPU paths unaffected)."""
+    fn = _ACT_HOOK.get()
+    return fn(x, logical_axes) if fn is not None else x
+
+
+def make_act_hook(mesh, rules):
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.sharding.rules import resolve_pspec
+
+    def hook(x, logical_axes):
+        spec = resolve_pspec(x.shape, logical_axes, rules, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return hook
+
+
+def set_gather_hook(fn: Optional[Callable]):
+    """fn(params_subtree, key: str) -> constrained subtree (or None to clear)."""
+    return _HOOK.set(fn)
+
+
+def constrain_params(subtree, key: str):
+    fn = _HOOK.get()
+    return fn(subtree, key) if fn is not None else subtree
+
+
+def make_gather_hook(mesh, axes_tree, rules):
+    """Build the hook used by the step builders.
+
+    ``axes_tree`` is the model's logical-axes tree; ``rules`` the plan's
+    rule table.  The constraint spec is computed with the data axes
+    stripped (only ``model`` sharding is kept on parameters), i.e. the
+    weight is replicated across data at its use site = ZeRO-3 gather.
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.models.param import is_axes_leaf
+    from repro.sharding.rules import resolve_pspec
+
+    data_axes = {"data", "pod"}
+    gather_rules = {
+        name: ax for name, ax in rules.items()
+    }
+    # strip data/pod axes from every rule target
+    def strip(ax):
+        if ax is None:
+            return None
+        if isinstance(ax, str):
+            return None if ax in data_axes else ax
+        kept = tuple(a for a in ax if a not in data_axes)
+        return kept if kept else None
+    gather_rules = {k: strip(v) for k, v in gather_rules.items()}
+
+    def hook(subtree, key: str):
+        ax_sub = axes_tree
+        if key:  # "" = the whole params tree (per-agent grad/probe trees)
+            for part in key.split("."):
+                ax_sub = ax_sub[part]
+        # layer slices lose the leading "layer" axis
+        def fix_axes(a, leaf):
+            a = tuple(a)
+            if len(a) == leaf.ndim + 1 and a[0] == "layer":
+                a = a[1:]
+            return a
+
+        flat_axes, treedef = jax.tree_util.tree_flatten(ax_sub, is_leaf=is_axes_leaf)
+        flat_leaves = treedef.flatten_up_to(subtree)
+        out = []
+        for a, leaf in zip(flat_axes, flat_leaves):
+            spec = resolve_pspec(leaf.shape, fix_axes(a, leaf), gather_rules, mesh)
+            out.append(
+                jax.lax.with_sharding_constraint(leaf, NamedSharding(mesh, spec))
+            )
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return hook

@@ -1,0 +1,160 @@
+"""Logical-axis → mesh-axis rules (t5x/MaxText-style, config-driven).
+
+Logical axis vocabulary used by the model zoo:
+
+    layer       scan-over-layers axis            (never sharded)
+    vocab       embedding/vocab dimension
+    embed       model (d_model) dimension
+    heads       query-head dimension
+    kv_heads    key/value-head dimension
+    ff          feed-forward hidden dimension
+    expert      MoE expert dimension
+    state       SSM state dimension
+    conv        short-conv width
+    batch       activation batch
+    agent       event-triggered DP agent axis
+    seq         activation sequence
+    cache_seq   KV-cache sequence axis (decode)
+    patch       VLM image-patch axis
+    frame       audio frame axis
+
+``resolve_rules`` builds the mapping for a given mesh + flags, and
+``resolve_pspec`` turns one parameter's logical axes into a
+``PartitionSpec`` with divisibility and axis-reuse safeguards (a mesh
+axis may appear at most once per spec; non-divisible dims are
+replicated).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+def resolve_rules(
+    mesh: Mesh,
+    *,
+    fsdp: bool = False,
+    agent_axes: Tuple[str, ...] = ("data",),
+    seq_shard: bool = False,
+    inner_batch_shard: bool = False,
+    cache_seq_shard: bool = False,
+) -> Dict[str, MeshAxes]:
+    """Default rule table for the production meshes.
+
+    - tensor-parallel dims → "model"
+    - batch → all non-"model" axes not reserved for agents
+    - fsdp: "embed" additionally sharded over the data axes (ZeRO-3);
+      otherwise params are replicated across data.
+    - seq_shard: activation sequence dim over "model" (sequence
+      parallelism — a hillclimb option).
+    """
+    has_pod = "pod" in mesh.axis_names
+    data_axes: Tuple[str, ...] = ("pod", "data") if has_pod else ("data",)
+
+    rules: Dict[str, MeshAxes] = {
+        "layer": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "expert": "model",
+        "state": None,
+        "conv": None,
+        "embed": tuple(a for a in data_axes) if fsdp else None,
+        "batch": data_axes,
+        "agent": agent_axes,
+        # per-agent batch dim: sharding it over "model" turns the TP axis
+        # into extra data parallelism — the right move when the model is
+        # too small for tensor parallelism (smollm's 9 heads can't split
+        # 16 ways); a §Perf hillclimb knob.
+        "inner_batch": "model" if inner_batch_shard else None,
+        "seq": "model" if seq_shard else None,
+        # flash-decoding-style: shard the KV cache along its sequence
+        # axis when kv_heads can't split the model axis (GQA kv=8 on a
+        # 16-way TP mesh would otherwise replicate the whole cache —
+        # 131 GB/device for kimi decode_32k; §Perf iter-4)
+        "cache_seq": "model" if cache_seq_shard else None,
+        # decode-attention head layout: heads give up the model axis to
+        # the cache when cache_seq_shard is on (can't have both)
+        "decode_heads": None if cache_seq_shard else "model",
+        "patch": None,
+        "frame": None,
+    }
+    return rules
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def resolve_pspec(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    rules: Dict[str, MeshAxes],
+    mesh: Mesh,
+) -> PartitionSpec:
+    """Map one tensor's logical axes to a PartitionSpec.
+
+    Safeguards (applied in order, per dimension):
+      * unknown/None logical name → replicated
+      * mesh axis already used by an earlier dim of this tensor → replicated
+      * dim size not divisible by the mesh-axis product → replicated
+    """
+    used: set = set()
+    spec = []
+    for dim, name in zip(shape, logical_axes):
+        axes = rules.get(name) if name is not None else None
+        if axes is None:
+            spec.append(None)
+            continue
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        axes_t = tuple(a for a in axes_t if a in mesh.axis_names)
+        if not axes_t or any(a in used for a in axes_t):
+            spec.append(None)
+            continue
+        size = _axis_size(mesh, axes_t)
+        if size <= 1 or dim % size != 0:
+            spec.append(None)
+            continue
+        used.update(axes_t)
+        spec.append(axes_t[0] if len(axes_t) == 1 else axes_t)
+    # drop trailing Nones for tidier specs
+    while spec and spec[-1] is None:
+        spec.pop()
+    return PartitionSpec(*spec)
+
+
+def tree_pspecs(axes_tree, shapes_tree, rules, mesh):
+    """Map matching (axes, shapes) trees to a PartitionSpec tree."""
+    import jax
+
+    from repro.models.param import is_axes_leaf
+
+    flat_axes, treedef = jax.tree_util.tree_flatten(axes_tree, is_leaf=is_axes_leaf)
+    flat_shapes = treedef.flatten_up_to(shapes_tree)
+    specs = [
+        resolve_pspec(
+            s.shape if hasattr(s, "shape") else s, a, rules, mesh
+        )
+        for a, s in zip(flat_axes, flat_shapes)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(axes_tree, shapes_tree, rules, mesh):
+    import jax
+
+    specs = tree_pspecs(axes_tree, shapes_tree, rules, mesh)
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p),
+        specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )

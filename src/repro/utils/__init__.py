@@ -1,0 +1,9 @@
+from repro.utils.tree import (  # noqa: F401
+    tree_add_scaled,
+    tree_scale,
+    tree_vdot,
+    tree_norm_sq,
+    tree_zeros_like,
+    tree_size,
+    tree_cast,
+)

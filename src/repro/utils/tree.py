@@ -1,0 +1,44 @@
+"""Small pytree linear-algebra helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add_scaled(a, b, scale):
+    """a + scale * b, leafwise; result keeps ``a``'s leaf dtypes.
+
+    The dtype pin matters: probe points ``w − ε g`` with a strong-f32 ε
+    must not upcast bf16 params (that would change scan-carry dtypes in
+    the probed loss)."""
+    return jax.tree_util.tree_map(
+        lambda x, y: (x + scale * y).astype(x.dtype), a, b
+    )
+
+
+def tree_scale(a, scale):
+    return jax.tree_util.tree_map(lambda x: scale * x, a)
+
+
+def tree_vdot(a, b):
+    """Sum of elementwise products across all leaves (fp32 accumulation)."""
+    leaves = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_norm_sq(a):
+    return tree_vdot(a, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_size(a) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), a)

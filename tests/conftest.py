@@ -1,0 +1,41 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 device
+(only launch/dryrun.py forces the 512-device placeholder topology)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+def tiny_cfg(arch_id: str, **overrides):
+    cfg = reduced(get_config(arch_id))
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def tiny_batch(cfg, key, batch=2, seq=32):
+    """Concrete batch matching models.input_specs structure (no agent axis)."""
+    kt, ke = jax.random.split(key)
+    toks = jax.random.randint(kt, (batch, seq + 1), 0, cfg.vocab_size)
+    out = {
+        "tokens": toks[:, :-1].astype(jnp.int32),
+        "labels": toks[:, 1:].astype(jnp.int32),
+    }
+    if cfg.arch_type == "vlm":
+        out["patch_embeds"] = 0.02 * jax.random.normal(
+            ke, (batch, cfg.num_patches, cfg.d_model), jnp.float32
+        )
+    if cfg.arch_type == "audio":
+        dec = min(seq, 24)
+        out = {
+            "frame_embeds": 0.02 * jax.random.normal(
+                ke, (batch, seq, cfg.d_model), jnp.float32
+            ),
+            "tokens": toks[:, :dec].astype(jnp.int32),
+            "labels": toks[:, 1 : dec + 1].astype(jnp.int32),
+        }
+    return out

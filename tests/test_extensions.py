@@ -1,0 +1,104 @@
+"""Beyond-paper extensions: diminishing λ (the paper's post-eq.(23)
+remark), m-agent generalization of Thm 2, trigger λ-schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TriggerConfig
+from repro.configs.paper_linreg import LinRegConfig
+from repro.core import regression as R
+from repro.core import theory as T
+from repro.core.triggers import make_trigger
+
+
+def problem_for(m: int, n: int = 2):
+    cfg = LinRegConfig(
+        name=f"m{m}", n=n, cov_diag=(3.0, 1.0)[:n] if n == 2 else (),
+        w_star=(3.0, 5.0)[:n] if n == 2 else (), noise_std=1.0,
+        stepsize=0.1, samples_per_agent=5, num_agents=m, steps=40,
+    )
+    return R.make_problem(cfg, jax.random.key(1))
+
+
+def test_diminishing_lambda_removes_steady_state_penalty():
+    """λ_k = λ/(k+1): final J approaches the always-transmit floor while
+    total communication stays below always-transmit (the paper's claim
+    that a diminishing λ 'eliminates this effect')."""
+    problem = problem_for(2)
+    key = jax.random.key(3)
+    steps, trials, lam0 = 120, 256, 2.0
+
+    r_const = R.run_many(problem, key, steps, trials, mode="gain_exact",
+                         lam=lam0)
+    r_decay = R.run_many(problem, key, steps, trials, mode="gain_exact",
+                         lam=lam0, lam_decay="inv_t")
+    r_full = R.run_many(problem, key, steps, trials, mode="always")
+
+    J_const = float(jnp.mean(r_const.J_traj[:, -10:]))
+    J_decay = float(jnp.mean(r_decay.J_traj[:, -10:]))
+    J_full = float(jnp.mean(r_full.J_traj[:, -10:]))
+
+    # decaying λ ends near the dense floor; constant λ keeps a penalty
+    assert J_decay < J_const - 0.1, (J_decay, J_const)
+    assert J_decay < J_full * 1.25, (J_decay, J_full)
+    # ...while still communicating less than dense in total
+    c_decay = float(jnp.mean(jnp.sum(r_decay.alphas, (1, 2))))
+    c_full = steps * problem.num_agents
+    assert c_decay < 0.9 * c_full, (c_decay, c_full)
+
+
+def test_geometric_lambda_schedule():
+    problem = problem_for(2)
+    # λ0 above the initial gain magnitude so early rounds actually gate
+    r = R.run_many(problem, jax.random.key(4), 60, 128, mode="gain_exact",
+                   lam=30.0, lam_decay="geometric")
+    # λ_k = λ·ρ^k decays past the (also shrinking) gains within a few
+    # steps: fully gated at k<3, transmitting by k≈5-10.  (Near the
+    # optimum exact gains turn positive — noise steps hurt — so the
+    # trigger re-silences by itself; that tail is the event-triggered
+    # steady state, not the schedule.)
+    first3 = float(jnp.mean(r.alphas[:, :3]))
+    mid = float(jnp.mean(r.alphas[:, 4:12]))
+    assert first3 < 0.02, first3
+    assert mid > first3 + 0.05, (first3, mid)
+
+
+@pytest.mark.parametrize("m", [2, 8, 64, 256])
+def test_thm2_bound_holds_for_m_agents(m):
+    """Thm 2's proof (convexity + eq. 11 per agent) is m-agnostic — the
+    bound must hold almost surely for any number of agents."""
+    problem = problem_for(m)
+    lam = 0.5
+    res = R.run_many(problem, jax.random.key(5), steps=40,
+                     num_trials=16 if m >= 64 else 64,
+                     mode="gain_exact", lam=lam)
+    J0 = float(problem.J(jnp.zeros(problem.n)))
+    bound = T.thm2_comm_bound(J0, float(problem.J_star()), lam)
+    any_tx = np.asarray(jnp.sum(jnp.max(res.alphas, axis=2), axis=1))
+    assert (any_tx <= bound + 1e-6).all(), (m, any_tx.max(), bound)
+
+
+def test_trigger_config_lam_schedule():
+    """The framework trigger honours lam_decay (LLM-side path)."""
+    def quad_loss(params, batch):
+        xs, ys = batch
+        r = xs @ params - ys
+        return 0.5 * jnp.mean(r * r)
+
+    key = jax.random.key(0)
+    xs = jax.random.normal(key, (32, 4))
+    ys = xs @ jnp.ones(4)
+    w = jnp.zeros(4)
+    g = jax.grad(quad_loss)(w, (xs, ys))
+    base_gain = float(
+        make_trigger(TriggerConfig(kind="gain_lookahead", lam=0.0),
+                     loss_fn=quad_loss, probe_eps=0.1)(
+            w, g, (xs, ys), quad_loss(w, (xs, ys)), 0).gain
+    )
+    lam0 = -base_gain * 2.0  # gates at step 0
+    cfg = TriggerConfig(kind="gain_lookahead", lam=lam0, lam_decay="inv_t")
+    trig = make_trigger(cfg, loss_fn=quad_loss, probe_eps=0.1)
+    a0 = float(trig(w, g, (xs, ys), quad_loss(w, (xs, ys)), jnp.int32(0)).alpha)
+    a9 = float(trig(w, g, (xs, ys), quad_loss(w, (xs, ys)), jnp.int32(9)).alpha)
+    assert a0 == 0.0 and a9 == 1.0  # λ shrinks 10× by step 9 -> fires

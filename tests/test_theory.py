@@ -1,0 +1,120 @@
+"""Theorem 1 / Theorem 2 validation (the paper's own claims).
+
+Monte-Carlo trajectories of the faithful reproduction are checked
+against the closed-form bounds — Thm 2 almost-surely per trajectory,
+Thm 1 in expectation (with MC tolerance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_linreg import LinRegConfig
+from repro.core import regression as R
+from repro.core import theory as T
+
+CFG = LinRegConfig(
+    name="theory_tests", n=2, cov_diag=(3.0, 1.0), w_star=(3.0, 5.0),
+    noise_std=1.0, stepsize=0.1, samples_per_agent=5, num_agents=2, steps=40,
+)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return R.make_problem(CFG, jax.random.key(1))
+
+
+def test_rho_and_stability(problem):
+    assert problem.rho() == pytest.approx(float(T.rho(CFG.stepsize, (3.0, 1.0))))
+    assert problem.rho() < 1.0
+    assert problem.max_stable_eps() == pytest.approx(2.0 / 3.0)
+    unstable = R.Problem(
+        sigma_diag=jnp.array([3.0, 1.0]), w_star=jnp.array([3.0, 5.0]),
+        noise_std=1.0, eps=0.7, n_samples=5, num_agents=2,
+    )
+    assert unstable.rho() > 1.0  # ε > 2/λmax breaks the contraction
+
+
+def test_thm2_holds_almost_surely(problem):
+    """Σ_k max_i α_k^i ≤ (J(w0) − J*)/λ on EVERY trajectory (eq. 24)."""
+    lam = 0.5
+    res = R.run_many(problem, jax.random.key(2), steps=60, num_trials=64,
+                     mode="gain_exact", lam=lam)
+    J0 = float(problem.J(jnp.zeros(problem.n)))
+    bound = T.thm2_comm_bound(J0, float(problem.J_star()), lam)
+    any_tx = np.asarray(jnp.sum(jnp.max(res.alphas, axis=2), axis=1))
+    assert (any_tx <= bound + 1e-6).all(), (any_tx.max(), bound)
+
+
+def test_thm2_inverse_proportionality(problem):
+    """Doubling λ at least halves the guaranteed communication budget."""
+    J0 = float(problem.J(jnp.zeros(problem.n)))
+    Js = float(problem.J_star())
+    b1 = T.thm2_comm_bound(J0, Js, 0.25)
+    b2 = T.thm2_comm_bound(J0, Js, 0.5)
+    assert b2 == pytest.approx(b1 / 2)
+
+
+def test_thm1_bound_in_expectation(problem):
+    """𝔼J(w_N) ≤ eq. (12) RHS (gain_exact trigger, MC average)."""
+    lam, steps, trials = 0.2, 40, 256
+    res = R.run_many(problem, jax.random.key(3), steps=steps, num_trials=trials,
+                     mode="gain_exact", lam=lam)
+    meanJ = float(jnp.mean(res.J_traj[:, -1]))
+
+    # conservative G: covariance trace at w0 (worst point of the run)
+    trG = float(T.gradient_covariance_trace(
+        problem.sigma_diag, jnp.zeros(problem.n), problem.w_star,
+        problem.noise_std, problem.n_samples))
+    silence = float(jnp.mean(1.0 - res.alphas))  # empirical 𝔼(1-α)
+    J0 = float(problem.J(jnp.zeros(problem.n)))
+    bound = float(T.thm1_bound(J0, problem.J_star(), problem.eps,
+                               problem.sigma_diag, trG, lam, silence, steps))
+    assert meanJ <= bound * 1.05, (meanJ, bound)
+
+
+def test_steady_state_bound(problem):
+    """limsup 𝔼J ≤ J* + (λ + ε²TrΣG)/(1−ρ)  (eq. 23)."""
+    lam = 0.1
+    res = R.run_many(problem, jax.random.key(4), steps=150, num_trials=256,
+                     mode="gain_exact", lam=lam)
+    tail = float(jnp.mean(res.J_traj[:, -20:]))  # late-run average
+    trG = float(T.gradient_covariance_trace(
+        problem.sigma_diag, problem.w_star, problem.w_star,
+        problem.noise_std, problem.n_samples))
+    bound = float(T.steady_state_bound(problem.J_star(), problem.eps,
+                                       problem.sigma_diag, trG, lam))
+    assert tail <= bound * 1.05, (tail, bound)
+
+
+def test_convergence_always_transmit(problem):
+    """λ→0 + always transmit = plain parallel SGD; J must approach J*."""
+    res = R.run_many(problem, jax.random.key(5), steps=200, num_trials=64,
+                     mode="always")
+    finalJ = float(jnp.mean(res.J_traj[:, -1]))
+    J0 = float(problem.J(jnp.zeros(problem.n)))
+    assert finalJ < 0.05 * J0
+    assert finalJ < float(problem.J_star()) * 2.0
+
+
+def test_lambda_monotone_communication(problem):
+    """Larger λ ⇒ (weakly) less communication — the paper's knob."""
+    key = jax.random.key(6)
+    lams = [0.0, 0.1, 0.5, 2.0]
+    comms = []
+    for lam in lams:
+        res = R.run_many(problem, key, steps=40, num_trials=128,
+                         mode="gain_estimated", lam=lam)
+        comms.append(float(jnp.mean(jnp.sum(res.alphas, axis=(1, 2)))))
+    assert all(a >= b - 1e-6 for a, b in zip(comms, comms[1:])), comms
+
+
+def test_estimated_gain_close_to_exact(problem):
+    """Paper Fig 2 (Right): the data-only estimate (30) behaves like the
+    exact gain (28) — final J within MC noise across a λ sweep."""
+    key = jax.random.key(7)
+    for lam in (0.05, 0.2):
+        r_ex = R.run_many(problem, key, 40, 256, mode="gain_exact", lam=lam)
+        r_es = R.run_many(problem, key, 40, 256, mode="gain_estimated", lam=lam)
+        Jx = float(jnp.mean(r_ex.J_traj[:, -1]))
+        Js = float(jnp.mean(r_es.J_traj[:, -1]))
+        assert abs(Jx - Js) < 0.35 * max(Jx, Js) + 0.05, (lam, Jx, Js)

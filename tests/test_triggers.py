@@ -1,0 +1,126 @@
+"""Trigger-policy unit tests, incl. the key identity: for a quadratic
+loss the lookahead gain IS eq. (30), and gain_quadratic (HVP form)
+matches it exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TriggerConfig
+from repro.core.triggers import (
+    linreg_gain_estimated,
+    linreg_gain_exact,
+    make_trigger,
+)
+
+
+def quad_loss(params, batch):
+    """Empirical linreg loss — the paper's Ĵ (eq. 5)."""
+    xs, ys = batch
+    r = xs @ params - ys
+    return 0.5 * jnp.mean(r * r)
+
+
+@pytest.fixture()
+def setup(rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    n, N = 6, 40
+    w_star = jax.random.normal(k1, (n,))
+    xs = jax.random.normal(k2, (N, n)) * jnp.array([2.0, 1.0, 0.5, 1.5, 1.0, 3.0])
+    ys = xs @ w_star + 0.1 * jax.random.normal(k3, (N,))
+    w = jnp.zeros((n,))
+    return w, (xs, ys)
+
+
+def test_lookahead_equals_eq30_for_quadratic(setup):
+    """gain_lookahead == −ε gᵀ[I − (ε/2)Ĥ]g on the quadratic loss."""
+    w, batch = setup
+    eps = 0.1
+    g = jax.grad(quad_loss)(w, batch)
+    trig = make_trigger(TriggerConfig(kind="gain_lookahead", lam=0.0),
+                        loss_fn=quad_loss, probe_eps=eps)
+    out = trig(w, g, batch, quad_loss(w, batch), 0)
+    want = linreg_gain_estimated(w, g, eps, batch[0])
+    np.testing.assert_allclose(float(out.gain), float(want), rtol=1e-5)
+
+
+def test_gain_quadratic_matches_lookahead_quadratic(setup):
+    w, batch = setup
+    eps = 0.07
+    g = jax.grad(quad_loss)(w, batch)
+    t_q = make_trigger(TriggerConfig(kind="gain_quadratic", lam=0.0),
+                       loss_fn=quad_loss, probe_eps=eps)
+    t_l = make_trigger(TriggerConfig(kind="gain_lookahead", lam=0.0),
+                       loss_fn=quad_loss, probe_eps=eps)
+    gq = t_q(w, g, batch, quad_loss(w, batch), 0).gain
+    gl = t_l(w, g, batch, quad_loss(w, batch), 0).gain
+    np.testing.assert_allclose(float(gq), float(gl), rtol=1e-4)
+
+
+def test_gain_quadratic_kernel_path(setup):
+    """use_kernel=True (Pallas gain_reduce) gives the same gain."""
+    w, batch = setup
+    eps = 0.07
+    g = jax.grad(quad_loss)(w, batch)
+    plain = make_trigger(TriggerConfig(kind="gain_quadratic"), loss_fn=quad_loss,
+                         probe_eps=eps)(w, g, batch, 0.0, 0).gain
+    fused = make_trigger(TriggerConfig(kind="gain_quadratic"), loss_fn=quad_loss,
+                         probe_eps=eps, use_kernel=True)(w, g, batch, 0.0, 0).gain
+    np.testing.assert_allclose(float(plain), float(fused), rtol=1e-4)
+
+
+def test_threshold_behaviour(setup):
+    """α=1 iff gain ≤ −λ (eq. 11)."""
+    w, batch = setup
+    eps = 0.1
+    g = jax.grad(quad_loss)(w, batch)
+    base = make_trigger(TriggerConfig(kind="gain_lookahead", lam=0.0),
+                        loss_fn=quad_loss, probe_eps=eps)
+    gain = float(base(w, g, batch, quad_loss(w, batch), 0).gain)
+    assert gain < 0  # descending direction improves the local loss
+    lam_lo = TriggerConfig(kind="gain_lookahead", lam=-gain * 0.5)
+    lam_hi = TriggerConfig(kind="gain_lookahead", lam=-gain * 2.0)
+    a_lo = make_trigger(lam_lo, loss_fn=quad_loss, probe_eps=eps)(
+        w, g, batch, quad_loss(w, batch), 0).alpha
+    a_hi = make_trigger(lam_hi, loss_fn=quad_loss, probe_eps=eps)(
+        w, g, batch, quad_loss(w, batch), 0).alpha
+    assert float(a_lo) == 1.0 and float(a_hi) == 0.0
+
+
+def test_grad_norm_trigger(setup):
+    w, batch = setup
+    g = jax.grad(quad_loss)(w, batch)
+    gsq = float(jnp.sum(g * g))
+    lo = make_trigger(TriggerConfig(kind="grad_norm", mu=gsq * 0.5))(
+        w, g, batch, 0.0, 0)
+    hi = make_trigger(TriggerConfig(kind="grad_norm", mu=gsq * 2.0))(
+        w, g, batch, 0.0, 0)
+    assert float(lo.alpha) == 1.0 and float(hi.alpha) == 0.0
+
+
+def test_periodic_always_never(setup):
+    w, batch = setup
+    g = jax.grad(quad_loss)(w, batch)
+    per = make_trigger(TriggerConfig(kind="periodic", period=3))
+    seq = [float(per(w, g, batch, 0.0, jnp.int32(s)).alpha) for s in range(7)]
+    assert seq == [1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 1.0]
+    assert float(make_trigger(TriggerConfig(kind="always"))(w, g, batch, 0.0, 0).alpha) == 1.0
+    assert float(make_trigger(TriggerConfig(kind="never"))(w, g, batch, 0.0, 0).alpha) == 0.0
+
+
+def test_exact_gain_identity(setup, rng):
+    """eq. (28) closed form == true ΔJ for the population objective."""
+    w, (xs, _) = setup
+    n = w.shape[0]
+    sigma = jnp.diag(jnp.array([2.0, 1.0, 0.5, 1.5, 1.0, 3.0]) ** 2)
+    w_star = jax.random.normal(rng, (n,))
+    eps = 0.12
+    g = jax.random.normal(jax.random.fold_in(rng, 1), (n,))
+
+    def J(w):  # population objective with J* = 0 noise floor
+        d = w - w_star
+        return 0.5 * d @ sigma @ d
+
+    got = linreg_gain_exact(w, g, eps, sigma, w_star)
+    want = J(w - eps * g) - J(w)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-6)

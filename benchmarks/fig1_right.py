@@ -24,11 +24,12 @@ MUS = [0.0, 1.0, 3.0, 10.0, 30.0, 100.0, 300.0, 1000.0, 3000.0]
 TRIALS = 512
 
 
-def _curve(problem, key, mode, params, steps):
+def _curve(problem, key, trigger, arg, params, steps):
+    """Sweep one trigger parameter via repro.comm policy specs."""
     out = []
     for p in params:
-        kw = {"lam": float(p)} if mode != "grad_norm" else {"mu": float(p)}
-        res = R.run_many(problem, key, steps, TRIALS, mode=mode, **kw)
+        res = R.run_many(problem, key, steps, TRIALS,
+                         policy=f"{trigger}({arg}={float(p)})")
         out.append((
             float(jnp.mean(jnp.sum(res.alphas, (1, 2)))),
             float(jnp.mean(res.J_traj[:, -1])),
@@ -46,8 +47,9 @@ def _j_at_budget(curve, budget):
 def run(verbose: bool = True) -> dict:
     problem = R.make_problem(FIG1_RIGHT, jax.random.key(10))
     key = jax.random.key(11)
-    gain_curve = _curve(problem, key, "gain_estimated", LAMBDAS, FIG1_RIGHT.steps)
-    norm_curve = _curve(problem, key, "grad_norm", MUS, FIG1_RIGHT.steps)
+    gain_curve = _curve(problem, key, "gain_estimated", "lam", LAMBDAS,
+                        FIG1_RIGHT.steps)
+    norm_curve = _curve(problem, key, "grad_norm", "mu", MUS, FIG1_RIGHT.steps)
 
     budgets = np.linspace(2, FIG1_RIGHT.steps * 2 * 0.9, 8)
     ratios = []

@@ -21,13 +21,13 @@ def run(verbose: bool = True) -> dict:
     problem = R.make_problem(FIG2_LEFT, jax.random.key(0))
     key = jax.random.key(1)
     rows = []
-    for name, kw in (
-        ("always", dict(mode="always")),
-        ("const λ=2", dict(mode="gain_exact", lam=LAM0)),
-        ("inv_t λ0=2", dict(mode="gain_exact", lam=LAM0, lam_decay="inv_t")),
-        ("geometric λ0=2", dict(mode="gain_exact", lam=LAM0, lam_decay="geometric")),
+    for name, policy in (
+        ("always", "always"),
+        ("const λ=2", f"gain_exact(lam={LAM0})"),
+        ("inv_t λ0=2", f"gain_exact(lam={LAM0},decay=inv_t)"),
+        ("geometric λ0=2", f"gain_exact(lam={LAM0},decay=geometric)"),
     ):
-        res = R.run_many(problem, key, STEPS, TRIALS, **kw)
+        res = R.run_many(problem, key, STEPS, TRIALS, policy=policy)
         rows.append({
             "schedule": name,
             "steady_J": float(jnp.mean(res.J_traj[:, -10:])),

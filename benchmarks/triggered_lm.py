@@ -1,10 +1,13 @@
 """Beyond-paper table: the gain trigger on a REAL architecture.
 
 Scaled-up version of the paper's experiment — reduced smollm trained on
-the synthetic bigram LM with m=4 agents, comparing triggers at matched
-λ/μ grids: final loss vs total gradient transmissions.  This is the
-framework-level generalization the paper flags as future work
-("other machine learning tasks beyond linear regression")."""
+the synthetic bigram LM with m=4 agents, comparing communication
+policies (repro.comm spec strings) at matched λ/μ grids: final loss vs
+total gradient transmissions and effective wire bytes (CommStats
+accounting).  Includes a chained ``topk|int8+ef`` policy — a wire format
+the legacy flag API could not express.  This is the framework-level
+generalization the paper flags as future work ("other machine learning
+tasks beyond linear regression")."""
 from __future__ import annotations
 
 import jax
@@ -13,7 +16,7 @@ import numpy as np
 
 from benchmarks.common import fmt_row, save_result
 from repro.configs import get_config, reduced
-from repro.configs.base import InputShape, TriggerConfig
+from repro.configs.base import InputShape
 from repro.core.api import init_train_state
 from repro.data import synthetic as D
 from repro.launch import steps as S
@@ -24,49 +27,53 @@ from repro.optim import optimizers as opt_lib
 STEPS = 30
 LAMS = [0.0, 0.002, 0.01, 0.05]
 MUS = [0.0, 1.0, 4.0, 16.0]
+# inexpressible in the legacy flag API: sparsify, then quantize survivors
+CHAINED = "gain_lookahead(lam=0.002)|topk(0.05)|int8+ef"
 
 
-def train(trigger: TriggerConfig, seed=0, steps=STEPS):
+def train(policy: str, seed=0, steps=STEPS):
     mesh = make_host_mesh()
     cfg = reduced(get_config("smollm-135m"))
     shape = InputShape("b", seq_len=32, global_batch=8, kind="train")
-    plan = S.plan_run(cfg, shape, mesh, trigger=trigger, lr=0.05, optimizer="sgd")
+    plan = S.plan_run(cfg, shape, mesh, comm=policy, lr=0.05, optimizer="sgd")
     jitted, *_ = S.build_train_step(mesh, plan, compute_dtype="float32")
     model = build(plan.cfg.replace(compute_dtype="float32"))
     params, _ = model.init(jax.random.key(seed), dtype=jnp.float32)
     opt = opt_lib.from_config(plan.train_cfg)
     state = init_train_state(params, opt, plan.train_cfg)
-    tx = 0.0
+    tx = wire = 0.0
     for step in range(steps):
         batch = D.lm_batch(cfg, shape, jax.random.key(1000 + step),
                            num_agents=plan.num_agents)
         state, m = jitted(state, batch)
         tx += float(m["num_tx"])
+        wire += float(m["wire_bytes"])
     # eval on held-out fresh batches
     losses = []
     for e in range(4):
         batch = D.lm_batch(cfg, shape, jax.random.key(9000 + e),
                            num_agents=plan.num_agents)
         losses.append(float(jitted(state, batch)[1]["loss"]))
-    return float(np.mean(losses)), tx
+    return float(np.mean(losses)), tx, wire
 
 
 def run(verbose: bool = True) -> dict:
     rows = []
-    for lam in LAMS:
-        loss, tx = train(TriggerConfig(kind="gain_lookahead", lam=lam))
-        rows.append({"scheme": "gain_lookahead", "param": lam,
-                     "eval_loss": loss, "total_tx": tx})
-    for mu in MUS:
-        loss, tx = train(TriggerConfig(kind="grad_norm", mu=mu))
-        rows.append({"scheme": "grad_norm", "param": mu,
-                     "eval_loss": loss, "total_tx": tx})
+    policies = (
+        [f"gain_lookahead(lam={lam})" for lam in LAMS]
+        + [f"grad_norm(mu={mu})" for mu in MUS]
+        + [CHAINED]
+    )
+    for policy in policies:
+        loss, tx, wire = train(policy)
+        rows.append({"policy": policy, "eval_loss": loss, "total_tx": tx,
+                     "wire_MB": wire / 1e6})
     payload = {"steps": STEPS, "rows": rows}
     if verbose:
-        print("scheme,param,eval_loss,total_tx")
+        print("policy,eval_loss,total_tx,wire_MB")
         for r in rows:
-            print(fmt_row(r["scheme"], r["param"], f"{r['eval_loss']:.4f}",
-                          f"{r['total_tx']:.0f}"))
+            print(fmt_row(r["policy"], f"{r['eval_loss']:.4f}",
+                          f"{r['total_tx']:.0f}", f"{r['wire_MB']:.3f}"))
     save_result("triggered_lm", payload)
     return payload
 

@@ -25,8 +25,9 @@ print(f"J(w0)={J0:.3f}, J*={problem.J_star():.3f}, rho={problem.rho():.3f}\n")
 
 print(" lam | final J | total tx | Thm2 budget | within budget")
 for lam in (0.0, 0.1, 0.5, 2.0):
+    # policies are repro.comm spec strings: trigger(args)|compressors
     res = R.run_many(problem, jax.random.key(1), cfg.steps, 256,
-                     mode="gain_estimated", lam=lam)
+                     policy=f"gain_estimated(lam={lam})")
     finalJ = float(jnp.mean(res.J_traj[:, -1]))
     any_tx = jnp.sum(jnp.max(res.alphas, axis=2), axis=1)  # Thm 2's counter
     budget = T.thm2_comm_bound(J0, problem.J_star(), lam) if lam else float("inf")

@@ -1,0 +1,71 @@
+"""repro.comm — the composable communication-policy stack.
+
+Public surface::
+
+    from repro.comm import CommPolicy, CommStats
+
+    policy = CommPolicy.parse("gain_lookahead(lam=0.1)|topk(0.05)|int8+ef")
+    str(policy)            # canonical spec string (round-trips)
+    policy.wire_ratio      # 0.0625 — bytes relative to dense fp32
+    per_agent = CommPolicy.parse("always|int8 ; never")   # heterogeneous
+
+Stage registries (``TRIGGERS``, ``COMPRESSORS``) make new triggers and
+wire formats addable without touching the train step — register a
+builder and every spec string, CLI flag, and benchmark can name it.
+See DESIGN.md for the layering and the wire-byte model.
+"""
+from repro.comm.compressors import (
+    COMPRESSORS,
+    Compressor,
+    CompressorChain,
+    WireFormat,
+    build_compressor,
+    chain_from_specs,
+)
+from repro.comm.error_feedback import ef_add, ef_init, ef_residual
+from repro.comm.policy import (
+    CommPolicy,
+    from_train_config,
+    normalize_policy,
+    resolve_policy,
+    trigger_spec_from_config,
+    with_kernel,
+)
+from repro.comm.registry import Registry, StageSpec
+from repro.comm.stats import CommStats, comm_stats, dense_bits, structural_bytes
+from repro.comm.triggers import (
+    TRIGGERS,
+    TriggerContext,
+    TriggerFn,
+    TriggerOutput,
+    build_trigger,
+)
+
+__all__ = [
+    "COMPRESSORS",
+    "CommPolicy",
+    "CommStats",
+    "Compressor",
+    "CompressorChain",
+    "Registry",
+    "StageSpec",
+    "TRIGGERS",
+    "TriggerContext",
+    "TriggerFn",
+    "TriggerOutput",
+    "WireFormat",
+    "build_compressor",
+    "build_trigger",
+    "chain_from_specs",
+    "comm_stats",
+    "dense_bits",
+    "ef_add",
+    "ef_init",
+    "ef_residual",
+    "from_train_config",
+    "normalize_policy",
+    "resolve_policy",
+    "structural_bytes",
+    "trigger_spec_from_config",
+    "with_kernel",
+]

@@ -1,0 +1,177 @@
+"""Compressor stage — the wire format of a transmitted gradient.
+
+A compressor is a *fake-compress* map ``x → x̂`` (the tensor the receiver
+reconstructs; shapes are preserved so SPMD aggregation stays a single
+all-reduce) plus a wire-format transform used for byte accounting.
+Compressors CHAIN: ``topk(0.05)|int8`` sparsifies then quantizes the
+surviving values — the composition the legacy mutually-exclusive
+``quantize_grads``/``topk_frac`` flags could not express.
+
+Wire-byte model (DESIGN.md §2): a dense gradient entry costs its native
+dtype width in value bits (32 for fp32, 16 for bf16) and 0 index bits.
+Each compressor transforms that ``WireFormat``:
+
+* ``int8``    value_bits → 8 (symmetric per-tensor scale; the O(1)
+              scale itself is ignored)
+* ``topk(f)`` kept fraction ×= f, and each survivor now needs a 32-bit
+              index (sparse coordinate format, Aji & Heafield 2017)
+
+``ratio = frac × (value_bits + index_bits) / dense_bits`` — so for fp32
+gradients ``int8`` alone is 0.25, ``topk(0.05)`` alone is 0.10, and
+chained ``topk(0.05)|int8`` is ``0.05 × (8+32)/32 ≈ 0.0625``; for bf16
+gradients ``int8`` is 0.5.  Effective bytes on the wire are
+``structural_bytes × ratio × comm_rate`` (see repro.comm.stats).
+
+The numerical kernels (int8 quant, top-k threshold) migrated here from
+``repro.core.aggregation``, which still re-exports them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.registry import Registry, StageSpec
+
+COMPRESSORS = Registry("compressor")
+
+
+# ----------------------------------------------------------------------
+# Numerical kernels (migrated from repro.core.aggregation)
+# ----------------------------------------------------------------------
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor int8: returns (q, scale). Zero-safe."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def fake_quantize(x: jax.Array):
+    """Quantize→dequantize round trip (what the receiver reconstructs)."""
+    q, s = quantize_int8(x)
+    return dequantize_int8(q, s, x.dtype)
+
+
+def topk_sparsify(x: jax.Array, frac: float):
+    """Keep the top-``frac`` entries of |x| per tensor, zero the rest —
+    the sparse-communication format of Aji & Heafield (2017), one of the
+    compression families the paper positions against (Remark 3).
+
+    Returns (sparse tensor, kept count).  Wire bytes for a kept entry are
+    (index + value); see ``WireFormat`` for the accounting."""
+    flat = x.reshape(-1)
+    k = max(1, int(frac * flat.size))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    return (flat * mask).reshape(x.shape).astype(x.dtype), jnp.sum(mask)
+
+
+@dataclass(frozen=True)
+class WireFormat:
+    """Per-entry cost of one transmitted gradient tensor.
+
+    ``dense_bits`` is the native per-entry width of the uncompressed
+    gradient (32 for fp32, 16 for bf16): the ratio baseline, so int8 on
+    bf16 gradients is 0.5, not 0.25.
+    """
+
+    value_bits: float = 32.0
+    index_bits: float = 0.0
+    frac: float = 1.0  # fraction of entries actually sent
+    dense_bits: float = 32.0
+
+    @property
+    def ratio(self) -> float:
+        """Bytes relative to the dense tensor at its native dtype."""
+        return self.frac * (self.value_bits + self.index_bits) / self.dense_bits
+
+
+@dataclass(frozen=True)
+class Compressor:
+    """A built compressor stage: fake-compress fn + wire transform."""
+
+    spec: StageSpec
+    compress: Callable[[jax.Array], jax.Array]      # one agent's tensor
+    wire: Callable[[WireFormat], WireFormat]
+
+
+def build_compressor(spec: StageSpec) -> Compressor:
+    entry = COMPRESSORS.get(spec.name)
+    return entry.builder(entry.full_args(spec), spec)
+
+
+@COMPRESSORS.register("identity", doc="dense fp32 wire (no-op)")
+def _identity(args, spec):
+    return Compressor(spec, compress=lambda x: x, wire=lambda w: w)
+
+
+@COMPRESSORS.register("int8", doc="symmetric per-tensor int8 values")
+def _int8(args, spec):
+    return Compressor(
+        spec,
+        compress=fake_quantize,
+        wire=lambda w: replace(w, value_bits=min(w.value_bits, 8.0)),
+    )
+
+
+@COMPRESSORS.register("topk", params=(("frac", 0.01),),
+                      doc="keep the top-frac entries of |x| per tensor")
+def _topk(args, spec):
+    frac = float(args["frac"])
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(f"topk frac must be in (0, 1], got {frac}")
+    return Compressor(
+        spec,
+        compress=lambda x: topk_sparsify(x, frac)[0],
+        wire=lambda w: replace(w, frac=w.frac * frac, index_bits=32.0),
+    )
+
+
+# ----------------------------------------------------------------------
+
+
+class CompressorChain:
+    """Ordered composition of compressor stages (left applied first)."""
+
+    def __init__(self, compressors: Sequence[Compressor]):
+        self.stages: Tuple[Compressor, ...] = tuple(compressors)
+
+    def __bool__(self) -> bool:
+        return bool(self.stages)
+
+    def compress(self, x: jax.Array) -> jax.Array:
+        """Fake-compress ONE AGENT's tensor (no leading agent axis)."""
+        for c in self.stages:
+            x = c.compress(x)
+        return x
+
+    def compress_tree(self, tree):
+        """Fake-compress a per-agent gradient pytree."""
+        return jax.tree_util.tree_map(self.compress, tree)
+
+    def wire_format(self, dense_bits: float = 32.0) -> WireFormat:
+        fmt = WireFormat(value_bits=dense_bits, dense_bits=dense_bits)
+        for c in self.stages:
+            fmt = c.wire(fmt)
+        return fmt
+
+    @property
+    def ratio(self) -> float:
+        """Ratio for fp32 gradients (the common case)."""
+        return self.ratio_for(32.0)
+
+    def ratio_for(self, dense_bits: float) -> float:
+        """Ratio against a dense tensor of ``dense_bits`` per entry."""
+        return self.wire_format(dense_bits).ratio
+
+
+def chain_from_specs(specs: Sequence[StageSpec]) -> CompressorChain:
+    return CompressorChain([build_compressor(s) for s in specs])

@@ -1,0 +1,49 @@
+"""Error-feedback stage — local residual memory for biased compression.
+
+Compression (int8, top-k) is biased; error feedback keeps the residual
+``g − C(g)`` locally and adds it to the next round's gradient, restoring
+the convergence guarantees lost to the bias (Seide et al. 2014; Stich et
+al. 2018 — the families the paper positions against in Remark 3).
+
+The residual is only retained when the agent actually TRANSMITTED the
+compressed tensor: a silent agent sent nothing — eq. (10) drops its
+update entirely (the paper's semantics), its gradient is recomputed
+fresh next round, and only the compression error of a *sent* tensor is
+owed to the wire.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params, num_agents: int):
+    """Zero residual memory: one slot per agent per parameter leaf."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros((num_agents,) + p.shape, p.dtype), params
+    )
+
+
+def ef_add(grads, ef_memory):
+    """Fold the carried residual into this round's gradients (no-op if None)."""
+    if ef_memory is None:
+        return grads
+    return jax.tree_util.tree_map(lambda g, m: g + m, grads, ef_memory)
+
+
+def ef_residual(grads, sent, alphas):
+    """New memory: (g − C(g)) for transmitting agents, 0 for silent ones.
+
+    ``alphas`` is the (A,) transmit-decision vector matching the leaves'
+    leading agent axis, or a scalar when ``grads``/``sent`` are a single
+    agent's tree (the heterogeneous per-agent path).
+    """
+    def mask(g):
+        a = alphas.astype(g.dtype)
+        if a.ndim == 0:
+            return a
+        return a.reshape((-1,) + (1,) * (g.ndim - 1))
+
+    return jax.tree_util.tree_map(
+        lambda g, s: (g - s) * mask(g), grads, sent
+    )

@@ -1,0 +1,244 @@
+"""CommPolicy — the paper's communication decision as a first-class value.
+
+A policy composes three pluggable, registry-backed stages:
+
+* **Trigger** (repro.comm.triggers) — decide locally whether this
+  round's gradient is informative enough to transmit (paper eq. 11 and
+  its 28/30/31 family).
+* **Compressor chain** (repro.comm.compressors) — the wire format of
+  what IS sent; stages compose (``topk(0.05)|int8``), unlike the legacy
+  mutually-exclusive ``quantize_grads``/``topk_frac`` flags.
+* **ErrorFeedback** (repro.comm.error_feedback) — optional residual
+  memory correcting the compression bias.
+
+Policies are frozen, hashable values that round-trip through the compact
+spec-string syntax (repro.comm.spec), so configs, CLIs, and benchmarks
+all speak one format::
+
+    CommPolicy.parse("gain_lookahead(lam=0.1,decay=inv_t)|topk(0.05)|int8+ef")
+
+Per-agent *heterogeneous* networks are a tuple of policies — parsed from
+a ";"-separated spec or a list of specs — letting e.g. a bandwidth-poor
+agent run ``gain_lookahead(lam=0.3)|topk(0.01)`` while its peers run
+dense ``always``.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple, Union
+
+from repro.comm import spec as spec_mod
+from repro.comm.compressors import COMPRESSORS, CompressorChain, chain_from_specs
+from repro.comm.registry import StageSpec
+from repro.comm.triggers import TRIGGERS, TriggerContext, TriggerFn, build_trigger
+
+# what CLIs/configs may hand us wherever a policy is accepted
+PolicyLike = Union["CommPolicy", str]
+PoliciesLike = Union[PolicyLike, Sequence[PolicyLike]]
+
+
+@dataclass(frozen=True)
+class CommPolicy:
+    trigger: StageSpec = field(
+        default_factory=lambda: StageSpec("gain_lookahead")
+    )
+    compressors: Tuple[StageSpec, ...] = ()
+    error_feedback: bool = False
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def parse_one(cls, text: Union[str, "CommPolicy"]) -> "CommPolicy":
+        """Parse exactly one policy (rejects ";" heterogeneous specs)."""
+        if isinstance(text, CommPolicy):
+            return text
+        parts = spec_mod.split_multi(text)
+        if not parts:
+            raise ValueError(f"empty policy spec {text!r}")
+        if len(parts) != 1:
+            raise ValueError(
+                f"expected a single policy, got {len(parts)} in {text!r}"
+            )
+        trig, comps, ef = spec_mod.parse_policy(parts[0])
+        return cls(trigger=trig, compressors=comps, error_feedback=ef)
+
+    @classmethod
+    def parse(cls, text: PoliciesLike) -> Union["CommPolicy", Tuple["CommPolicy", ...]]:
+        """Parse a spec. A ";"-separated string (or a sequence) yields a
+        tuple of per-agent policies; otherwise a single CommPolicy."""
+        if isinstance(text, CommPolicy):
+            return text
+        if isinstance(text, (list, tuple)):
+            if not text:
+                raise ValueError("empty policy list")
+            return tuple(cls.parse_one(t) for t in text)
+        parts = spec_mod.split_multi(text)
+        if not parts:
+            raise ValueError(f"empty policy spec {text!r}")
+        if len(parts) > 1:
+            return tuple(cls.parse_one(p) for p in parts)
+        return cls.parse_one(parts[0])
+
+    @classmethod
+    def of(cls, trigger: str, *compressors: str, error_feedback: bool = False,
+           **trigger_args) -> "CommPolicy":
+        """Programmatic construction with registry validation."""
+        return cls(
+            trigger=TRIGGERS.spec(trigger, **trigger_args),
+            compressors=tuple(
+                spec_mod._parse_stage(c, COMPRESSORS) for c in compressors
+            ),
+            error_feedback=error_feedback,
+        )
+
+    # ------------------------------------------------------------------
+    # rendering
+    # ------------------------------------------------------------------
+    def to_spec(self) -> str:
+        return spec_mod.render_policy(
+            self.trigger, self.compressors, self.error_feedback
+        )
+
+    def __str__(self) -> str:
+        return self.to_spec()
+
+    # ------------------------------------------------------------------
+    # stage builders
+    # ------------------------------------------------------------------
+    def build_trigger(self, *, loss_fn=None, probe_eps: float = 1e-2,
+                      oracle=None) -> TriggerFn:
+        return build_trigger(
+            self.trigger,
+            TriggerContext(loss_fn=loss_fn, probe_eps=probe_eps, oracle=oracle),
+        )
+
+    def chain(self) -> CompressorChain:
+        return chain_from_specs(self.compressors)
+
+    @property
+    def wire_ratio(self) -> float:
+        """Wire bytes relative to dense fp32 (1.0 when uncompressed).
+        For other gradient dtypes use ``chain().ratio_for(dense_bits)``."""
+        return self.chain().ratio if self.compressors else 1.0
+
+    @property
+    def needs_ef(self) -> bool:
+        return self.error_feedback and bool(self.compressors)
+
+
+# ----------------------------------------------------------------------
+# Legacy bridge: the scattered TrainConfig/TriggerConfig flags
+# ----------------------------------------------------------------------
+
+_KIND_TO_TRIGGER = {
+    "gain_exact": "gain_exact",
+    "gain_estimated": "gain_estimated",
+    "gain_lookahead": "gain_lookahead",
+    "gain_quadratic": "gain_quadratic",
+    "grad_norm": "grad_norm",
+    "periodic": "periodic",
+    "always": "always",
+    "never": "never",
+}
+
+
+def trigger_spec_from_config(trig_cfg, *, use_kernel: bool = False) -> StageSpec:
+    """TriggerConfig → registry StageSpec (the documented kinds all resolve)."""
+    name = _KIND_TO_TRIGGER.get(trig_cfg.kind)
+    if name is None:
+        raise ValueError(
+            f"unknown trigger kind {trig_cfg.kind!r} "
+            f"(registered: {', '.join(TRIGGERS.names())})"
+        )
+    kw = {}
+    if name in ("gain_exact", "gain_estimated", "gain_lookahead", "gain_quadratic"):
+        kw = dict(lam=trig_cfg.lam, decay=trig_cfg.lam_decay,
+                  decay_rate=trig_cfg.lam_decay_rate)
+    elif name == "grad_norm":
+        kw = dict(mu=trig_cfg.mu)
+    elif name == "periodic":
+        kw = dict(period=trig_cfg.period)
+    if use_kernel and name in ("gain_lookahead", "gain_quadratic", "grad_norm"):
+        kw["kernel"] = True
+    return TRIGGERS.spec(name, **kw)
+
+
+def from_train_config(cfg, *, use_kernel: bool = False) -> CommPolicy:
+    """Build a CommPolicy from the legacy TrainConfig flag set.
+
+    Preserves the seed's precedence: ``quantize_grads`` wins over
+    ``topk_frac`` (they were mutually exclusive ``if/elif`` branches).
+    """
+    comps: Tuple[StageSpec, ...] = ()
+    if cfg.quantize_grads:
+        comps = (COMPRESSORS.spec("int8"),)
+    elif cfg.topk_frac > 0:
+        comps = (COMPRESSORS.spec("topk", frac=cfg.topk_frac),)
+    return CommPolicy(
+        trigger=trigger_spec_from_config(cfg.trigger, use_kernel=use_kernel),
+        compressors=comps,
+        error_feedback=bool(cfg.error_feedback and comps),
+    )
+
+
+def with_kernel(policy: Union[CommPolicy, Tuple[CommPolicy, ...]]
+                ) -> Union[CommPolicy, Tuple[CommPolicy, ...]]:
+    """Enable the trigger-level ``kernel=true`` option wherever the
+    policy's trigger supports it (the legacy ``use_kernel`` spelling)."""
+    import dataclasses
+
+    if isinstance(policy, tuple):
+        return tuple(with_kernel(p) for p in policy)
+    entry = TRIGGERS.get(policy.trigger.name)
+    if not any(p == "kernel" for p, _ in entry.params):
+        return policy
+    trig = entry.resolve((), {**policy.trigger.as_dict(), "kernel": True})
+    return dataclasses.replace(policy, trigger=trig)
+
+
+def resolve_policy(cfg, policy: Optional[PoliciesLike] = None, *,
+                   use_kernel: bool = False,
+                   ) -> Union[CommPolicy, Tuple[CommPolicy, ...]]:
+    """The one resolution order everywhere: explicit policy arg >
+    ``cfg.comm`` spec > legacy TrainConfig flags (deprecated).
+
+    ``use_kernel=True`` (the deprecated train-step-wide spelling) turns
+    on the trigger-level ``kernel`` option of whichever policy wins."""
+    if policy is not None:
+        parsed = CommPolicy.parse(policy)
+        return with_kernel(parsed) if use_kernel else parsed
+    comm = getattr(cfg, "comm", None)
+    if comm is not None:
+        parsed = CommPolicy.parse(comm)
+        return with_kernel(parsed) if use_kernel else parsed
+    if cfg.quantize_grads or cfg.topk_frac > 0 or cfg.error_feedback:
+        warnings.warn(
+            "TrainConfig.quantize_grads/topk_frac/error_feedback are "
+            "deprecated; use a CommPolicy spec, e.g. "
+            'TrainConfig(comm="gain_lookahead(lam=0.1)|topk(0.05)|int8+ef")',
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return from_train_config(cfg, use_kernel=use_kernel)
+
+
+def normalize_policy(policy: Union[CommPolicy, Tuple[CommPolicy, ...]],
+                     num_agents: int) -> Union[CommPolicy, Tuple[CommPolicy, ...]]:
+    """Validate a per-agent list against the agent count, then collapse
+    trivial tuples to the homogeneous fast path.  (Length is checked
+    before collapsing so an N≠num_agents list of *identical* specs is
+    still rejected — it is the same typo as a mismatched mixed list.)"""
+    if isinstance(policy, CommPolicy):
+        return policy
+    if not policy:
+        raise ValueError("empty policy list")
+    if len(policy) > 1 and len(policy) != num_agents:
+        raise ValueError(
+            f"heterogeneous policy list has {len(policy)} entries "
+            f"but num_agents={num_agents}"
+        )
+    if len(set(policy)) == 1:
+        return policy[0]
+    return tuple(policy)

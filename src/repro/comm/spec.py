@@ -1,0 +1,125 @@
+"""Spec-string syntax — one compact format for configs, CLIs, benchmarks.
+
+Grammar (whitespace-insensitive)::
+
+    policies   := policy (";" policy)*          # ";" = per-agent list
+    policy     := trigger ("|" compressor)*
+    trigger    := stage
+    compressor := stage ["+ef"] | "ef"          # "+ef" enables error feedback
+                                               # (requires ≥1 compressor —
+                                               # EF of an uncompressed
+                                               # gradient is a no-op)
+    stage      := name ["(" arg ("," arg)* ")"]
+    arg        := [key "="] value               # positional args resolve by
+                                               # the registry's param order
+
+Values are parsed as bool (``true``/``false``), int, float, or bare
+string.  Examples::
+
+    gain_lookahead(lam=0.1,decay=inv_t)|topk(0.05)|int8+ef
+    grad_norm(mu=4.0,kernel=true)
+    always|int8 ; never                        # heterogeneous, 2 agents
+
+Rendering is canonical (named args only, registry declaration order,
+defaults omitted), so ``parse → str → parse`` is the identity.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, List, Tuple
+
+from repro.comm.compressors import COMPRESSORS
+from repro.comm.registry import StageSpec
+from repro.comm.triggers import TRIGGERS
+
+_STAGE_RE = re.compile(r"^([A-Za-z_]\w*)\s*(?:\((.*)\))?$", re.S)
+
+
+def _parse_value(tok: str) -> Any:
+    tok = tok.strip()
+    low = tok.lower()
+    if low == "true":
+        return True
+    if low == "false":
+        return False
+    try:
+        return int(tok)
+    except ValueError:
+        pass
+    try:
+        return float(tok)
+    except ValueError:
+        pass
+    return tok
+
+
+def _parse_stage(text: str, registry) -> StageSpec:
+    m = _STAGE_RE.match(text.strip())
+    if not m:
+        raise ValueError(f"malformed stage {text!r}")
+    name, argstr = m.group(1), m.group(2)
+    pos: List[Any] = []
+    kw = {}
+    if argstr and argstr.strip():
+        for piece in argstr.split(","):
+            piece = piece.strip()
+            if not piece:
+                raise ValueError(f"empty argument in stage {text!r}")
+            if "=" in piece:
+                k, v = piece.split("=", 1)
+                if not v.strip():
+                    raise ValueError(
+                        f"empty value for {k.strip()!r} in stage {text!r}"
+                    )
+                kw[k.strip()] = _parse_value(v)
+            else:
+                if kw:
+                    raise ValueError(
+                        f"positional arg after keyword arg in {text!r}"
+                    )
+                pos.append(_parse_value(piece))
+    return registry.get(name).resolve(tuple(pos), kw)
+
+
+def parse_policy(text: str) -> Tuple[StageSpec, Tuple[StageSpec, ...], bool]:
+    """One policy string → (trigger, compressors, error_feedback)."""
+    stages = [s.strip() for s in text.split("|")]
+    if not stages or not stages[0]:
+        raise ValueError(f"empty policy spec {text!r}")
+    trigger = _parse_stage(stages[0], TRIGGERS)
+    compressors: List[StageSpec] = []
+    ef = False
+    for comp in stages[1:]:
+        if ef:
+            raise ValueError(
+                f"error feedback must be the final stage marker: {text!r}"
+            )
+        if comp == "ef":
+            ef = True
+            continue
+        if comp.endswith("+ef"):
+            comp, ef = comp[: -len("+ef")].strip(), True
+        compressors.append(_parse_stage(comp, COMPRESSORS))
+    if ef and not compressors:
+        raise ValueError(
+            f"error feedback without a compressor stage is a no-op "
+            f"(the residual of an uncompressed gradient is zero): {text!r}"
+        )
+    return trigger, tuple(compressors), ef
+
+
+def render_policy(trigger: StageSpec, compressors: Tuple[StageSpec, ...],
+                  error_feedback: bool) -> str:
+    parts = [TRIGGERS.render(trigger)]
+    parts += [COMPRESSORS.render(c) for c in compressors]
+    out = "|".join(parts)
+    if error_feedback and compressors:
+        # a compressor-less EF flag is a no-op (needs_ef is False) and
+        # is rejected by the parser, so it is not rendered either
+        out += "+ef"
+    return out
+
+
+def split_multi(text: str) -> List[str]:
+    """Split a (possibly per-agent) spec on ";"."""
+    return [p.strip() for p in text.split(";") if p.strip()]

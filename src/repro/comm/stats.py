@@ -1,0 +1,78 @@
+"""CommStats — unified communication accounting for one training round.
+
+Owns the wire-byte model so benchmarks stop recomputing it ad hoc:
+
+    effective bytes = structural bytes × compression ratio × comm rate
+
+where *structural bytes* are the dense bytes of one agent's gradient
+tree, *compression ratio* comes from the policy's compressor chain
+(repro.comm.compressors.WireFormat), and *comm rate* is the trigger's
+per-round transmit fraction.  Under SPMD the masked mean is one
+all-reduce regardless of who transmits — the EFFECTIVE bytes (what a
+real network would carry) are what the paper's guarantees bound.  See
+DESIGN.md §2 "Communication accounting under SPMD".
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class CommStats(NamedTuple):
+    """Per-round communication record (all f32 scalars, jit-friendly)."""
+
+    comm_rate: jax.Array   # mean_i alpha_i            (per-round rate)
+    any_tx: jax.Array      # max_i alpha_i             (Thm 2's counter)
+    num_tx: jax.Array      # sum_i alpha_i
+    mean_gain: jax.Array   # mean of per-agent estimated gains
+    wire_bytes: jax.Array  # effective bytes on the wire this round
+
+
+def structural_bytes(grads, *, per_agent: bool = True) -> int:
+    """Dense bytes of a gradient pytree (a Python int — static at trace).
+
+    With ``per_agent=True`` the leaves carry a leading agent axis that is
+    excluded: the result is ONE agent's dense payload.
+    """
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(grads):
+        n = leaf.size
+        if per_agent:
+            n //= leaf.shape[0]
+        total += int(n) * leaf.dtype.itemsize
+    return total
+
+
+def dense_bits(grads) -> float:
+    """Size-weighted native bits per gradient entry (32 for fp32 trees;
+    exact for the uniform-dtype trees produced in practice).  The ratio
+    baseline for ``CompressorChain.ratio_for``."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    entries = sum(l.size for l in leaves)
+    nbytes = sum(l.size * l.dtype.itemsize for l in leaves)
+    return 8.0 * nbytes / max(entries, 1)
+
+
+def comm_stats(alphas: jax.Array, gains: jax.Array, *,
+               structural: int, ratios: Sequence[float]) -> CommStats:
+    """Assemble the round record from per-agent decisions.
+
+    ``ratios`` is one wire-compression ratio per agent (a single-element
+    sequence broadcasts — the homogeneous case).
+    """
+    ratios = tuple(float(r) for r in ratios)
+    if len(ratios) == 1:
+        per_agent_bytes = structural * ratios[0] * jnp.sum(alphas)
+    else:
+        per_agent_bytes = structural * jnp.sum(
+            alphas * jnp.asarray(ratios, jnp.float32)
+        )
+    return CommStats(
+        comm_rate=jnp.mean(alphas),
+        any_tx=jnp.max(alphas),
+        num_tx=jnp.sum(alphas),
+        mean_gain=jnp.mean(gains),
+        wire_bytes=per_agent_bytes.astype(jnp.float32),
+    )

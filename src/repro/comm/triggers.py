@@ -1,0 +1,274 @@
+"""Trigger stage — the paper's transmit decision as a registry family.
+
+A trigger decides, from an agent's *local* information only, whether its
+gradient is informative enough to transmit (paper eq. 11).  Every
+trigger returns ``(alpha, gain)`` where ``alpha ∈ {0.0, 1.0}`` is the
+transmit decision and ``gain`` is the (estimated) performance gain
+``J(w − ε g) − J(w)`` (negative = improvement).  Triggers are pure
+functions of local data, so under ``vmap`` over agents each device group
+evaluates its own trigger with no extra communication — exactly the
+paper's decentralized scheme.
+
+Registered triggers (spec-string names):
+
+* ``gain_lookahead(lam,decay,decay_rate,kernel)`` — generalization of
+  eq. (30) to arbitrary losses: estimate the gain by *re-evaluating the
+  local empirical loss* at the probe point ``w − ε g``.  For linear
+  regression this equals eq. (30) exactly (the empirical loss is
+  quadratic, so the lookahead difference *is* the quadratic form
+  ``−ε gᵀ[I − (ε/2)Ĥ]g``); for non-quadratic losses it is the natural
+  extension.  Costs one extra forward pass.
+* ``gain_quadratic(lam,decay,decay_rate,kernel)`` — the literal eq. (28)
+  for any smooth loss: ``ΔJ ≈ −ε gᵀg + (ε²/2) gᵀHg`` with the
+  Hessian-vector product computed by forward-over-reverse ``jax.jvp`` of
+  the gradient.  Costs one HVP.
+* ``gain_estimated(lam,decay,decay_rate)`` — the paper's eq. (30)
+  *linear-regression specialization*: data-only quadratic gain from the
+  local sample batch ``(xs, ys)``; params must be the flat weight
+  vector.
+* ``gain_exact(lam,decay,decay_rate)`` — eq. (28) with the *true*
+  distribution; needs the problem oracle ``(Σ, w*)`` passed as
+  ``oracle=`` at build time.
+* ``grad_norm(mu,kernel)`` — the literature baseline, eq. (31):
+  transmit iff ``‖g‖² ≥ μ``.
+* ``periodic(period)`` / ``always`` / ``never`` — scheduling baselines.
+
+The fused reduction ``(gᵀg, gᵀHg)`` over flattened gradients is the
+technique's per-step hot spot at scale; ``repro.kernels.gain_reduce``
+provides the Pallas TPU kernel for it, enabled *per trigger* with the
+``kernel=true`` spec argument (the old train-step-wide ``use_kernel``
+flag maps onto it).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.registry import Registry, StageSpec
+from repro.utils.tree import tree_add_scaled, tree_norm_sq, tree_vdot
+
+
+class TriggerOutput(NamedTuple):
+    alpha: jax.Array  # f32 scalar in {0., 1.}
+    gain: jax.Array   # f32 scalar: estimated J(w - eps g) - J(w)
+
+
+# A trigger maps (params, grad, batch, local_loss, step) -> TriggerOutput.
+TriggerFn = Callable[..., TriggerOutput]
+
+TRIGGERS = Registry("trigger")
+
+# shared parameter tables (order = positional-arg order in specs)
+_GAIN_PARAMS = (("lam", 0.0), ("decay", "const"), ("decay_rate", 0.95))
+_KERNEL = (("kernel", False),)
+
+
+class TriggerContext(NamedTuple):
+    """Build-time dependencies a trigger may need (all optional)."""
+
+    loss_fn: Optional[Callable] = None   # local empirical loss(params, batch)
+    probe_eps: float = 1e-2              # ε of the probe step w − ε g
+    oracle: Optional[tuple] = None       # (Σ, w*) for gain_exact
+
+
+def build_trigger(spec: StageSpec, ctx: TriggerContext = TriggerContext()) -> TriggerFn:
+    """Resolve a trigger StageSpec against the registry."""
+    entry = TRIGGERS.get(spec.name)
+    return entry.builder(entry.full_args(spec), ctx)
+
+
+def _as_alpha(pred) -> jax.Array:
+    return pred.astype(jnp.float32)
+
+
+def lam_schedule(lam: float, decay: str, decay_rate: float):
+    """λ_k schedule (paper's diminishing-λ remark, eq. 23)."""
+    lam = jnp.float32(lam)
+    if decay == "const":
+        return lambda step: lam
+    if decay == "inv_t":
+        return lambda step: lam / (1.0 + jnp.asarray(step, jnp.float32))
+    if decay == "geometric":
+        rate = jnp.float32(decay_rate)
+        return lambda step: lam * rate ** jnp.asarray(step, jnp.float32)
+    raise ValueError(f"unknown lam decay {decay!r}")
+
+
+def _lam_at(args):
+    return lam_schedule(args["lam"], args["decay"], args["decay_rate"])
+
+
+@TRIGGERS.register("always", doc="dense baseline: every agent transmits")
+def _always(args, ctx):
+    def trig(params, grad, batch, local_loss, step):
+        del params, batch, step
+        return TriggerOutput(jnp.float32(1.0), jnp.float32(0.0) * local_loss)
+    return trig
+
+
+@TRIGGERS.register("never", doc="silent baseline: nothing transmits")
+def _never(args, ctx):
+    def trig(params, grad, batch, local_loss, step):
+        del params, batch, step
+        return TriggerOutput(jnp.float32(0.0), jnp.float32(0.0) * local_loss)
+    return trig
+
+
+@TRIGGERS.register("periodic", params=(("period", 1),),
+                   doc="transmit every `period` steps")
+def _periodic(args, ctx):
+    period = max(int(args["period"]), 1)
+
+    def trig(params, grad, batch, local_loss, step):
+        del params, batch, local_loss
+        return TriggerOutput(_as_alpha((step % period) == 0), jnp.float32(0.0))
+    return trig
+
+
+@TRIGGERS.register("grad_norm", params=(("mu", 0.0),) + _KERNEL,
+                   doc="eq. (31): transmit iff ||g||^2 >= mu")
+def _grad_norm(args, ctx):
+    mu = jnp.float32(args["mu"])
+    use_kernel = bool(args["kernel"])
+    eps = jnp.float32(ctx.probe_eps)
+
+    def trig(params, grad, batch, local_loss, step):
+        del params, batch, local_loss, step
+        gsq = _norm_sq(grad, use_kernel)
+        # report the small-ε proxy gain −ε‖g‖² for logging parity
+        return TriggerOutput(_as_alpha(gsq >= mu), -eps * gsq)
+    return trig
+
+
+@TRIGGERS.register("gain_lookahead", params=_GAIN_PARAMS + _KERNEL,
+                   doc="eq. (11) with gain = loss(w - eps g) - loss(w)")
+def _gain_lookahead(args, ctx):
+    if ctx.loss_fn is None:
+        raise ValueError("gain_lookahead trigger needs loss_fn")
+    loss_fn = ctx.loss_fn
+    lam_at = _lam_at(args)
+    eps = jnp.float32(ctx.probe_eps)
+
+    def trig(params, grad, batch, local_loss, step):
+        from repro.sharding.constraint import constrain_params
+
+        # probe params are per-agent under vmap — pin to model-axis
+        # sharding for the same reason as the grads (see core.api)
+        probe = constrain_params(tree_add_scaled(params, grad, -eps), "")
+        gain = loss_fn(probe, batch) - local_loss
+        return TriggerOutput(
+            _as_alpha(gain <= -lam_at(step)), gain.astype(jnp.float32)
+        )
+    return trig
+
+
+@TRIGGERS.register("gain_quadratic", params=_GAIN_PARAMS + _KERNEL,
+                   doc="eq. (28) for any smooth loss via HVP")
+def _gain_quadratic(args, ctx):
+    if ctx.loss_fn is None:
+        raise ValueError("gain_quadratic trigger needs loss_fn")
+    loss_fn = ctx.loss_fn
+    lam_at = _lam_at(args)
+    eps = jnp.float32(ctx.probe_eps)
+    use_kernel = bool(args["kernel"])
+
+    def trig(params, grad, batch, local_loss, step):
+        del local_loss
+        grad_fn = lambda p: jax.grad(loss_fn)(p, batch)
+        # H g via forward-over-reverse; both terms fused when the
+        # Pallas kernel path is enabled.
+        _, hg = jax.jvp(grad_fn, (params,), (grad,))
+        if use_kernel:
+            gsq, ghg = _fused_gain_terms(grad, hg)
+        else:
+            gsq, ghg = tree_norm_sq(grad), tree_vdot(grad, hg)
+        gain = -eps * gsq + 0.5 * eps * eps * ghg
+        return TriggerOutput(_as_alpha(gain <= -lam_at(step)), gain)
+    return trig
+
+
+@TRIGGERS.register("gain_estimated", params=_GAIN_PARAMS,
+                   doc="eq. (30): data-estimated quadratic gain (linreg)")
+def _gain_estimated(args, ctx):
+    lam_at = _lam_at(args)
+    eps = jnp.float32(ctx.probe_eps)
+
+    def trig(params, grad, batch, local_loss, step):
+        del local_loss
+        xs = batch[0] if isinstance(batch, (tuple, list)) else batch["xs"]
+        gain = linreg_gain_estimated(params, grad, eps, xs)
+        return TriggerOutput(
+            _as_alpha(gain <= -lam_at(step)), gain.astype(jnp.float32)
+        )
+    return trig
+
+
+@TRIGGERS.register("gain_exact", params=_GAIN_PARAMS,
+                   doc="eq. (28) with the true distribution (needs oracle)")
+def _gain_exact(args, ctx):
+    if ctx.oracle is None:
+        raise ValueError(
+            "gain_exact trigger needs the problem oracle: pass "
+            "oracle=(sigma, w_star) when building the policy/trigger"
+        )
+    sigma, w_star = ctx.oracle
+    sigma = jnp.asarray(sigma, jnp.float32)
+    if sigma.ndim == 1:
+        sigma = jnp.diag(sigma)
+    w_star = jnp.asarray(w_star, jnp.float32)
+    lam_at = _lam_at(args)
+    eps = jnp.float32(ctx.probe_eps)
+
+    def trig(params, grad, batch, local_loss, step):
+        del batch, local_loss
+        gain = linreg_gain_exact(params, grad, eps, sigma, w_star)
+        return TriggerOutput(
+            _as_alpha(gain <= -lam_at(step)), gain.astype(jnp.float32)
+        )
+    return trig
+
+
+def _norm_sq(grad, use_kernel: bool):
+    if use_kernel:
+        gsq, _ = _fused_gain_terms(grad, grad)
+        return gsq
+    return tree_norm_sq(grad)
+
+
+def _fused_gain_terms(grad, hg):
+    """(gᵀg, gᵀ(hg)) via the Pallas gain-reduce kernel on flattened leaves."""
+    from repro.kernels.gain_reduce import ops as gr_ops
+
+    g_flat = jnp.concatenate(
+        [x.reshape(-1).astype(jnp.float32) for x in jax.tree_util.tree_leaves(grad)]
+    )
+    h_flat = jnp.concatenate(
+        [x.reshape(-1).astype(jnp.float32) for x in jax.tree_util.tree_leaves(hg)]
+    )
+    return gr_ops.gain_reduce(g_flat, h_flat)
+
+
+# ----------------------------------------------------------------------
+# Linear-regression closed forms (the paper's exact expressions).
+# ----------------------------------------------------------------------
+
+def linreg_gain_exact(w, g, eps, sigma, w_star):
+    """Eq. (28) with the *true* distribution: needs Σ = 𝔼xxᵀ and w*.
+
+    ∇J(w) = Σ (w − w*),  ∇²J = Σ.
+    """
+    grad_true = sigma @ (w - w_star)
+    return -eps * g @ grad_true + 0.5 * eps**2 * g @ (sigma @ g)
+
+
+def linreg_gain_estimated(w, g, eps, xs):
+    """Eq. (30): −ε gᵀ[I − (ε/2)(1/N)Σ x xᵀ]g — data-only estimate.
+
+    Computed as −ε‖g‖² + (ε²/2)(1/N)Σ (xᵀg)² — O(Nn), as the paper notes.
+    """
+    del w
+    xg = xs @ g                       # (N,)
+    ghg = jnp.mean(xg * xg)           # gᵀ Ĥ g
+    return -eps * g @ g + 0.5 * eps**2 * ghg

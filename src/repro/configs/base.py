@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 
 @dataclass(frozen=True)
@@ -158,10 +158,14 @@ SHAPES = {
 
 @dataclass(frozen=True)
 class TriggerConfig:
-    """The paper's communication trigger, as a policy config.
+    """The paper's communication trigger, as a legacy policy config.
 
-    kinds:
-      gain_exact      eq. (11)+(28) with known distribution (linreg only)
+    Every kind resolves through the ``repro.comm.TRIGGERS`` registry
+    (new code should use a :class:`repro.comm.CommPolicy` spec string
+    instead — see ``TrainConfig.comm``):
+
+      gain_exact      eq. (11)+(28) with known distribution (linreg only;
+                      needs the (Σ, w*) oracle at build time)
       gain_estimated  eq. (11)+(30) data-estimated quadratic gain (linreg)
       gain_lookahead  eq. (11) with gain = local-batch loss(w - eps g) - loss(w)
       gain_quadratic  eq. (28) for any smooth loss via Hessian-vector product
@@ -195,9 +199,16 @@ class TrainConfig:
     num_agents: int = 2
     microbatches: int = 1  # gradient accumulation per agent (memory knob)
     trigger: TriggerConfig = TriggerConfig(kind="always")
-    quantize_grads: bool = False   # beyond-paper: int8 transmitted updates
-    topk_frac: float = 0.0         # beyond-paper: top-k sparsified wire (>0 on)
-    error_feedback: bool = False   # beyond-paper: EF memory for compression
+    # The communication policy, as a repro.comm spec string — e.g.
+    # "gain_lookahead(lam=0.1,decay=inv_t)|topk(0.05)|int8+ef" — or a
+    # tuple of specs for per-agent heterogeneous networks.  When set it
+    # supersedes `trigger` and the legacy compression flags below.
+    comm: Optional[Union[str, Tuple[str, ...]]] = None
+    # DEPRECATED flag spellings (mapped onto a CommPolicy by
+    # repro.comm.resolve_policy; `quantize_grads` wins over `topk_frac`):
+    quantize_grads: bool = False   # legacy: int8 transmitted updates
+    topk_frac: float = 0.0         # legacy: top-k sparsified wire (>0 on)
+    error_feedback: bool = False   # legacy: EF memory for compression
     seed: int = 0
 
 

@@ -1,10 +1,11 @@
 """Core of the reproduction: the paper's technique and its theory.
 
-- ``triggers``     — eq. (11)/(30)/(31) + generalizations
-- ``aggregation``  — eq. (10) server rule (+ quantized transmission)
+- ``triggers``     — legacy shim over the ``repro.comm.TRIGGERS`` registry
+- ``aggregation``  — eq. (10) server rule (+ legacy compressed paths)
 - ``regression``   — faithful §2/§4 linear-regression setup
 - ``theory``       — Thm 1 / Thm 2 closed forms
-- ``api``          — EventTriggeredDataParallel train-step builder
+- ``api``          — EventTriggeredDataParallel train-step builder,
+                     parameterized by a ``repro.comm.CommPolicy``
 """
 from repro.core.api import (  # noqa: F401
     TrainState,

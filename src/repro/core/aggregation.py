@@ -27,6 +27,13 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm.compressors import (  # noqa: F401  (compat re-exports; the
+    dequantize_int8,                  # kernels migrated to repro.comm)
+    fake_quantize,
+    quantize_int8,
+    topk_sparsify,
+)
+
 
 class AggregateStats(NamedTuple):
     comm_rate: jax.Array      # mean_i alpha_i           (per-round rate)
@@ -51,26 +58,10 @@ def masked_mean(grads, alphas):
 
 
 # ----------------------------------------------------------------------
-# Beyond-paper: quantized transmission (+ error feedback)
+# Beyond-paper: quantized transmission (+ error feedback).  These legacy
+# whole-tree paths are kept for compatibility; the composable per-agent
+# equivalents live in repro.comm.compressors (CompressorChain).
 # ----------------------------------------------------------------------
-
-def quantize_int8(x: jax.Array):
-    """Symmetric per-tensor int8: returns (q, scale). Zero-safe."""
-    amax = jnp.max(jnp.abs(x))
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
-    return (q.astype(jnp.float32) * scale).astype(dtype)
-
-
-def fake_quantize(x: jax.Array):
-    """Quantize→dequantize round trip (what the receiver reconstructs)."""
-    q, s = quantize_int8(x)
-    return dequantize_int8(q, s, x.dtype)
-
 
 def masked_mean_quantized(grads, alphas, ef_memory: Optional[object] = None):
     """Eq. (10) where each transmitted gradient is int8 on the wire.
@@ -96,21 +87,6 @@ def masked_mean_quantized(grads, alphas, ef_memory: Optional[object] = None):
         )
 
     return masked_mean(sent, alphas), new_mem
-
-
-def topk_sparsify(x: jax.Array, frac: float):
-    """Keep the top-``frac`` entries of |x| per tensor, zero the rest —
-    the sparse-communication format of Aji & Heafield (2017), one of the
-    compression families the paper positions against (Remark 3).
-
-    Returns (sparse tensor, kept count).  Wire bytes for a kept entry are
-    (index + value); effective bytes ≈ 2·frac·dense, tracked by the
-    caller's metrics."""
-    flat = x.reshape(-1)
-    k = max(1, int(frac * flat.size))
-    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
-    mask = jnp.abs(flat) >= thresh
-    return (flat * mask).reshape(x.shape).astype(x.dtype), jnp.sum(mask)
 
 
 def masked_mean_topk(grads, alphas, frac: float, ef_memory: Optional[object] = None):

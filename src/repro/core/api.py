@@ -10,37 +10,57 @@ train step implementing the paper's full loop:
                                             (sharded over mesh data axes,
                                             so each device group computes
                                             only its own agent's gradient)
-  3. local trigger decisions α_k^i        → ``repro.core.triggers`` (pure
+  3. local trigger decisions α_k^i        → the policy's Trigger stage
+                                            (repro.comm.triggers, pure
                                             local computation, eq. 11/30/31)
-  4. server aggregation, eq. (10)         → masked mean = one all-reduce
-  5. parameter update                     → pluggable optimizer
+  4. wire format of what IS sent          → the policy's Compressor chain
+                                            (+ ErrorFeedback residuals)
+  5. server aggregation, eq. (10)         → masked mean = one all-reduce
+  6. parameter update                     → pluggable optimizer
 
-With ``optimizer="sgd"`` and ``trigger.kind="gain_lookahead"`` this is
+The communication behaviour is a single :class:`repro.comm.CommPolicy`
+value (or a per-agent tuple for heterogeneous networks)::
+
+    step = make_triggered_train_step(
+        loss_fn, opt, cfg,
+        policy="gain_lookahead(lam=0.1)|topk(0.05)|int8+ef")
+
+With ``optimizer="sgd"`` and a ``gain_lookahead`` trigger this is
 *exactly* the paper's algorithm (the lookahead gain equals eq. (30) for
 quadratic losses); every other combination is a labelled generalization.
 Note eq. (10)'s "hold when silent" is exact under SGD (zero aggregated
 gradient ⇒ zero update); adaptive optimizers still advance their moments.
+
+Legacy entry: calling with only a :class:`TrainConfig` still works — the
+scattered ``trigger``/``quantize_grads``/``topk_frac``/``error_feedback``
+flags are converted through :func:`repro.comm.resolve_policy` (with a
+``DeprecationWarning`` for the compression flags).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import TrainConfig
-from repro.core.aggregation import (
-    aggregate_stats,
-    masked_mean,
-    masked_mean_quantized,
-    masked_mean_topk,
+from repro.comm import (
+    CommPolicy,
+    comm_stats,
+    dense_bits,
+    ef_add,
+    ef_init,
+    ef_residual,
+    normalize_policy,
+    resolve_policy,
+    structural_bytes,
 )
-from repro.core.triggers import make_trigger
+from repro.configs.base import TrainConfig
+from repro.core.aggregation import masked_mean
 from repro.sharding.constraint import constrain_params
-from repro.utils.tree import tree_add_scaled, tree_zeros_like
+from repro.utils.tree import tree_add_scaled
 
-
-METRIC_KEYS = ("loss", "comm_rate", "any_tx", "num_tx", "mean_gain", "grad_norm")
+METRIC_KEYS = ("loss", "comm_rate", "any_tx", "num_tx", "mean_gain",
+               "grad_norm", "wire_bytes")
 
 
 def _microbatched(fn, m: int):
@@ -65,6 +85,21 @@ def _microbatched(fn, m: int):
     return scanned
 
 
+def _warn_ef_memory_missing():
+    """Trace-time notice: the policy asks for error feedback but the
+    TrainState carries no residual memory (it was initialized with a
+    different policy), so EF is off for this run."""
+    import warnings
+
+    warnings.warn(
+        "policy requests error feedback (+ef) but state.ef_memory is None "
+        "— pass the same policy to init_train_state to allocate it; "
+        "running WITHOUT error feedback",
+        UserWarning,
+        stacklevel=2,
+    )
+
+
 class TrainState(NamedTuple):
     step: jax.Array
     params: Any
@@ -72,12 +107,13 @@ class TrainState(NamedTuple):
     ef_memory: Optional[Any] = None  # error-feedback residuals (A, *param)
 
 
-def init_train_state(params, optimizer, cfg: TrainConfig) -> TrainState:
-    ef = None
-    if (cfg.quantize_grads or cfg.topk_frac > 0) and cfg.error_feedback:
-        ef = jax.tree_util.tree_map(
-            lambda p: jnp.zeros((cfg.num_agents,) + p.shape, p.dtype), params
-        )
+def init_train_state(params, optimizer, cfg: TrainConfig,
+                     policy=None) -> TrainState:
+    """Build the initial state; EF memory is allocated iff the resolved
+    policy (or any per-agent policy) carries error feedback."""
+    resolved = normalize_policy(resolve_policy(cfg, policy), cfg.num_agents)
+    policies = resolved if isinstance(resolved, tuple) else (resolved,)
+    ef = ef_init(params, cfg.num_agents) if any(p.needs_ef for p in policies) else None
     return TrainState(
         step=jnp.zeros((), jnp.int32),
         params=params,
@@ -91,8 +127,10 @@ def make_triggered_train_step(
     optimizer,
     cfg: TrainConfig,
     *,
+    policy=None,
     aux_loss_fn: Optional[Callable] = None,
     use_kernel: bool = False,
+    oracle: Optional[tuple] = None,
 ):
     """Build ``train_step(state, batch) -> (state, metrics)``.
 
@@ -100,15 +138,37 @@ def make_triggered_train_step(
     batch pytree's leaves must carry a leading agent axis of size
     ``cfg.num_agents``.  ``aux_loss_fn`` (e.g. MoE load-balance) is added
     to the differentiated objective but not to the trigger's gain.
+
+    ``policy`` is a :class:`~repro.comm.CommPolicy`, a spec string, or a
+    per-agent sequence of either (heterogeneous networks); when omitted
+    it resolves from ``cfg.comm``, falling back to the legacy flag set.
+    ``use_kernel`` is the deprecated spelling of the trigger-level
+    ``kernel=true`` spec argument.  ``oracle`` is the ``(Σ, w*)`` pair
+    the ``gain_exact`` trigger requires.
     """
     if cfg.microbatches > 1:
         loss_fn = _microbatched(loss_fn, cfg.microbatches)
         if aux_loss_fn is not None:
             aux_loss_fn = _microbatched(aux_loss_fn, cfg.microbatches)
 
-    trigger = make_trigger(
-        cfg.trigger, loss_fn=loss_fn, probe_eps=cfg.lr, use_kernel=use_kernel
+    resolved = normalize_policy(
+        resolve_policy(cfg, policy, use_kernel=use_kernel), cfg.num_agents
     )
+    hetero: Optional[Tuple[CommPolicy, ...]] = (
+        resolved if isinstance(resolved, tuple) else None
+    )
+
+    def build_stages(pol: CommPolicy):
+        trig = pol.build_trigger(loss_fn=loss_fn, probe_eps=cfg.lr, oracle=oracle)
+        return trig, pol.chain(), pol.needs_ef
+
+    if hetero is None:
+        trigger, chain, needs_ef = build_stages(resolved)
+        chains = (chain,)
+    else:
+        stages = [build_stages(p) for p in hetero]
+        needs_ef = any(ef for _, _, ef in stages)
+        chains = tuple(c for _, c, _ in stages)
 
     def objective(params, batch):
         main = loss_fn(params, batch)
@@ -116,10 +176,10 @@ def make_triggered_train_step(
             return main + aux_loss_fn(params, batch), main
         return main, main
 
-    def train_step(state: TrainState, batch):
+    def per_agent_fn(params, step, trig):
         def per_agent(agent_batch):
             (obj, main), g = jax.value_and_grad(objective, has_aux=True)(
-                state.params, agent_batch
+                params, agent_batch
             )
             # Per-agent gradient (and probe) trees CANNOT inherit the
             # FSDP embed@data layout — the agent axis IS the data axis.
@@ -128,25 +188,85 @@ def make_triggered_train_step(
             # (EXPERIMENTS.md §Perf, qwen3 iter-6 → iter-7).  No-op when
             # no gather hook is installed (non-FSDP plans, CPU tests).
             g = constrain_params(g, "")
-            alpha, gain = trigger(state.params, g, agent_batch, main, state.step)
+            alpha, gain = trig(params, g, agent_batch, main, step)
             return main, g, alpha, gain
+        return per_agent
 
-        losses, grads, alphas, gains = jax.vmap(per_agent)(batch)
-
-        if cfg.quantize_grads:
-            agg, new_ef = masked_mean_quantized(grads, alphas, state.ef_memory)
-        elif cfg.topk_frac > 0:
-            agg, new_ef = masked_mean_topk(
-                grads, alphas, cfg.topk_frac, state.ef_memory
-            )
+    def train_step(state: TrainState, batch):
+        if hetero is None:
+            per_agent = per_agent_fn(state.params, state.step, trigger)
+            losses, grads, alphas, gains = jax.vmap(per_agent)(batch)
+            if chain:
+                # EF engages only when the state actually carries memory
+                # (init_train_state with the same policy) — keeping the
+                # TrainState pytree structure stable across steps
+                use_ef = needs_ef and state.ef_memory is not None
+                if needs_ef and not use_ef:
+                    _warn_ef_memory_missing()
+                g_eff = ef_add(grads, state.ef_memory if use_ef else None)
+                sent = jax.tree_util.tree_map(
+                    lambda g: jax.vmap(chain.compress)(g), g_eff
+                )
+                new_ef = (
+                    ef_residual(g_eff, sent, alphas)
+                    if use_ef else state.ef_memory
+                )
+            else:
+                sent, new_ef = grads, state.ef_memory
         else:
-            agg, new_ef = masked_mean(grads, alphas), state.ef_memory
+            # Heterogeneous: each agent runs ITS OWN trigger/compressor
+            # stack — an unrolled loop over the (small) agent axis.
+            per = []
+            for i, (trig_i, chain_i, ef_i) in enumerate(stages):
+                agent_batch = jax.tree_util.tree_map(lambda x: x[i], batch)
+                main, g, alpha, gain = per_agent_fn(
+                    state.params, state.step, trig_i
+                )(agent_batch)
+                use_ef = ef_i and state.ef_memory is not None
+                if ef_i and not use_ef:
+                    _warn_ef_memory_missing()
+                mem_i = jax.tree_util.tree_map(
+                    lambda m: m[i], state.ef_memory
+                ) if use_ef else None
+                g_eff = ef_add(g, mem_i)
+                s = chain_i.compress_tree(g_eff) if chain_i else g_eff
+                resid = ef_residual(g_eff, s, alpha) if use_ef else None
+                per.append((main, alpha, gain, s, resid))
 
+            stack = lambda xs: jnp.stack(xs)
+            losses = stack([p[0] for p in per])
+            alphas = stack([p[1] for p in per])
+            gains = stack([p[2] for p in per])
+            sent = jax.tree_util.tree_map(
+                lambda *leaves: jnp.stack(leaves), *[p[3] for p in per]
+            )
+            if needs_ef and state.ef_memory is not None:
+                zeros_like_slice = lambda m: jnp.zeros_like(m[0])
+                new_ef = jax.tree_util.tree_map(
+                    lambda *leaves: jnp.stack(leaves),
+                    *[
+                        p[4] if p[4] is not None else jax.tree_util.tree_map(
+                            zeros_like_slice, state.ef_memory
+                        )
+                        for p in per
+                    ],
+                )
+            else:
+                new_ef = state.ef_memory
+
+        agg = masked_mean(sent, alphas)
         updates, opt_state = optimizer.update(
             agg, state.opt_state, state.params, state.step
         )
         params = tree_add_scaled(state.params, updates, 1.0)
-        stats = aggregate_stats(alphas, gains)
+        # wire ratios against the gradients' NATIVE dtype width (int8 on
+        # bf16 grads is 0.5, not fp32's 0.25) — all static at trace time
+        db = dense_bits(sent)
+        stats = comm_stats(
+            alphas, gains,
+            structural=structural_bytes(sent, per_agent=True),
+            ratios=tuple(c.ratio_for(db) if c else 1.0 for c in chains),
+        )
         metrics = {
             "loss": jnp.mean(losses),
             "comm_rate": stats.comm_rate,
@@ -159,6 +279,7 @@ def make_triggered_train_step(
                     for x in jax.tree_util.tree_leaves(agg)
                 )
             ),
+            "wire_bytes": stats.wire_bytes,
         }
         return (
             TrainState(state.step + 1, params, opt_state, new_ef),
@@ -172,7 +293,14 @@ def make_plain_train_step(loss_fn, optimizer, cfg: TrainConfig, **kw):
     """Dense baseline: every agent always transmits (synchronous SGD)."""
     import dataclasses
 
-    from repro.configs.base import TriggerConfig
+    from repro.comm.registry import StageSpec
 
-    dense_cfg = dataclasses.replace(cfg, trigger=TriggerConfig(kind="always"))
-    return make_triggered_train_step(loss_fn, optimizer, dense_cfg, **kw)
+    resolved = normalize_policy(
+        resolve_policy(cfg, kw.pop("policy", None)), cfg.num_agents
+    )
+    dense = StageSpec("always")
+    if isinstance(resolved, tuple):
+        policy = tuple(dataclasses.replace(p, trigger=dense) for p in resolved)
+    else:
+        policy = dataclasses.replace(resolved, trigger=dense)
+    return make_triggered_train_step(loss_fn, optimizer, cfg, policy=policy, **kw)

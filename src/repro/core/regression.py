@@ -115,6 +115,40 @@ class RunResult(NamedTuple):
         return jnp.sum(jnp.max(self.alphas, axis=1))
 
 
+def _policy_to_sim_args(policy):
+    """A CommPolicy (or spec string) → this simulator's closed-form knobs.
+
+    The simulator keeps the paper's O(Nn) closed forms instead of the
+    generic trigger functions, so only the linreg-expressible triggers
+    are accepted; compressor stages are rejected (use the train-step API
+    for compressed wire formats)."""
+    from repro.comm import CommPolicy
+
+    pol = CommPolicy.parse_one(policy)
+    if pol.compressors or pol.error_feedback:
+        raise ValueError(
+            f"the regression simulator models the trigger only; policy "
+            f"{pol} carries compressor/EF stages — use "
+            f"repro.core.api.make_triggered_train_step for those"
+        )
+    t = pol.trigger
+    if t.name not in ("gain_exact", "gain_estimated", "grad_norm", "always",
+                      "never"):
+        raise ValueError(f"trigger {t.name!r} not supported by the simulator")
+    if t.arg("decay_rate") is not None:
+        raise ValueError(
+            "the simulator's geometric schedule uses the paper's rate "
+            "λ·ρ^k (ρ from the problem); an explicit decay_rate is only "
+            "honoured by the train-step API"
+        )
+    return dict(
+        mode=t.name,
+        lam=float(t.arg("lam", 0.0)),
+        mu=float(t.arg("mu", 0.0)),
+        lam_decay=t.arg("decay", "const"),
+    )
+
+
 def run(
     problem: Problem,
     key,
@@ -124,16 +158,25 @@ def run(
     mu: float = 0.0,
     w0: jnp.ndarray | None = None,
     lam_decay: str = "const",
+    policy=None,
 ) -> RunResult:
     """Simulate eq. (10)+(11) for ``steps`` iterations.
 
+    policy: a repro.comm spec string (e.g. ``"gain_estimated(lam=0.3)"``)
+          or CommPolicy — the preferred interface; supersedes the
+          mode/lam/mu/lam_decay knobs below when given.
     mode: gain_exact (11+28) | gain_estimated (11+30) | grad_norm (31) |
-          always (plain synchronous SGD).
+          always (plain synchronous SGD) | never.
     lam_decay: "const" | "inv_t" (λ_k = λ/(k+1)) | "geometric"
           (λ_k = λ·ρ^k) — the paper's post-eq.(23) remark: a diminishing
           λ eliminates the steady-state penalty while keeping the early
           communication savings.
     """
+    if policy is not None:
+        sim = _policy_to_sim_args(policy)
+        mode, lam, mu, lam_decay = (
+            sim["mode"], sim["lam"], sim["mu"], sim["lam_decay"]
+        )
     m, eps = problem.num_agents, problem.eps
     rho = problem.rho()
     if w0 is None:
@@ -160,6 +203,8 @@ def run(
             return (gsq >= mu).astype(jnp.float32), -eps * gsq
         if mode == "always":
             return jnp.float32(1.0), jnp.float32(0.0)
+        if mode == "never":
+            return jnp.float32(0.0), jnp.float32(0.0)
         raise ValueError(f"unknown mode {mode!r}")
 
     def step(w, inp):

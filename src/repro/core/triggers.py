@@ -1,68 +1,35 @@
-"""Communication triggers — the paper's core contribution as a policy family.
+"""Compatibility shim over the registry-backed trigger stage.
 
-A trigger decides, from an agent's *local* information only, whether its
-gradient is informative enough to transmit (paper eq. 11).  Every trigger
-returns ``(alpha, gain)`` where ``alpha ∈ {0.0, 1.0}`` is the transmit
-decision and ``gain`` is the (estimated) performance gain
-``J(w − ε g) − J(w)`` (negative = improvement).  Triggers are pure
-functions of local data, so under ``vmap`` over agents each device group
-evaluates its own trigger with no extra communication — exactly the
-paper's decentralized scheme.
+The trigger implementations moved to :mod:`repro.comm.triggers`, where
+they are registered stages of the composable :class:`repro.comm.CommPolicy`
+stack.  This module keeps the original entry points working:
 
-Trigger kinds (see ``TriggerConfig``):
+* :func:`make_trigger` builds a trigger function from a legacy
+  :class:`~repro.configs.base.TriggerConfig` — including the documented
+  ``gain_exact`` / ``gain_estimated`` linear-regression kinds, which now
+  resolve through the registry (they previously raised ``ValueError``).
+* ``TriggerOutput`` / ``TriggerFn`` / the linreg closed forms re-export.
 
-* ``gain_lookahead`` — generalization of eq. (30) to arbitrary losses:
-  estimate the gain by *re-evaluating the local empirical loss* at the
-  probe point ``w − ε g``.  For linear regression this equals eq. (30)
-  exactly (the empirical loss is quadratic, so the lookahead difference
-  *is* the quadratic form ``−ε gᵀ[I − (ε/2)Ĥ]g``); for non-quadratic
-  losses it is the natural extension.  Costs one extra forward pass.
-* ``gain_quadratic`` — the literal eq. (28) for any smooth loss:
-  ``ΔJ ≈ −ε gᵀg + (ε²/2) gᵀHg`` with the Hessian-vector product computed
-  by forward-over-reverse ``jax.jvp`` of the gradient.  Costs one HVP.
-* ``grad_norm`` — the literature baseline, eq. (31): transmit iff
-  ``‖g‖² ≥ μ``.
-* ``periodic`` / ``always`` / ``never`` — scheduling baselines.
+New code should build policies instead::
 
-The fused reduction ``(gᵀg, gᵀHg)`` over flattened gradients is the
-technique's per-step hot spot at scale; ``repro.kernels.gain_reduce``
-provides the Pallas TPU kernel for it (used when ``use_kernel=True``).
+    from repro.comm import CommPolicy
+    trig = CommPolicy.parse("gain_lookahead(lam=0.1)").build_trigger(
+        loss_fn=loss_fn, probe_eps=eps)
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
-
+from repro.comm.triggers import (  # noqa: F401  (public re-exports)
+    TRIGGERS,
+    TriggerContext,
+    TriggerFn,
+    TriggerOutput,
+    build_trigger,
+    linreg_gain_estimated,
+    linreg_gain_exact,
+)
 from repro.configs.base import TriggerConfig
-from repro.utils.tree import tree_add_scaled, tree_norm_sq, tree_vdot
-
-
-class TriggerOutput(NamedTuple):
-    alpha: jax.Array  # f32 scalar in {0., 1.}
-    gain: jax.Array   # f32 scalar: estimated J(w - eps g) - J(w)
-
-
-# A trigger maps (params, grad, batch, local_loss, step) -> TriggerOutput.
-TriggerFn = Callable[..., TriggerOutput]
-
-
-def _as_alpha(pred) -> jax.Array:
-    return pred.astype(jnp.float32)
-
-
-def _lam_schedule(cfg: TriggerConfig):
-    """λ_k per cfg.lam_decay (paper's diminishing-λ remark, eq. 23)."""
-    lam = jnp.float32(cfg.lam)
-    if cfg.lam_decay == "const":
-        return lambda step: lam
-    if cfg.lam_decay == "inv_t":
-        return lambda step: lam / (1.0 + jnp.asarray(step, jnp.float32))
-    if cfg.lam_decay == "geometric":
-        rate = jnp.float32(cfg.lam_decay_rate)
-        return lambda step: lam * rate ** jnp.asarray(step, jnp.float32)
-    raise ValueError(f"unknown lam_decay {cfg.lam_decay!r}")
 
 
 def make_trigger(
@@ -71,124 +38,19 @@ def make_trigger(
     loss_fn: Optional[Callable] = None,
     probe_eps: float = 1e-2,
     use_kernel: bool = False,
+    oracle: Optional[tuple] = None,
 ) -> TriggerFn:
     """Build a trigger function from a :class:`TriggerConfig`.
 
     ``loss_fn(params, batch) -> scalar`` is the *local empirical* loss
     (needed by the gain triggers).  ``probe_eps`` is the ε of the probe
     step ``w − ε g`` — the paper's SGD stepsize; with adaptive optimizers
-    it is the probe scale and defaults to the learning rate.
+    it is the probe scale and defaults to the learning rate.  ``oracle``
+    is the ``(Σ, w*)`` pair required by the ``gain_exact`` kind.
     """
-    kind = cfg.kind
+    from repro.comm.policy import trigger_spec_from_config
 
-    if kind == "always":
-        def trig(params, grad, batch, local_loss, step):
-            del params, batch, step
-            return TriggerOutput(jnp.float32(1.0), jnp.float32(0.0) * local_loss)
-        return trig
-
-    if kind == "never":
-        def trig(params, grad, batch, local_loss, step):
-            del params, batch, step
-            return TriggerOutput(jnp.float32(0.0), jnp.float32(0.0) * local_loss)
-        return trig
-
-    if kind == "periodic":
-        period = max(int(cfg.period), 1)
-        def trig(params, grad, batch, local_loss, step):
-            del params, batch, local_loss
-            return TriggerOutput(
-                _as_alpha((step % period) == 0), jnp.float32(0.0)
-            )
-        return trig
-
-    if kind == "grad_norm":
-        mu = jnp.float32(cfg.mu)
-        def trig(params, grad, batch, local_loss, step):
-            del params, batch, local_loss, step
-            gsq = _norm_sq(grad, use_kernel)
-            # report the small-ε proxy gain −ε‖g‖² for logging parity
-            return TriggerOutput(_as_alpha(gsq >= mu), -probe_eps * gsq)
-        return trig
-
-    if kind == "gain_lookahead":
-        if loss_fn is None:
-            raise ValueError("gain_lookahead trigger needs loss_fn")
-        lam_at = _lam_schedule(cfg)
-        eps = jnp.float32(probe_eps)
-        def trig(params, grad, batch, local_loss, step):
-            from repro.sharding.constraint import constrain_params
-
-            # probe params are per-agent under vmap — pin to model-axis
-            # sharding for the same reason as the grads (see core.api)
-            probe = constrain_params(tree_add_scaled(params, grad, -eps), "")
-            gain = loss_fn(probe, batch) - local_loss
-            return TriggerOutput(
-                _as_alpha(gain <= -lam_at(step)), gain.astype(jnp.float32)
-            )
-        return trig
-
-    if kind == "gain_quadratic":
-        if loss_fn is None:
-            raise ValueError("gain_quadratic trigger needs loss_fn")
-        lam_at = _lam_schedule(cfg)
-        eps = jnp.float32(probe_eps)
-        def trig(params, grad, batch, local_loss, step):
-            del local_loss
-            grad_fn = lambda p: jax.grad(loss_fn)(p, batch)
-            # H g via forward-over-reverse; both terms fused when the
-            # Pallas kernel path is enabled.
-            _, hg = jax.jvp(grad_fn, (params,), (grad,))
-            if use_kernel:
-                gsq, ghg = _fused_gain_terms(grad, hg)
-            else:
-                gsq, ghg = tree_norm_sq(grad), tree_vdot(grad, hg)
-            gain = -eps * gsq + 0.5 * eps * eps * ghg
-            return TriggerOutput(_as_alpha(gain <= -lam_at(step)), gain)
-        return trig
-
-    raise ValueError(f"unknown trigger kind {kind!r}")
-
-
-def _norm_sq(grad, use_kernel: bool):
-    if use_kernel:
-        gsq, _ = _fused_gain_terms(grad, grad)
-        return gsq
-    return tree_norm_sq(grad)
-
-
-def _fused_gain_terms(grad, hg):
-    """(gᵀg, gᵀ(hg)) via the Pallas gain-reduce kernel on flattened leaves."""
-    from repro.kernels.gain_reduce import ops as gr_ops
-
-    g_flat = jnp.concatenate(
-        [x.reshape(-1).astype(jnp.float32) for x in jax.tree_util.tree_leaves(grad)]
+    spec = trigger_spec_from_config(cfg, use_kernel=use_kernel)
+    return build_trigger(
+        spec, TriggerContext(loss_fn=loss_fn, probe_eps=probe_eps, oracle=oracle)
     )
-    h_flat = jnp.concatenate(
-        [x.reshape(-1).astype(jnp.float32) for x in jax.tree_util.tree_leaves(hg)]
-    )
-    return gr_ops.gain_reduce(g_flat, h_flat)
-
-
-# ----------------------------------------------------------------------
-# Linear-regression specializations (the paper's exact expressions).
-# ----------------------------------------------------------------------
-
-def linreg_gain_exact(w, g, eps, sigma, w_star):
-    """Eq. (28) with the *true* distribution: needs Σ = 𝔼xxᵀ and w*.
-
-    ∇J(w) = Σ (w − w*),  ∇²J = Σ.
-    """
-    grad_true = sigma @ (w - w_star)
-    return -eps * g @ grad_true + 0.5 * eps**2 * g @ (sigma @ g)
-
-
-def linreg_gain_estimated(w, g, eps, xs):
-    """Eq. (30): −ε gᵀ[I − (ε/2)(1/N)Σ x xᵀ]g — data-only estimate.
-
-    Computed as −ε‖g‖² + (ε²/2)(1/N)Σ (xᵀg)² — O(Nn), as the paper notes.
-    """
-    del w
-    xg = xs @ g                       # (N,)
-    ghg = jnp.mean(xg * xg)           # gᵀ Ĥ g
-    return -eps * g @ g + 0.5 * eps**2 * ghg

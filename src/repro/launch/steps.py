@@ -65,6 +65,7 @@ def plan_run(
     shape: InputShape,
     mesh,
     *,
+    comm: Optional[object] = None,
     trigger: Optional[TriggerConfig] = None,
     optimizer: str = "sgd",
     lr: float = 1e-2,
@@ -94,12 +95,20 @@ def plan_run(
     agent_axes: Tuple[str, ...] = ("pod", "data") if multipod else ("data",)
     num_agents = int(math.prod(mesh.shape[a] for a in agent_axes))
     trigger = trigger or TriggerConfig(kind="gain_lookahead", lam=0.0)
+    if comm is not None and not isinstance(comm, str):
+        from repro.comm import CommPolicy
+
+        # normalize CommPolicy values / per-agent lists to spec strings so
+        # TrainConfig stays a hashable frozen dataclass
+        comm = (str(comm) if isinstance(comm, CommPolicy)
+                else tuple(str(p) for p in comm))
     train_cfg = TrainConfig(
         lr=lr,
         optimizer=optimizer,
         num_agents=num_agents,
         microbatches=microbatches,
         trigger=trigger,
+        comm=comm,
         quantize_grads=quantize_grads,
     )
     rules = resolve_rules(

@@ -2,7 +2,16 @@
 any assigned architecture on the deterministic synthetic LM stream.
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
-        --reduced --steps 200 --trigger gain_lookahead --lam 0.01
+        --reduced --steps 200 --comm "gain_lookahead(lam=0.01)"
+
+The communication stack is one ``--comm`` spec (repro.comm syntax):
+trigger, then optional chained compressors, then ``+ef``::
+
+    --comm "gain_lookahead(lam=0.01,decay=inv_t)|topk(0.05)|int8+ef"
+    --comm "always|int8 ; never"     # per-agent heterogeneous (needs --agents 2)
+
+The legacy ``--trigger/--lam/--mu/--period/--quantize/--topk/
+--error-feedback`` flags still work and map onto the same spec.
 
 The driver runs on whatever devices exist (CPU here, TPU pod in prod —
 the mesh adapts).  Full assigned configs are for the dry-run/pod; on the
@@ -43,6 +52,13 @@ def parse_args():
     ap.add_argument("--agents", type=int, default=None, help="default: mesh data size")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "momentum", "adamw"])
+    ap.add_argument("--comm", default=None, metavar="SPEC",
+                    help="communication policy spec, e.g. "
+                         "'gain_lookahead(lam=0.01)|topk(0.05)|int8+ef'; "
+                         "';'-separated for per-agent policies. Supersedes "
+                         "the legacy trigger/compression flags below.")
+    # legacy flag spellings — assembled into a --comm spec when --comm is
+    # not given:
     ap.add_argument("--trigger", default="gain_lookahead",
                     choices=["gain_lookahead", "gain_quadratic", "grad_norm",
                              "periodic", "always", "never"])
@@ -66,6 +82,19 @@ def parse_args():
     return ap.parse_args()
 
 
+def _legacy_comm_spec(args) -> str:
+    """Assemble the legacy trigger/compression flags into a --comm spec."""
+    from repro.comm import from_train_config
+    from repro.configs.base import TrainConfig
+
+    trig = TriggerConfig(kind=args.trigger, lam=args.lam, mu=args.mu,
+                         period=args.period, lam_decay=args.lam_decay)
+    legacy = TrainConfig(trigger=trig, quantize_grads=args.quantize,
+                         topk_frac=args.topk,
+                         error_feedback=args.error_feedback)
+    return str(from_train_config(legacy))
+
+
 def main():
     args = parse_args()
     cfg = get_config(args.arch)
@@ -85,24 +114,17 @@ def main():
     mesh = make_host_mesh()
     shape = InputShape("train_cli", seq_len=args.seq, global_batch=args.batch,
                        kind="train")
-    trig = TriggerConfig(kind=args.trigger, lam=args.lam, mu=args.mu,
-                         period=args.period, lam_decay=args.lam_decay)
-    plan = S.plan_run(cfg, shape, mesh, trigger=trig, optimizer=args.optimizer,
-                      lr=args.lr, quantize_grads=args.quantize,
-                      microbatches=args.microbatches)
+    comm = args.comm or _legacy_comm_spec(args)
+    plan = S.plan_run(cfg, shape, mesh, comm=comm, optimizer=args.optimizer,
+                      lr=args.lr, microbatches=args.microbatches)
     import dataclasses
-    if args.topk or args.error_feedback:
-        plan = dataclasses.replace(
-            plan, train_cfg=dataclasses.replace(
-                plan.train_cfg, topk_frac=args.topk,
-                error_feedback=args.error_feedback))
     if args.agents:
         plan = dataclasses.replace(
             plan, num_agents=args.agents,
             train_cfg=dataclasses.replace(plan.train_cfg, num_agents=args.agents))
         plan.rules["agent"] = None  # replicated custom agent count
     print(f"arch={cfg.name} params≈{cfg.param_count()/1e6:.1f}M agents={plan.num_agents} "
-          f"trigger={args.trigger}(λ={args.lam}) mesh={dict(mesh.shape)}")
+          f"comm={comm!r} mesh={dict(mesh.shape)}")
 
     jitted, *_ = S.build_train_step(mesh, plan, compute_dtype=args.dtype)
     model = build(plan.cfg.replace(compute_dtype=args.dtype))
@@ -117,12 +139,13 @@ def main():
         start = int(state.step)
         print(f"resumed from step {start}")
 
-    tx_total, t0 = 0.0, time.time()
+    tx_total, bytes_total, t0 = 0.0, 0.0, time.time()
     for step in range(start, args.steps):
         batch = D.lm_batch(cfg, shape, jax.random.key(10_000 + step),
                            num_agents=plan.num_agents)
         state, m = jitted(state, batch)
         tx_total += float(m["num_tx"])
+        bytes_total += float(m["wire_bytes"])
         if step % args.log_every == 0 or step == args.steps - 1:
             print(f"step {step:5d}  loss {float(m['loss']):.4f}  "
                   f"comm_rate {float(m['comm_rate']):.2f}  "
@@ -134,7 +157,8 @@ def main():
 
     total_rounds = (args.steps - start) * plan.num_agents
     print(f"\ndone: {args.steps - start} steps, transmissions {tx_total:.0f}/"
-          f"{total_rounds} ({100 * tx_total / max(total_rounds, 1):.1f}% of dense)")
+          f"{total_rounds} ({100 * tx_total / max(total_rounds, 1):.1f}% of dense), "
+          f"effective wire {bytes_total / 1e6:.2f} MB")
     if args.ckpt_dir:
         checkpointer.save(args.ckpt_dir, args.steps, state)
         print(f"checkpoint -> {args.ckpt_dir}")

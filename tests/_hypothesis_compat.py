@@ -1,0 +1,29 @@
+"""Optional-hypothesis shim: property tests skip cleanly when the
+`hypothesis` package is absent (bare CPU boxes), example-based tests in
+the same module still run.
+
+    from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare CPU boxes
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _StrategiesStub:
+        """Accepts any strategy construction at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategiesStub()

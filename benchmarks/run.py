@@ -2,6 +2,8 @@
 
   python -m benchmarks.run            # everything
   python -m benchmarks.run fig2_left  # one benchmark
+  python -m benchmarks.run --smoke fig2_left hetero_frontier
+                                      # toy sizes, claim asserts off (CI)
 
 Prints each benchmark's CSV and a final summary line per benchmark.
 Dry-run-derived tables (roofline) read cached JSONs from
@@ -9,6 +11,7 @@ Dry-run-derived tables (roofline) read cached JSONs from
 first if missing."""
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 import traceback
@@ -17,6 +20,7 @@ from benchmarks import (
     fig1_right,
     fig2_left,
     fig2_right,
+    hetero_frontier,
     kernel_bench,
     lambda_decay,
     roofline_table,
@@ -30,6 +34,7 @@ ALL = {
     "fig1_right": fig1_right.run,      # paper Fig 1 (Right)
     "theory_bounds": theory_bounds.run,  # Thm 1 / Thm 2 table
     "lambda_decay": lambda_decay.run,  # beyond-paper: diminishing λ
+    "hetero_frontier": hetero_frontier.run,  # beyond-paper: m=8 mixed policies
     "triggered_lm": triggered_lm.run,  # beyond-paper: trigger on real arch
     "kernel_bench": kernel_bench.run,  # kernel traffic model
     "roofline_table": roofline_table.run,  # §Roofline from dry-run cache
@@ -37,24 +42,37 @@ ALL = {
 
 
 def main() -> int:
-    names = sys.argv[1:] or list(ALL)
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    names = [a for a in args if a != "--smoke"] or list(ALL)
     failures = []
+    ran = 0
     for name in names:
         fn = ALL.get(name)
         if fn is None:
             print(f"unknown benchmark {name!r}; available: {', '.join(ALL)}")
             return 2
+        if smoke and "smoke" not in inspect.signature(fn).parameters:
+            # never silently fall back to a full-size, claim-asserting
+            # run under --smoke
+            print(f"\n===== {name} =====\n[{name}] SKIPPED: no smoke mode",
+                  flush=True)
+            continue
         print(f"\n===== {name} =====", flush=True)
         t0 = time.time()
+        ran += 1
         try:
-            fn(verbose=True)
+            fn(verbose=True, **(dict(smoke=True) if smoke else {}))
             print(f"[{name}] OK in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:
             failures.append(name)
             print(f"[{name}] FAILED: {type(e).__name__}: {e}", flush=True)
             traceback.print_exc()
-    print(f"\n{len(names) - len(failures)}/{len(names)} benchmarks passed")
-    return 1 if failures else 0
+    skipped = len(names) - ran
+    print(f"\n{ran - len(failures)}/{ran} benchmarks passed"
+          + (f" ({skipped} without a smoke mode skipped)" if skipped else ""))
+    # a run that executed nothing (every name skipped) must not go green
+    return 1 if failures or ran == 0 else 0
 
 
 if __name__ == "__main__":

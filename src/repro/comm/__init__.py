@@ -14,6 +14,7 @@ wire formats addable without touching the train step — register a
 builder and every spec string, CLI flag, and benchmark can name it.
 See DESIGN.md for the layering and the wire-byte model.
 """
+from repro.comm.bank import StageBank, build_stage_bank
 from repro.comm.compressors import (
     COMPRESSORS,
     Compressor,
@@ -32,7 +33,13 @@ from repro.comm.policy import (
     with_kernel,
 )
 from repro.comm.registry import Registry, StageSpec
-from repro.comm.stats import CommStats, comm_stats, dense_bits, structural_bytes
+from repro.comm.stats import (
+    CommStats,
+    comm_stats,
+    dense_bits,
+    fold_sum,
+    structural_bytes,
+)
 from repro.comm.triggers import (
     TRIGGERS,
     TriggerContext,
@@ -48,6 +55,7 @@ __all__ = [
     "Compressor",
     "CompressorChain",
     "Registry",
+    "StageBank",
     "StageSpec",
     "TRIGGERS",
     "TriggerContext",
@@ -55,6 +63,7 @@ __all__ = [
     "TriggerOutput",
     "WireFormat",
     "build_compressor",
+    "build_stage_bank",
     "build_trigger",
     "chain_from_specs",
     "comm_stats",
@@ -62,6 +71,7 @@ __all__ = [
     "ef_add",
     "ef_init",
     "ef_residual",
+    "fold_sum",
     "from_train_config",
     "normalize_policy",
     "resolve_policy",

@@ -1,0 +1,131 @@
+"""Stage banks — per-agent heterogeneous policies as switchable branches.
+
+A heterogeneous network gives every agent its own CommPolicy.  Unrolling
+a Python loop over agents (the PR-1 path) traces the whole
+trigger/compressor stack once per agent — fine at m=2, hopeless at m≥64.
+A :class:`StageBank` instead *dedupes* the policies into a bank of
+**agent stages** with one uniform call signature
+
+    stage(params, grad, batch, local_loss, step, ef_mem)
+        -> (alpha, gain, sent, new_ef_mem)
+
+so the train step can dispatch each agent with ``lax.switch(idx, stages,
+...)`` inside a ``lax.scan`` over the agent axis: trace/compile cost is
+O(#distinct policies), not O(m), and a scalar switch index lowers to a
+conditional that runs exactly the ops the unrolled loop ran — the two
+paths are bit-identical (tests/test_sweep.py).
+
+The stage owns everything that differs between policies — trigger
+decision, error-feedback fold-in, compressor chain, residual update —
+while the (policy-independent) gradient computation stays outside the
+switch.  ``ef_mem`` is ONE agent's residual tree, or ``None`` when the
+TrainState carries no EF memory (a static, trace-time property: every
+branch then returns ``None`` and the pytree structures stay uniform).
+Non-EF policies return a zeroed residual slot so silent bank members
+never leak stale memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+
+from repro.comm.compressors import CompressorChain
+from repro.comm.error_feedback import ef_add, ef_residual
+from repro.comm.policy import CommPolicy
+from repro.comm.triggers import TriggerFn
+
+# the uniform agent-stage signature (the lax.switch branch contract)
+AgentStage = Callable[..., tuple]
+
+
+@dataclass(frozen=True)
+class StageBank:
+    """Deduped per-agent policies plus their built stages.
+
+    ``policies`` is the bank (first-seen order); ``agent_index[i]`` maps
+    agent ``i`` to its bank entry — the ``lax.switch`` index array.
+    """
+
+    policies: Tuple[CommPolicy, ...]
+    agent_index: Tuple[int, ...]
+    triggers: Tuple[TriggerFn, ...]
+    chains: Tuple[CompressorChain, ...]
+    ef_flags: Tuple[bool, ...]
+
+    @property
+    def needs_ef(self) -> bool:
+        return any(self.ef_flags)
+
+    @property
+    def num_agents(self) -> int:
+        return len(self.agent_index)
+
+    def agent_chains(self) -> Tuple[CompressorChain, ...]:
+        """Per-AGENT compressor chains (for wire-byte accounting)."""
+        return tuple(self.chains[i] for i in self.agent_index)
+
+    def stages(self, has_ef_memory: bool) -> Tuple[AgentStage, ...]:
+        """Build the uniform-signature branch per bank policy.
+
+        ``has_ef_memory`` says whether the TrainState carries residual
+        slots this trace — with it False, EF is off for every branch and
+        all branches return ``None`` memory (stable pytree carry).
+        """
+        return tuple(
+            _make_stage(trig, chain, use_ef=ef and has_ef_memory)
+            for trig, chain, ef in zip(self.triggers, self.chains, self.ef_flags)
+        )
+
+
+def _make_stage(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool
+                ) -> AgentStage:
+    def stage(params, grad, batch, local_loss, step, ef_mem):
+        alpha, gain = trig(params, grad, batch, local_loss, step)
+        g_eff = ef_add(grad, ef_mem if use_ef else None)
+        sent = chain.compress_tree(g_eff) if chain else g_eff
+        if ef_mem is None:
+            return alpha, gain, sent, None
+        if use_ef:
+            new_mem = ef_residual(g_eff, sent, alpha)
+        else:
+            new_mem = jax.tree_util.tree_map(jax.numpy.zeros_like, ef_mem)
+        return alpha, gain, sent, new_mem
+
+    return stage
+
+
+def build_stage_bank(
+    policies: Sequence[CommPolicy],
+    *,
+    loss_fn: Optional[Callable] = None,
+    probe_eps: float = 1e-2,
+    oracle: Optional[tuple] = None,
+) -> StageBank:
+    """Dedupe per-agent policies and build their trigger/chain stages.
+
+    Policies hash (frozen dataclasses), so agents sharing a policy share
+    one built stage — the bank a 64-agent, 3-tier network compiles is
+    exactly 3 branches.
+    """
+    if not policies:
+        raise ValueError("empty policy list")
+    bank: list = []
+    index: list = []
+    seen: dict = {}
+    for p in policies:
+        if p not in seen:
+            seen[p] = len(bank)
+            bank.append(p)
+        index.append(seen[p])
+    return StageBank(
+        policies=tuple(bank),
+        agent_index=tuple(index),
+        triggers=tuple(
+            p.build_trigger(loss_fn=loss_fn, probe_eps=probe_eps, oracle=oracle)
+            for p in bank
+        ),
+        chains=tuple(p.chain() for p in bank),
+        ef_flags=tuple(p.needs_ef for p in bank),
+    )

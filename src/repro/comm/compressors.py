@@ -15,6 +15,11 @@ Each compressor transforms that ``WireFormat``:
               scale itself is ignored)
 * ``topk(f)`` kept fraction ×= f, and each survivor now needs a 32-bit
               index (sparse coordinate format, Aji & Heafield 2017)
+* ``fp16`` / ``bf16``  value_bits → min(value_bits, 16): a half-precision
+              cast costs nothing on gradients already 16-bit wide
+* ``randk(f)`` kept fraction ×= f with NO index bits — sender and
+              receiver draw the subset from shared randomness
+              (Stich et al. 2018)
 
 ``ratio = frac × (value_bits + index_bits) / dense_bits`` — so for fp32
 gradients ``int8`` alone is 0.25, ``topk(0.05)`` alone is 0.10, and
@@ -96,11 +101,19 @@ class WireFormat:
 
 @dataclass(frozen=True)
 class Compressor:
-    """A built compressor stage: fake-compress fn + wire transform."""
+    """A built compressor stage: fake-compress fn + wire transform.
+
+    ``cast_bits`` marks a pure value-narrowing stage (fp16/bf16): inside
+    a chain its compress is SKIPPED when the running wire format is
+    already at or below that width, keeping the invariant that a stage
+    the byte model calls a no-op also leaves values untouched
+    (e.g. ``int8|fp16`` must not re-round the quantized values).
+    """
 
     spec: StageSpec
     compress: Callable[[jax.Array], jax.Array]      # one agent's tensor
     wire: Callable[[WireFormat], WireFormat]
+    cast_bits: float | None = None
 
 
 def build_compressor(spec: StageSpec) -> Compressor:
@@ -135,6 +148,75 @@ def _topk(args, spec):
     )
 
 
+def _cast_compressor(spec, dtype, bits: float) -> Compressor:
+    """Value cast through a narrower float dtype; ratio is dtype-aware:
+    ``value_bits = min(current, bits)``, so fp16 on bf16 gradients is a
+    no-op on the wire (ratio 1.0), not a spurious halving."""
+
+    def compress(x):
+        # values mirror the byte model: a gradient already ≤`bits` wide
+        # is passed through untouched (fp16-casting bf16 would overflow
+        # entries past 65504 to inf while the ratio reports a no-op)
+        if x.dtype.itemsize * 8 <= bits:
+            return x
+        return x.astype(dtype).astype(x.dtype)
+
+    return Compressor(
+        spec,
+        compress=compress,
+        wire=lambda w: replace(w, value_bits=min(w.value_bits, bits)),
+        cast_bits=bits,
+    )
+
+
+@COMPRESSORS.register("fp16", doc="IEEE half-precision values on the wire")
+def _fp16(args, spec):
+    return _cast_compressor(spec, jnp.float16, 16.0)
+
+
+@COMPRESSORS.register("bf16", doc="bfloat16 values on the wire")
+def _bf16(args, spec):
+    return _cast_compressor(spec, jnp.bfloat16, 16.0)
+
+
+def randk_sparsify(x: jax.Array, frac: float, key) -> jax.Array:
+    """Keep a uniformly random ``frac`` of entries per tensor (Stich et
+    al. 2018's rand-k family)."""
+    flat = x.reshape(-1)
+    k = max(1, int(frac * flat.size))
+    idx = jax.random.permutation(key, flat.size)[:k]
+    mask = jnp.zeros(flat.shape, bool).at[idx].set(True)
+    return (flat * mask).reshape(x.shape).astype(x.dtype)
+
+
+@COMPRESSORS.register("randk", params=(("frac", 0.01), ("seed", 0)),
+                      doc="random-k sparsification (shared seed: no index bits)")
+def _randk(args, spec):
+    frac = float(args["frac"])
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(f"randk frac must be in (0, 1], got {frac}")
+    seed = int(args["seed"])
+
+    def compress(x):
+        # Sender and receiver draw the coordinate subset from SHARED
+        # randomness, so survivors carry no index bits — rand-k's byte
+        # advantage over top-k.  This simulation salts the per-call key
+        # with the tensor's bits (standing in for the shared per-round
+        # counter), so the subset is redrawn every round and the mask is
+        # deterministic per input — jit/vmap-safe without a key plumb.
+        salt = jax.lax.bitcast_convert_type(
+            jnp.sum(x.astype(jnp.float32)), jnp.int32
+        )
+        key = jax.random.fold_in(jax.random.key(seed), salt)
+        return randk_sparsify(x, frac, key)
+
+    return Compressor(
+        spec,
+        compress=compress,
+        wire=lambda w: replace(w, frac=w.frac * frac),
+    )
+
+
 # ----------------------------------------------------------------------
 
 
@@ -148,9 +230,17 @@ class CompressorChain:
         return bool(self.stages)
 
     def compress(self, x: jax.Array) -> jax.Array:
-        """Fake-compress ONE AGENT's tensor (no leading agent axis)."""
+        """Fake-compress ONE AGENT's tensor (no leading agent axis).
+
+        Tracks the running wire format so cast stages the byte model
+        counts as no-ops (value_bits already ≤ the cast width) are also
+        value no-ops."""
+        bits = 8.0 * x.dtype.itemsize
+        fmt = WireFormat(value_bits=bits, dense_bits=bits)
         for c in self.stages:
-            x = c.compress(x)
+            if c.cast_bits is None or fmt.value_bits > c.cast_bits:
+                x = c.compress(x)
+            fmt = c.wire(fmt)
         return x
 
     def compress_tree(self, tree):

@@ -55,24 +55,41 @@ def dense_bits(grads) -> float:
     return 8.0 * nbytes / max(entries, 1)
 
 
+def fold_sum(x: jax.Array) -> jax.Array:
+    """Left-fold sum over the leading axis of a small per-agent vector.
+
+    ``jnp.sum``/``jnp.mean`` lower to a ``reduce`` whose association is
+    fusion-context-dependent, so two differently-structured programs
+    computing the same per-agent scalars (the hetero train step's switch
+    vs unroll dispatch) can drift one ULP in their summary metrics.  An
+    explicit add chain is association-fixed — XLA does not re-associate
+    plain float adds — making those summaries bit-identical.
+    """
+    total = x[0]
+    for i in range(1, int(x.shape[0])):
+        total = total + x[i]
+    return total
+
+
 def comm_stats(alphas: jax.Array, gains: jax.Array, *,
                structural: int, ratios: Sequence[float]) -> CommStats:
     """Assemble the round record from per-agent decisions.
 
-    ``ratios`` is one wire-compression ratio per agent (a single-element
-    sequence broadcasts — the homogeneous case).
+    ``alphas``/``gains`` are the per-agent ``(A,)`` vectors; ``ratios``
+    is one wire-compression ratio per agent (a single-element sequence
+    broadcasts — the homogeneous case).
     """
     ratios = tuple(float(r) for r in ratios)
     if len(ratios) == 1:
-        per_agent_bytes = structural * ratios[0] * jnp.sum(alphas)
+        per_agent_bytes = structural * ratios[0] * fold_sum(alphas)
     else:
-        per_agent_bytes = structural * jnp.sum(
+        per_agent_bytes = structural * fold_sum(
             alphas * jnp.asarray(ratios, jnp.float32)
         )
     return CommStats(
-        comm_rate=jnp.mean(alphas),
+        comm_rate=fold_sum(alphas) / alphas.shape[0],
         any_tx=jnp.max(alphas),
-        num_tx=jnp.sum(alphas),
-        mean_gain=jnp.mean(gains),
+        num_tx=fold_sum(alphas),
+        mean_gain=fold_sum(gains) / gains.shape[0],
         wire_bytes=per_agent_bytes.astype(jnp.float32),
     )

@@ -43,3 +43,12 @@ FIG1_RIGHT = LinRegConfig(
     name="fig1_right", n=10, num_agents=2, samples_per_agent=20,
     stepsize=0.2, steps=10, cov_range=(0.1, 5.0),
 )
+
+# Beyond-paper heterogeneous network (ROADMAP): m=8 agents on MIXED
+# per-agent comm policies (dense backbone + gated/compressed edge tiers),
+# exercising the lax.switch stage-bank dispatch and the wire-byte
+# frontier at a scale the paper never ran.
+HETERO_M8 = LinRegConfig(
+    name="hetero_m8", n=32, num_agents=8, samples_per_agent=64,
+    stepsize=0.05, steps=40, cov_range=(0.2, 4.0),
+)

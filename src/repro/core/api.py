@@ -45,11 +45,13 @@ import jax.numpy as jnp
 
 from repro.comm import (
     CommPolicy,
+    build_stage_bank,
     comm_stats,
     dense_bits,
     ef_add,
     ef_init,
     ef_residual,
+    fold_sum,
     normalize_policy,
     resolve_policy,
     structural_bytes,
@@ -131,6 +133,7 @@ def make_triggered_train_step(
     aux_loss_fn: Optional[Callable] = None,
     use_kernel: bool = False,
     oracle: Optional[tuple] = None,
+    hetero_dispatch: str = "switch",
 ):
     """Build ``train_step(state, batch) -> (state, metrics)``.
 
@@ -145,12 +148,24 @@ def make_triggered_train_step(
     ``use_kernel`` is the deprecated spelling of the trigger-level
     ``kernel=true`` spec argument.  ``oracle`` is the ``(Σ, w*)`` pair
     the ``gain_exact`` trigger requires.
+
+    ``hetero_dispatch`` picks the heterogeneous-network execution path:
+    ``"switch"`` (default) scans the agent axis and ``lax.switch``es
+    each agent into a deduped :class:`~repro.comm.StageBank` — compile
+    cost O(#distinct policies), usable at m≥64; ``"unroll"`` is the
+    PR-1 Python loop (compile cost O(m), kept as the bit-identical
+    reference).  Homogeneous policies ignore it.
     """
     if cfg.microbatches > 1:
         loss_fn = _microbatched(loss_fn, cfg.microbatches)
         if aux_loss_fn is not None:
             aux_loss_fn = _microbatched(aux_loss_fn, cfg.microbatches)
 
+    if hetero_dispatch not in ("switch", "unroll"):
+        raise ValueError(
+            f"hetero_dispatch must be 'switch' or 'unroll', "
+            f"got {hetero_dispatch!r}"
+        )
     resolved = normalize_policy(
         resolve_policy(cfg, policy, use_kernel=use_kernel), cfg.num_agents
     )
@@ -165,6 +180,12 @@ def make_triggered_train_step(
     if hetero is None:
         trigger, chain, needs_ef = build_stages(resolved)
         chains = (chain,)
+    elif hetero_dispatch == "switch":
+        bank = build_stage_bank(
+            hetero, loss_fn=loss_fn, probe_eps=cfg.lr, oracle=oracle
+        )
+        needs_ef = bank.needs_ef
+        chains = bank.agent_chains()
     else:
         stages = [build_stages(p) for p in hetero]
         needs_ef = any(ef for _, _, ef in stages)
@@ -176,18 +197,33 @@ def make_triggered_train_step(
             return main + aux_loss_fn(params, batch), main
         return main, main
 
-    def per_agent_fn(params, step, trig):
+    def grad_prologue(params, agent_batch, barrier: bool):
+        """One agent's (loss, grad) — the policy-independent prologue
+        shared by every dispatch path (keeping switch/unroll provably on
+        the same ops)."""
+        (obj, main), g = jax.value_and_grad(objective, has_aux=True)(
+            params, agent_batch
+        )
+        # Per-agent gradient (and probe) trees CANNOT inherit the
+        # FSDP embed@data layout — the agent axis IS the data axis.
+        # Pin them to model-axis (TP-style) sharding so each device
+        # holds params/TP per agent, not a replicated full tree
+        # (EXPERIMENTS.md §Perf, qwen3 iter-6 → iter-7).  No-op when
+        # no gather hook is installed (non-FSDP plans, CPU tests).
+        g = constrain_params(g, "")
+        if barrier:
+            # pin (loss, grad) before the trigger: XLA otherwise
+            # CSE-fuses the loss with the trigger's probe
+            # re-evaluation, which would put the unrolled hetero path
+            # one ULP off the switch path (whose cond boundary blocks
+            # that fusion).  Off under vmap — optimization_barrier
+            # has no batching rule in this jax.
+            main, g = jax.lax.optimization_barrier((main, g))
+        return main, g
+
+    def per_agent_fn(params, step, trig, barrier: bool = False):
         def per_agent(agent_batch):
-            (obj, main), g = jax.value_and_grad(objective, has_aux=True)(
-                params, agent_batch
-            )
-            # Per-agent gradient (and probe) trees CANNOT inherit the
-            # FSDP embed@data layout — the agent axis IS the data axis.
-            # Pin them to model-axis (TP-style) sharding so each device
-            # holds params/TP per agent, not a replicated full tree
-            # (EXPERIMENTS.md §Perf, qwen3 iter-6 → iter-7).  No-op when
-            # no gather hook is installed (non-FSDP plans, CPU tests).
-            g = constrain_params(g, "")
+            main, g = grad_prologue(params, agent_batch, barrier)
             alpha, gain = trig(params, g, agent_batch, main, step)
             return main, g, alpha, gain
         return per_agent
@@ -213,14 +249,45 @@ def make_triggered_train_step(
                 )
             else:
                 sent, new_ef = grads, state.ef_memory
+        elif hetero_dispatch == "switch":
+            # Heterogeneous: lax.scan over the agent axis, lax.switch
+            # into the deduped stage bank per agent.  A scalar switch
+            # index lowers to a conditional running exactly the ops the
+            # unrolled loop ran (bit-identical), but the stack is traced
+            # once per DISTINCT policy, not once per agent.
+            has_mem = needs_ef and state.ef_memory is not None
+            if needs_ef and not has_mem:
+                _warn_ef_memory_missing()
+            branches = bank.stages(has_mem)
+            agent_idx = jnp.asarray(bank.agent_index, jnp.int32)
+            mem = state.ef_memory if has_mem else None
+
+            def agent_body(carry, inp):
+                idx, agent_batch, mem_i = inp
+                main, g = grad_prologue(state.params, agent_batch, True)
+                alpha, gain, sent_i, new_mem_i = jax.lax.switch(
+                    idx, branches,
+                    state.params, g, agent_batch, main, state.step, mem_i,
+                )
+                return carry, (main, alpha, gain, sent_i, new_mem_i)
+
+            _, (losses, alphas, gains, sent, new_mem) = jax.lax.scan(
+                agent_body, 0.0, (agent_idx, batch, mem)
+            )
+            # same barrier as the unroll path below: pin the per-agent
+            # scalar stacks so both programs reduce a materialized (m,)
+            # buffer (XLA otherwise folds this mean into the scan as a
+            # sequential accumulator — off by one ULP)
+            losses, gains = jax.lax.optimization_barrier((losses, gains))
+            new_ef = new_mem if has_mem else state.ef_memory
         else:
-            # Heterogeneous: each agent runs ITS OWN trigger/compressor
-            # stack — an unrolled loop over the (small) agent axis.
+            # Heterogeneous "unroll": the PR-1 Python loop over agents —
+            # compile cost O(m), kept as the bit-identical reference.
             per = []
             for i, (trig_i, chain_i, ef_i) in enumerate(stages):
                 agent_batch = jax.tree_util.tree_map(lambda x: x[i], batch)
                 main, g, alpha, gain = per_agent_fn(
-                    state.params, state.step, trig_i
+                    state.params, state.step, trig_i, barrier=True
                 )(agent_batch)
                 use_ef = ef_i and state.ef_memory is not None
                 if ef_i and not use_ef:
@@ -233,7 +300,11 @@ def make_triggered_train_step(
                 resid = ef_residual(g_eff, s, alpha) if use_ef else None
                 per.append((main, alpha, gain, s, resid))
 
-            stack = lambda xs: jnp.stack(xs)
+            # materialize the stacked per-agent scalars: without the
+            # barrier XLA re-associates mean(stack(scalars)) into a
+            # scalar-add chain, drifting one ULP from the switch path's
+            # reduce over the scan's output buffer
+            stack = lambda xs: jax.lax.optimization_barrier(jnp.stack(xs))
             losses = stack([p[0] for p in per])
             alphas = stack([p[1] for p in per])
             gains = stack([p[2] for p in per])
@@ -268,7 +339,8 @@ def make_triggered_train_step(
             ratios=tuple(c.ratio_for(db) if c else 1.0 for c in chains),
         )
         metrics = {
-            "loss": jnp.mean(losses),
+            # fold_sum: association-fixed, so switch/unroll agree bitwise
+            "loss": fold_sum(losses) / losses.shape[0],
             "comm_rate": stats.comm_rate,
             "any_tx": stats.any_tx,
             "num_tx": stats.num_tx,

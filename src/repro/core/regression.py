@@ -10,11 +10,21 @@ Each iteration, each of the m agents draws N fresh i.i.d. samples, forms
 the empirical gradient (eq. 7), evaluates its trigger, and the server
 applies eq. (10).  Everything is a ``lax.scan`` so Monte-Carlo trials
 vmap cleanly.
+
+Trigger selection is *traced*, not a Python branch: a
+:class:`TriggerKnobs` value (mode index, λ, μ, decay id — see ``MODES``
+and ``DECAYS`` for the ``lax.switch`` branch order) fully determines one
+operating point, so a whole frontier is just a knob *array*.
+:func:`sweep` vmaps one run jointly over ``(grid_point × trial)`` and
+jits the result — one compiled program per frontier instead of one
+Python-loop iteration per λ (DESIGN.md §3).  ``lambda_sweep`` /
+``mu_sweep`` are thin wrappers over it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+import functools
+from typing import NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +64,17 @@ class Problem:
 
     def max_stable_eps(self) -> float:
         return float(2.0 / jnp.max(self.sigma_diag))
+
+
+# Problems are pytrees (arrays as leaves, scalars/shape knobs static) so
+# they can cross jit boundaries — the sweep cache keys on the static
+# fields + array shapes, letting repeat sweeps reuse one compilation.
+jax.tree_util.register_pytree_node(
+    Problem,
+    lambda p: ((p.sigma_diag, p.w_star),
+               (p.noise_std, p.eps, p.n_samples, p.num_agents)),
+    lambda aux, children: Problem(children[0], children[1], *aux),
+)
 
 
 def make_problem(cfg: LinRegConfig, key) -> Problem:
@@ -113,6 +134,78 @@ class RunResult(NamedTuple):
     def total_any_tx(self):
         """Thm 2's LHS: Σ_k max_i α_k^i."""
         return jnp.sum(jnp.max(self.alphas, axis=1))
+
+
+# ----------------------------------------------------------------------
+# Traced trigger knobs — the sweep engine's grid coordinates
+# ----------------------------------------------------------------------
+
+# lax.switch branch order; index into these to build knobs by hand
+MODES: Tuple[str, ...] = (
+    "gain_exact", "gain_estimated", "grad_norm", "always", "never"
+)
+DECAYS: Tuple[str, ...] = ("const", "inv_t", "geometric")
+
+
+class TriggerKnobs(NamedTuple):
+    """One simulator operating point as traced arrays.
+
+    Scalars select a single run (:func:`run`); ``(G,)`` arrays form a
+    sweep grid (:func:`sweep`).  ``mode`` indexes ``MODES``, ``decay``
+    indexes ``DECAYS``; ``lam``/``mu`` are the trigger thresholds (the
+    one the selected mode ignores is simply unused).
+    """
+
+    mode: jnp.ndarray   # int32 index into MODES
+    lam: jnp.ndarray    # f32 gain threshold λ
+    mu: jnp.ndarray     # f32 grad-norm threshold μ
+    decay: jnp.ndarray  # int32 index into DECAYS (λ schedule)
+
+
+def make_knobs(mode: str = "gain_estimated", lam: float = 0.0,
+               mu: float = 0.0, lam_decay: str = "const") -> TriggerKnobs:
+    """Scalar knobs from the legacy string/float arguments."""
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}")
+    if lam_decay not in DECAYS:
+        raise ValueError(f"unknown lam_decay {lam_decay!r}")
+    return TriggerKnobs(
+        mode=jnp.int32(MODES.index(mode)),
+        lam=jnp.float32(lam),
+        mu=jnp.float32(mu),
+        decay=jnp.int32(DECAYS.index(lam_decay)),
+    )
+
+
+def grid_from_points(points: Sequence[dict]) -> TriggerKnobs:
+    """Stack per-point ``make_knobs`` kwargs into a ``(G,)`` grid."""
+    if not points:
+        raise ValueError("empty sweep grid")
+    knobs = [make_knobs(**p) for p in points]
+    return TriggerKnobs(*(jnp.stack(x) for x in zip(*knobs)))
+
+
+def grid_from_specs(specs: Sequence) -> TriggerKnobs:
+    """A grid from repro.comm policy specs (trigger-only, like ``run``)."""
+    return grid_from_points([_policy_to_sim_args(s) for s in specs])
+
+
+def lambda_grid(lams: Sequence[float], mode: str = "gain_estimated",
+                lam_decay: str = "const") -> TriggerKnobs:
+    """The Fig-2-Left axis: one grid point per λ."""
+    return grid_from_points(
+        [dict(mode=mode, lam=float(l), lam_decay=lam_decay) for l in lams]
+    )
+
+
+def mu_grid(mus: Sequence[float]) -> TriggerKnobs:
+    """The grad-norm baseline axis: one grid point per μ."""
+    return grid_from_points([dict(mode="grad_norm", mu=float(m)) for m in mus])
+
+
+def grid_concat(*grids: TriggerKnobs) -> TriggerKnobs:
+    """Concatenate sweep grids (e.g. a λ family next to a μ family)."""
+    return TriggerKnobs(*(jnp.concatenate(x) for x in zip(*grids)))
 
 
 def _policy_to_sim_args(policy):
@@ -177,35 +270,56 @@ def run(
         mode, lam, mu, lam_decay = (
             sim["mode"], sim["lam"], sim["mu"], sim["lam_decay"]
         )
+    return run_knobs(problem, key, steps,
+                     make_knobs(mode, lam, mu, lam_decay), w0=w0)
+
+
+def run_knobs(
+    problem: Problem,
+    key,
+    steps: int,
+    knobs: TriggerKnobs,
+    w0: jnp.ndarray | None = None,
+) -> RunResult:
+    """The traced core of :func:`run`: knobs are arrays, so this vmaps
+    over operating points (``sweep``) as readily as over trials."""
     m, eps = problem.num_agents, problem.eps
-    rho = problem.rho()
+    # Thm 1's ρ as an array (Problem.rho() calls float(), which would
+    # break under jit tracing in sweep)
+    rho = jnp.max((1.0 - eps * problem.sigma_diag) ** 2).astype(jnp.float32)
+    lam = knobs.lam.astype(jnp.float32)
+    mu = knobs.mu.astype(jnp.float32)
+    sigma_full = jnp.diag(problem.sigma_diag)
     if w0 is None:
         w0 = jnp.zeros((problem.n,), jnp.float32)
 
     def lam_at(k):
-        if lam_decay == "const":
-            return jnp.float32(lam)
-        if lam_decay == "inv_t":
-            return jnp.float32(lam) / (1.0 + k)
-        if lam_decay == "geometric":
-            return jnp.float32(lam) * jnp.float32(rho) ** k
-        raise ValueError(f"unknown lam_decay {lam_decay!r}")
+        return jax.lax.switch(knobs.decay, [
+            lambda k: lam,                 # const
+            lambda k: lam / (1.0 + k),     # inv_t
+            lambda k: lam * rho ** k,      # geometric (paper's λ·ρ^k)
+        ], k)
 
     def trigger(w, g, xs, lam_k):
-        if mode == "gain_exact":
-            gain = linreg_gain_exact(w, g, eps, jnp.diag(problem.sigma_diag), problem.w_star)
+        # branch order = MODES; all branches share one signature so the
+        # mode is a traced index (vmappable across a sweep grid)
+        def gain_exact(w, g, xs):
+            gain = linreg_gain_exact(w, g, eps, sigma_full, problem.w_star)
             return (gain <= -lam_k).astype(jnp.float32), gain
-        if mode == "gain_estimated":
+        def gain_estimated(w, g, xs):
             gain = linreg_gain_estimated(w, g, eps, xs)
             return (gain <= -lam_k).astype(jnp.float32), gain
-        if mode == "grad_norm":
+        def grad_norm(w, g, xs):
             gsq = g @ g
             return (gsq >= mu).astype(jnp.float32), -eps * gsq
-        if mode == "always":
+        def always(w, g, xs):
             return jnp.float32(1.0), jnp.float32(0.0)
-        if mode == "never":
+        def never(w, g, xs):
             return jnp.float32(0.0), jnp.float32(0.0)
-        raise ValueError(f"unknown mode {mode!r}")
+        return jax.lax.switch(
+            knobs.mode, [gain_exact, gain_estimated, grad_norm, always, never],
+            w, g, xs,
+        )
 
     def step(w, inp):
         key_k, k = inp
@@ -232,22 +346,48 @@ def run_many(problem, key, steps, num_trials, **kw):
     return jax.vmap(lambda k: run(problem, k, steps, **kw))(keys)
 
 
+def sweep(problem, key, steps, grid: TriggerKnobs, num_trials: int) -> RunResult:
+    """One jitted program for an entire frontier.
+
+    ``grid`` carries ``(G,)`` knob arrays; every grid point reuses the
+    SAME ``num_trials`` trial keys (exactly what the seed's per-λ Python
+    loop did), so frontiers are comparable across points.  Returns a
+    :class:`RunResult` whose leaves gained leading ``(G, trial)`` axes:
+    ``J_traj (G,T,K+1)``, ``alphas/gains (G,T,K,m)``, ``w_final (G,T,n)``.
+    """
+    keys = jax.random.split(key, num_trials)
+    return _sweep_compiled(problem, keys, int(steps), grid)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _sweep_compiled(problem, keys, steps, grid):
+    per_trial = jax.vmap(
+        lambda knobs, k: run_knobs(problem, k, steps, knobs),
+        in_axes=(None, 0),
+    )
+    return jax.vmap(per_trial, in_axes=(0, None))(grid, keys)
+
+
+def frontier(res: RunResult):
+    """Reduce a sweep result to per-point frontier coordinates:
+    (mean final J, mean total comm Σ_k Σ_i α, mean any-tx Σ_k max_i α)."""
+    J = jnp.mean(res.J_traj[..., -1], axis=-1)
+    comm = jnp.mean(jnp.sum(res.alphas, axis=(-2, -1)), axis=-1)
+    any_tx = jnp.mean(jnp.sum(jnp.max(res.alphas, axis=-1), axis=-1), axis=-1)
+    return J, comm, any_tx
+
+
 def lambda_sweep(problem, key, steps, lams, num_trials, mode="gain_estimated"):
-    """Fig 2 (Left): mean final J and mean total comm per λ."""
-    out_J, out_comm, out_any = [], [], []
-    for lam in lams:
-        res = run_many(problem, key, steps, num_trials, mode=mode, lam=float(lam))
-        out_J.append(jnp.mean(res.J_traj[:, -1]))
-        out_comm.append(jnp.mean(jnp.sum(res.alphas, axis=(1, 2))))
-        out_any.append(jnp.mean(jnp.sum(jnp.max(res.alphas, axis=2), axis=1)))
-    return jnp.stack(out_J), jnp.stack(out_comm), jnp.stack(out_any)
+    """Fig 2 (Left): mean final J and mean total comm per λ.
+
+    Thin wrapper over :func:`sweep` — one jitted program for the whole
+    curve instead of a Python loop per λ; outputs match the seed loop."""
+    return frontier(
+        sweep(problem, key, steps, lambda_grid(lams, mode=mode), num_trials)
+    )
 
 
 def mu_sweep(problem, key, steps, mus, num_trials):
     """Grad-norm baseline sweep (Fig 1 Right comparison axis)."""
-    out_J, out_comm = [], []
-    for mu in mus:
-        res = run_many(problem, key, steps, num_trials, mode="grad_norm", mu=float(mu))
-        out_J.append(jnp.mean(res.J_traj[:, -1]))
-        out_comm.append(jnp.mean(jnp.sum(res.alphas, axis=(1, 2))))
-    return jnp.stack(out_J), jnp.stack(out_comm)
+    J, comm, _ = frontier(sweep(problem, key, steps, mu_grid(mus), num_trials))
+    return J, comm

@@ -98,7 +98,7 @@ def test_registries_list_expected_stages():
     for name in ("always", "never", "periodic", "grad_norm", "gain_lookahead",
                  "gain_quadratic", "gain_estimated", "gain_exact"):
         assert name in TRIGGERS.names()
-    for name in ("identity", "int8", "topk"):
+    for name in ("identity", "int8", "topk", "fp16", "bf16", "randk"):
         assert name in COMPRESSORS.names()
 
 
@@ -212,6 +212,71 @@ def test_wire_format_ratios():
     # chain order: int8 before topk gives the same bytes in this model
     assert CommPolicy.parse("always|int8|topk(0.05)").wire_ratio == \
         pytest.approx(0.05 * (32 + 8) / 32)
+
+
+def test_half_precision_cast_compressors(rng):
+    """fp16/bf16 stages round-trip through the narrow dtype and report
+    dtype-aware ratios (a 16-bit cast is free on bf16 gradients)."""
+    x = jax.random.normal(rng, (64,)) * 100.0
+    fp16 = CommPolicy.parse("always|fp16").chain()
+    bf16 = CommPolicy.parse("always|bf16").chain()
+    np.testing.assert_array_equal(
+        np.asarray(fp16.compress(x)),
+        np.asarray(x.astype(jnp.float16).astype(x.dtype)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(bf16.compress(x)),
+        np.asarray(x.astype(jnp.bfloat16).astype(x.dtype)),
+    )
+    for chain in (fp16, bf16):
+        assert chain.ratio_for(32.0) == pytest.approx(0.5)
+        assert chain.ratio_for(16.0) == pytest.approx(1.0)  # already 16-bit
+    # values mirror the byte model: on an already-16-bit gradient the
+    # cast is a true no-op — fp16-casting bf16 would overflow to inf
+    big = jnp.array([1e5, -7e4, 2.0], jnp.bfloat16)
+    out = fp16.compress(big)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(big, np.float32))
+    # chains compose: cast then quantize = int8 bytes
+    assert CommPolicy.parse("always|fp16|int8").wire_ratio == pytest.approx(0.25)
+    # a cast the CHAIN's byte model calls a no-op is a value no-op too:
+    # int8 narrowed value_bits to 8, so the fp16 stage must not re-round
+    y = jax.random.normal(jax.random.fold_in(rng, 1), (64,)) * 10
+    np.testing.assert_array_equal(
+        np.asarray(CommPolicy.parse("always|int8|fp16").chain().compress(y)),
+        np.asarray(CommPolicy.parse("always|int8").chain().compress(y)),
+    )
+
+
+def test_randk_compressor(rng):
+    """randk keeps exactly k entries, is deterministic per input, redraws
+    across inputs, and carries no index bits in the byte model."""
+    x = jax.random.normal(rng, (100,)) + 3.0  # bounded away from zero
+    chain = CommPolicy.parse("always|randk(0.25)").chain()
+    out = np.asarray(chain.compress(x))
+    assert np.sum(out != 0) == 25
+    np.testing.assert_array_equal(out, np.asarray(chain.compress(x)))
+    # surviving values are unmodified
+    kept = out != 0
+    np.testing.assert_array_equal(out[kept], np.asarray(x)[kept])
+    # a different tensor draws a different subset (shared-seed per-round
+    # redraw, unlike a stationary mask)
+    y = x + 1.0
+    assert not np.array_equal(np.asarray(chain.compress(y)) != 0, kept)
+    # byte model: no index bits (mask derives from the shared seed)
+    assert chain.ratio_for(32.0) == pytest.approx(0.25)
+    assert CommPolicy.parse("always|randk(0.25)|int8").wire_ratio == \
+        pytest.approx(0.25 * 8 / 32)
+    with pytest.raises(ValueError, match="frac must be"):
+        CommPolicy.parse("always|randk(0.0)").chain()
+
+
+def test_randk_trains_with_error_feedback():
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=2,
+                      comm="always|randk(0.5)+ef")
+    _, hist = _smoke_run(cfg, steps=15)
+    assert float(hist[-1]["loss"]) < float(hist[0]["loss"]) * 0.5
 
 
 def test_wire_ratio_respects_native_dtype():

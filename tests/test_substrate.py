@@ -187,7 +187,9 @@ def test_hlo_cost_scan_trip_multiplication():
     # XLA's own counter misses the scan body multiplicity — that's why
     # hlo_cost exists; guard that the discrepancy is still there (if XLA
     # fixes it someday this test will flag the redundancy).
-    xla = jax.jit(scanned).lower(x, w).compile().cost_analysis()["flops"]
+    xla = hlo_cost.xla_cost_analysis(
+        jax.jit(scanned).lower(x, w).compile()
+    )["flops"]
     assert xla < want / 2
 
 

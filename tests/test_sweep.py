@@ -1,0 +1,263 @@
+"""ISSUE-2 acceptance surface: the vectorized sweep engine reproduces
+the seed's Python-loop sweeps, and the lax.switch heterogeneous train
+step is bit-identical to the PR-1 unrolled path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommPolicy, build_stage_bank
+from repro.configs.base import TrainConfig
+from repro.configs.paper_linreg import FIG2_LEFT
+from repro.core import regression as R
+from repro.core.api import init_train_state, make_triggered_train_step
+from repro.optim import optimizers as opt_lib
+
+STEPS, TRIALS = 10, 64
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return R.make_problem(FIG2_LEFT, jax.random.key(0))
+
+
+# ----------------------------------------------------------------------
+# sweep engine vs the seed's per-λ Python loop
+# ----------------------------------------------------------------------
+
+def _seed_lambda_sweep(problem, key, steps, lams, num_trials, mode):
+    """The seed implementation of lambda_sweep, kept as the reference."""
+    out_J, out_comm, out_any = [], [], []
+    for lam in lams:
+        res = R.run_many(problem, key, steps, num_trials, mode=mode,
+                         lam=float(lam))
+        out_J.append(jnp.mean(res.J_traj[:, -1]))
+        out_comm.append(jnp.mean(jnp.sum(res.alphas, axis=(1, 2))))
+        out_any.append(jnp.mean(jnp.sum(jnp.max(res.alphas, axis=2), axis=1)))
+    return jnp.stack(out_J), jnp.stack(out_comm), jnp.stack(out_any)
+
+
+def _seed_mu_sweep(problem, key, steps, mus, num_trials):
+    out_J, out_comm = [], []
+    for mu in mus:
+        res = R.run_many(problem, key, steps, num_trials, mode="grad_norm",
+                         mu=float(mu))
+        out_J.append(jnp.mean(res.J_traj[:, -1]))
+        out_comm.append(jnp.mean(jnp.sum(res.alphas, axis=(1, 2))))
+    return jnp.stack(out_J), jnp.stack(out_comm)
+
+
+# Golden values minted by running the SEED-commit (pre-rewrite, Python
+# `if mode ==` triggers) lambda_sweep/mu_sweep on FIG2_LEFT with
+# key(0)/key(1), steps=10, trials=64 — pins the lax.switch rewrite to
+# the original numerics, not merely to itself.
+_SEED_LAMS = [0.0, 0.1, 0.4, 1.6, 6.4]
+_SEED_LAMBDA_GOLD = (
+    [2.17334270, 2.02645516, 1.92962575, 2.55836558, 5.31802416],  # J
+    [20.0, 18.703125, 15.1875, 8.96875, 3.609375],                 # comm
+    [10.0, 9.90625, 9.015625, 6.21875, 2.9375],                    # any_tx
+)
+_SEED_MUS = [0.0, 1.0, 10.0, 100.0]
+_SEED_MU_GOLD = (
+    [2.17334270, 2.04162741, 2.17509151, 6.38211632],              # J
+    [20.0, 18.8125, 11.4375, 2.859375],                            # comm
+)
+
+
+def test_lambda_sweep_matches_seed_golden_values(problem):
+    got = R.lambda_sweep(problem, jax.random.key(1), STEPS, _SEED_LAMS, 64)
+    for g, w in zip(got, _SEED_LAMBDA_GOLD):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_mu_sweep_matches_seed_golden_values(problem):
+    got = R.mu_sweep(problem, jax.random.key(1), STEPS, _SEED_MUS, 64)
+    for g, w in zip(got, _SEED_MU_GOLD):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["gain_estimated", "gain_exact"])
+def test_lambda_sweep_matches_seed_loop(problem, mode):
+    """One jitted sweep() == the seed's run_many-per-λ loop to 1e-5."""
+    key = jax.random.key(1)
+    lams = [0.0, 0.1, 0.4, 1.6, 6.4]
+    want = _seed_lambda_sweep(problem, key, STEPS, lams, TRIALS, mode)
+    got = R.lambda_sweep(problem, key, STEPS, lams, TRIALS, mode=mode)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_mu_sweep_matches_seed_loop(problem):
+    key = jax.random.key(2)
+    mus = [0.0, 1.0, 10.0, 100.0]
+    want = _seed_mu_sweep(problem, key, STEPS, mus, TRIALS)
+    got = R.mu_sweep(problem, key, STEPS, mus, TRIALS)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_sweep_single_point_lane_equals_run_many(problem):
+    """A sweep lane carries exactly a run_many trajectory (same keys)."""
+    key = jax.random.key(3)
+    rm = R.run_many(problem, key, STEPS, 8, mode="grad_norm", mu=3.0)
+    sw = R.sweep(problem, key, STEPS, R.mu_grid([3.0]), 8)
+    np.testing.assert_array_equal(np.asarray(rm.J_traj),
+                                  np.asarray(sw.J_traj[0]))
+    np.testing.assert_array_equal(np.asarray(rm.alphas),
+                                  np.asarray(sw.alphas[0]))
+
+
+def test_mixed_mode_grid_in_one_sweep(problem):
+    """Modes, λs, μs and decay ids all vary inside ONE vmapped grid."""
+    key = jax.random.key(4)
+    grid = R.grid_concat(
+        R.lambda_grid([0.2], mode="gain_exact", lam_decay="geometric"),
+        R.mu_grid([5.0]),
+        R.grid_from_specs(["always", "never"]),
+    )
+    res = R.sweep(problem, key, STEPS, grid, 8)
+    assert res.J_traj.shape == (4, 8, STEPS + 1)
+    ref = R.run_many(problem, key, STEPS, 8, mode="gain_exact", lam=0.2,
+                     lam_decay="geometric")
+    np.testing.assert_array_equal(np.asarray(ref.alphas),
+                                  np.asarray(res.alphas[0]))
+    # always transmits everywhere, never nowhere
+    assert float(jnp.sum(res.alphas[2])) == 8 * STEPS * problem.num_agents
+    assert float(jnp.sum(res.alphas[3])) == 0.0
+
+
+def test_knob_vocabulary_errors():
+    with pytest.raises(ValueError, match="unknown mode"):
+        R.make_knobs(mode="warp")
+    with pytest.raises(ValueError, match="unknown lam_decay"):
+        R.make_knobs(lam_decay="sometimes")
+    with pytest.raises(ValueError, match="empty sweep grid"):
+        R.grid_from_points([])
+
+
+# ----------------------------------------------------------------------
+# lax.switch heterogeneous dispatch vs the PR-1 unrolled loop
+# ----------------------------------------------------------------------
+
+N_FEATURES = 4
+MIXED_M4 = ("always",
+            "gain_lookahead(lam=0.01)|int8+ef",
+            "grad_norm(mu=0.5)|topk(0.5)",
+            "periodic(period=2)")
+
+
+def linreg_loss(params, batch):
+    xs, ys = batch
+    r = xs @ params["w"] - ys
+    return 0.5 * jnp.mean(r * r)
+
+
+def _batch(key, A, n=16):
+    kx, kn = jax.random.split(key)
+    xs = jax.random.normal(kx, (A, n, N_FEATURES))
+    w_star = jnp.arange(1.0, N_FEATURES + 1)
+    ys = jnp.einsum("anj,j->an", xs, w_star) + 0.05 * jax.random.normal(
+        kn, (A, n)
+    )
+    return xs, ys
+
+
+def _train(cfg, dispatch, steps=12):
+    opt = opt_lib.from_config(cfg)
+    step_fn = jax.jit(make_triggered_train_step(
+        linreg_loss, opt, cfg, hetero_dispatch=dispatch
+    ))
+    state = init_train_state({"w": jnp.zeros(N_FEATURES)}, opt, cfg)
+    hist = []
+    for s in range(steps):
+        state, m = step_fn(state, _batch(jax.random.key(s), cfg.num_agents))
+        hist.append({k: np.asarray(v) for k, v in m.items()})
+    return state, hist
+
+
+def test_switch_dispatch_bit_identical_to_unrolled_m4():
+    """ISSUE-2 acceptance: metrics, params, opt state and EF memory are
+    BIT-identical between the two hetero dispatch paths at m=4 mixed."""
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=4, comm=MIXED_M4)
+    s_sw, h_sw = _train(cfg, "switch")
+    s_un, h_un = _train(cfg, "unroll")
+    for a, b in zip(h_sw, h_un):
+        for k in a:
+            assert np.array_equal(a[k], b[k]), (k, a[k], b[k])
+    for a, b in zip(jax.tree_util.tree_leaves(s_sw),
+                    jax.tree_util.tree_leaves(s_un)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_switch_dispatch_bit_identical_under_adamw():
+    cfg = TrainConfig(lr=0.05, optimizer="adamw", num_agents=4,
+                      comm=MIXED_M4)
+    s_sw, h_sw = _train(cfg, "switch", steps=6)
+    s_un, h_un = _train(cfg, "unroll", steps=6)
+    for a, b in zip(h_sw, h_un):
+        for k in a:
+            assert np.array_equal(a[k], b[k]), k
+    for a, b in zip(jax.tree_util.tree_leaves(s_sw),
+                    jax.tree_util.tree_leaves(s_un)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_switch_dispatch_scales_to_m16_with_3_banks():
+    """m=16 agents over 3 distinct policies: the bank dedupes to 3
+    branches and the step trains."""
+    comm = tuple(["always"] * 6
+                 + ["gain_lookahead(lam=0.01)|int8+ef"] * 5
+                 + ["grad_norm(mu=0.5)|randk(0.5)"] * 5)
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=16, comm=comm)
+    state, hist = _train(cfg, "switch", steps=8)
+    assert float(hist[-1]["loss"]) < float(hist[0]["loss"])
+    assert all(0.0 <= float(h["comm_rate"]) <= 1.0 for h in hist)
+
+
+def test_invalid_dispatch_rejected():
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=2,
+                      comm=("always", "never"))
+    opt = opt_lib.from_config(cfg)
+    with pytest.raises(ValueError, match="hetero_dispatch"):
+        make_triggered_train_step(linreg_loss, opt, cfg,
+                                  hetero_dispatch="sideways")
+
+
+# ----------------------------------------------------------------------
+# stage bank
+# ----------------------------------------------------------------------
+
+def test_stage_bank_dedupes_policies():
+    pols = CommPolicy.parse(
+        "always ; gain_lookahead(lam=0.1)|int8+ef ; always ; "
+        "gain_lookahead(lam=0.1)|int8+ef ; never"
+    )
+    bank = build_stage_bank(pols, loss_fn=linreg_loss, probe_eps=0.1)
+    assert len(bank.policies) == 3
+    assert bank.agent_index == (0, 1, 0, 1, 2)
+    assert bank.needs_ef
+    assert len(bank.agent_chains()) == 5
+    assert len(bank.stages(True)) == 3
+
+
+def test_stage_bank_uniform_signature_smoke():
+    """Every stage answers the uniform (params, grad, batch, loss, step,
+    ef_mem) call with a uniform (alpha, gain, sent, new_mem) tuple."""
+    pols = CommPolicy.parse("always|int8 ; grad_norm(mu=0.0)")
+    bank = build_stage_bank(pols, loss_fn=linreg_loss, probe_eps=0.1)
+    params = {"w": jnp.zeros(N_FEATURES)}
+    xs, ys = _batch(jax.random.key(0), 2)
+    ab = (xs[0], ys[0])
+    g = jax.grad(linreg_loss)(params, ab)
+    for stage in bank.stages(False):
+        alpha, gain, sent, new_mem = stage(
+            params, g, ab, linreg_loss(params, ab), jnp.int32(0), None
+        )
+        assert alpha.shape == () and gain.shape == ()
+        assert jax.tree_util.tree_structure(sent) == \
+            jax.tree_util.tree_structure(g)
+        assert new_mem is None

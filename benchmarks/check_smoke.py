@@ -1,0 +1,173 @@
+"""CI bench regression gate: diff ``experiments/bench/*_smoke.json``
+against the committed baseline (``benchmarks/smoke_baseline.json``) and
+exit nonzero on drift.
+
+The smoke benchmarks skip their statistical claim asserts (toy trial
+counts), so before this gate a structurally broken payload — missing
+keys, NaN losses, wire-byte accounting gone wild — would still upload
+green artifacts.  The baseline pins, per benchmark:
+
+* ``required_keys``  — top-level keys that must be present
+* ``claims``         — claim names that must appear under ``claims``
+                       dicts (values are NOT pinned: smoke sizes are
+                       too small for the statistical claims to hold)
+* ``rows``           — a list of ``{"key", "count", "row_keys"}``
+                       specs: how many row records the payload carries
+                       under each list key (collected recursively, so
+                       nested ``mixes[].rows`` count too) and the keys
+                       each row must have
+* ``finite_keys``    — key names whose numeric values (recursively
+                       collected) must be finite — the no-NaN-loss gate
+* ``wire_ratio``     — ``{"dense_key", "bytes_key", "bounds"}``: every
+                       ``bytes_key`` value divided by the payload's
+                       ``dense_key`` must land in ``bounds``
+
+A ``*_smoke.json`` file with no baseline entry fails the gate (add the
+entry when adding the benchmark), as does a baselined file that the CI
+run did not produce.
+
+Usage: ``python -m benchmarks.check_smoke [--dir DIR] [--baseline FILE]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT_DIR = REPO / "experiments" / "bench"
+DEFAULT_BASELINE = REPO / "benchmarks" / "smoke_baseline.json"
+
+
+def collect(node, key: str, out: list) -> list:
+    """All values stored under dict key ``key``, at any nesting depth."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            if k == key:
+                out.append(v)
+            collect(v, key, out)
+    elif isinstance(node, list):
+        for v in node:
+            collect(v, key, out)
+    return out
+
+
+def numbers_under(node, key: str) -> list:
+    """All numeric leaves stored under ``key`` (scalars or flat lists)."""
+    vals = []
+    for v in collect(node, key, []):
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            vals.append(float(v))
+        elif isinstance(v, list):
+            vals.extend(
+                float(x)
+                for x in v
+                if isinstance(x, (int, float)) and not isinstance(x, bool)
+            )
+    return vals
+
+
+def check_one(name: str, payload: dict, spec: dict) -> list:
+    """All drift findings for one benchmark payload (empty = clean)."""
+    errs = []
+    for k in spec.get("required_keys", []):
+        if k not in payload:
+            errs.append(f"missing top-level key {k!r}")
+    if spec.get("claims"):
+        seen = set()
+        for claims in collect(payload, "claims", []):
+            if isinstance(claims, dict):
+                seen.update(claims)
+        for c in spec["claims"]:
+            if c not in seen:
+                errs.append(f"missing claim {c!r}")
+    for rows_spec in spec.get("rows", []):
+        rows = [r for group in collect(payload, rows_spec["key"], [])
+                if isinstance(group, list) for r in group]
+        if len(rows) != rows_spec["count"]:
+            errs.append(
+                f"expected {rows_spec['count']} {rows_spec['key']!r} "
+                f"records, found {len(rows)}"
+            )
+        for k in rows_spec.get("row_keys", []):
+            bad = sum(1 for r in rows if not isinstance(r, dict) or k not in r)
+            if bad:
+                errs.append(f"{bad} row(s) missing key {k!r}")
+    for k in spec.get("finite_keys", []):
+        vals = numbers_under(payload, k)
+        if not vals:
+            errs.append(f"no numeric values found under {k!r}")
+        bad = [v for v in vals if not math.isfinite(v)]
+        if bad:
+            errs.append(f"non-finite value(s) under {k!r}: {bad[:3]}")
+    wr = spec.get("wire_ratio")
+    if wr:
+        dense = payload.get(wr["dense_key"])
+        lo, hi = wr["bounds"]
+        if not isinstance(dense, (int, float)) or dense <= 0:
+            errs.append(f"bad {wr['dense_key']!r}: {dense!r}")
+        else:
+            byte_vals = numbers_under(payload, wr["bytes_key"])
+            bad = [v / dense for v in byte_vals if not lo <= v / dense <= hi]
+            if bad:
+                errs.append(
+                    f"wire-byte ratio(s) out of [{lo}, {hi}]: "
+                    f"{[round(r, 4) for r in bad[:3]]}"
+                )
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--dir",
+        type=Path,
+        default=DEFAULT_DIR,
+        help="directory holding the *_smoke.json artifacts",
+    )
+    ap.add_argument(
+        "--baseline",
+        type=Path,
+        default=DEFAULT_BASELINE,
+        help="committed baseline/schema file",
+    )
+    args = ap.parse_args(argv)
+
+    baseline = json.loads(args.baseline.read_text())
+    produced = {p.name: p for p in sorted(args.dir.glob("*_smoke.json"))}
+    failures = {}
+
+    for fname in produced:
+        if fname[: -len(".json")] not in baseline:
+            failures[fname] = [
+                "no baseline entry — add one to "
+                f"{args.baseline.relative_to(REPO)}"
+            ]
+    for name, spec in baseline.items():
+        fname = f"{name}.json"
+        path = produced.get(fname)
+        if path is None:
+            failures[fname] = ["baselined benchmark produced no artifact"]
+            continue
+        try:
+            payload = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            failures[fname] = [f"unparseable JSON: {e}"]
+            continue
+        errs = check_one(name, payload, spec)
+        if errs:
+            failures[fname] = errs
+
+    for fname in sorted(failures):
+        for e in failures[fname]:
+            print(f"DRIFT {fname}: {e}", file=sys.stderr)
+    ok = len(baseline) - sum(1 for f in failures if f[:-5] in baseline)
+    drift = f", {len(failures)} file(s) drifted" if failures else ""
+    print(f"bench gate: {ok}/{len(baseline)} baselined benchmarks clean{drift}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,7 +6,6 @@ import time
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
 

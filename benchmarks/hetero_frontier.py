@@ -2,11 +2,14 @@
 agents on MIXED per-agent policies, loss vs effective wire bytes.
 
 A tiered network — 2 dense "backbone" agents, then fp16 / int8+EF /
-topk|int8+EF tiers whose gain-trigger λ tightens with the tier — is run
+topk|int8+EF tiers whose gain-trigger λ tightens with the tier — runs
 through ``make_triggered_train_step``'s ``lax.switch`` stage-bank
 dispatch (the path that makes m≥8 mixed policies compile as O(#tiers),
-not O(m)).  Sweeping a global λ scale traces the loss-vs-wire-bytes
-frontier; exact population loss J(w) comes from the problem oracle.
+not O(m)).  The λ-scale axis is a ``repro.core.frontier`` grid: the
+policies are built once at base λ and the WHOLE frontier — stacked
+TrainStates vmapped over the scale grid — compiles and runs as one
+jitted program (this file was the last per-λ Python rerun loop).
+Exact population loss J(w) comes from the problem oracle.
 
 Claims: tightening λ monotonically reduces total wire bytes, the
 frontier spans a wide byte range (the compressed tiers bite), and every
@@ -16,36 +19,20 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import fmt_row, save_result
 from repro.configs.base import TrainConfig
-from repro.configs.paper_linreg import HETERO_M8
+from repro.configs.paper_linreg import HETERO_M8, HETERO_M8_NET
 from repro.core import regression as R
-from repro.core.api import init_train_state, make_triggered_train_step
+from repro.core.frontier import frontier_curve, run_frontier
 from repro.optim import optimizers as opt_lib
 
 # per-step gains on this problem run ≈ −80 (round 1) → −0.14 (round 40),
-# so λ from 0 to ~10 traces the whole gating range
+# so λ scales from 0 to ~10 trace the whole gating range.  (λ=0 still
+# exercises all four stage banks — the triggers fire on any descending
+# step — so the sweep varies ONLY the gating tightness.)
 LAM_SCALES = [0.0, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0]
-
-
-def tiered_policies(lam: float, m: int):
-    """The mixed per-agent policy tuple: dense backbone + 3 edge tiers.
-
-    λ=0 still exercises all four stage banks (the triggers fire on any
-    descending step), so the sweep varies ONLY the gating tightness."""
-    tiers = (
-        ["always"] * 2
-        + [f"gain_lookahead(lam={lam})|fp16"] * 2
-        + [f"gain_lookahead(lam={2 * lam})|int8+ef"] * 2
-        + [f"gain_lookahead(lam={4 * lam})|topk(0.05)|int8+ef"] * (m - 6)
-    )
-    return tuple(tiers)
-
-
-def _agent_batches(problem, key):
-    keys = jax.random.split(key, problem.num_agents)
-    return jax.vmap(lambda k: R.sample_batch(problem, k))(keys)
 
 
 def run(verbose: bool = True, smoke: bool = False) -> dict:
@@ -58,30 +45,34 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
         r = xs @ params["w"] - ys
         return 0.5 * jnp.mean(r * r)
 
+    # base policies at λ=1 from the shared tier template; LAM_SCALES is
+    # the traced grid axis (λ·scale inside the triggers), so one
+    # compile covers every operating point
+    assert HETERO_M8_NET.num_agents == cfg_lr.num_agents
+    policies = HETERO_M8_NET.policies(lam_base=1.0)
+    cfg = TrainConfig(lr=cfg_lr.stepsize, optimizer="sgd",
+                      num_agents=cfg_lr.num_agents, comm=policies)
+    opt = opt_lib.from_config(cfg)
+    res = run_frontier(
+        loss_fn, opt, cfg, {"w": jnp.zeros(cfg_lr.n)},
+        scales=LAM_SCALES, steps=steps,
+        batch_fn=lambda k: R.agent_batches(problem, k),
+        key=jax.random.key(21),
+    )
+    curve = jax.tree_util.tree_map(np.asarray, frontier_curve(res))
+    final_J = np.asarray(jax.vmap(problem.J)(res.state.params["w"]))
+
     rows = []
-    for lam in LAM_SCALES:
-        policies = tiered_policies(lam, cfg_lr.num_agents)
-        cfg = TrainConfig(lr=cfg_lr.stepsize, optimizer="sgd",
-                          num_agents=cfg_lr.num_agents, comm=policies)
-        opt = opt_lib.from_config(cfg)
-        step_fn = jax.jit(make_triggered_train_step(loss_fn, opt, cfg))
-        state = init_train_state(
-            {"w": jnp.zeros(cfg_lr.n)}, opt, cfg, policy=policies
-        )
-        wire_bytes = 0.0
-        num_tx = 0.0
-        for s in range(steps):
-            batch = _agent_batches(problem, jax.random.fold_in(
-                jax.random.key(21), s))
-            state, metrics = step_fn(state, batch)
-            wire_bytes += float(metrics["wire_bytes"])
-            num_tx += float(metrics["num_tx"])
+    for g, lam in enumerate(LAM_SCALES):
         rows.append({
             "lam_scale": float(lam),
-            "final_J": float(problem.J(state.params["w"])),
-            "wire_bytes": wire_bytes,
-            "transmissions": num_tx,
-            "policies": list(dict.fromkeys(policies)),  # the 4 tiers
+            "final_J": float(final_J[g]),
+            "wire_bytes": float(curve["wire_bytes"][g]),
+            "transmissions": float(curve["transmissions"][g]),
+            # the 4 tiers at this operating point's effective λ
+            "policies": list(dict.fromkeys(
+                HETERO_M8_NET.policies(lam_base=float(lam))
+            )),
         })
 
     J0 = float(problem.J(jnp.zeros(cfg_lr.n)))

@@ -14,7 +14,6 @@ import jax.numpy as jnp
 
 from benchmarks.common import fmt_row, save_result, timed
 from repro.kernels.gain_reduce import ref as gr_ref
-from repro.kernels.swa_attention import ref as swa_ref
 
 
 def gain_reduce_traffic(n: int):

@@ -25,6 +25,7 @@ from benchmarks import (
     lambda_decay,
     roofline_table,
     theory_bounds,
+    tiered_m64,
     triggered_lm,
 )
 
@@ -35,6 +36,7 @@ ALL = {
     "theory_bounds": theory_bounds.run,  # Thm 1 / Thm 2 table
     "lambda_decay": lambda_decay.run,  # beyond-paper: diminishing λ
     "hetero_frontier": hetero_frontier.run,  # beyond-paper: m=8 mixed policies
+    "tiered_m64": tiered_m64.run,      # beyond-paper: m=64 tier-mix frontiers
     "triggered_lm": triggered_lm.run,  # beyond-paper: trigger on real arch
     "kernel_bench": kernel_bench.run,  # kernel traffic model
     "roofline_table": roofline_table.run,  # §Roofline from dry-run cache
@@ -45,13 +47,22 @@ def main() -> int:
     args = sys.argv[1:]
     smoke = "--smoke" in args
     names = [a for a in args if a != "--smoke"] or list(ALL)
+    # reject unknown names (and stray flags, which land here too) UP
+    # FRONT, on stderr, before anything runs: a typo'd CI invocation
+    # must fail loudly, not green-run the benchmarks it happened to
+    # spell correctly
+    unknown = [n for n in names if n not in ALL]
+    if unknown:
+        print(
+            f"unknown benchmark(s): {', '.join(map(repr, unknown))}; "
+            f"available: {', '.join(ALL)}",
+            file=sys.stderr,
+        )
+        return 2
     failures = []
     ran = 0
     for name in names:
-        fn = ALL.get(name)
-        if fn is None:
-            print(f"unknown benchmark {name!r}; available: {', '.join(ALL)}")
-            return 2
+        fn = ALL[name]
         if smoke and "smoke" not in inspect.signature(fn).parameters:
             # never silently fall back to a full-size, claim-asserting
             # run under --smoke

@@ -20,7 +20,6 @@ simulator — but it is *consistent*: the same model is applied to every
 """
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

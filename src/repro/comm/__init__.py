@@ -38,6 +38,7 @@ from repro.comm.stats import (
     comm_stats,
     dense_bits,
     fold_sum,
+    per_agent_wire_bytes,
     structural_bytes,
 )
 from repro.comm.triggers import (
@@ -74,6 +75,7 @@ __all__ = [
     "fold_sum",
     "from_train_config",
     "normalize_policy",
+    "per_agent_wire_bytes",
     "resolve_policy",
     "structural_bytes",
     "trigger_spec_from_config",

@@ -6,8 +6,15 @@ trigger/compressor stack once per agent — fine at m=2, hopeless at m≥64.
 A :class:`StageBank` instead *dedupes* the policies into a bank of
 **agent stages** with one uniform call signature
 
-    stage(params, grad, batch, local_loss, step, ef_mem)
+    stage(params, grad, batch, local_loss, step, ef_mem[, scale])
         -> (alpha, gain, sent, new_ef_mem)
+
+``scale`` is an optional traced f32 scalar multiplying the stage
+trigger's transmit threshold (repro.comm.triggers) — the frontier
+engine's operating-point coordinate.  It is a trailing default so the
+bank keeps ONE branch list for both the plain train step (6 operands)
+and the knobbed frontier step (7 operands); either way every branch
+sees the same operand count, which is what ``lax.switch`` requires.
 
 so the train step can dispatch each agent with ``lax.switch(idx, stages,
 ...)`` inside a ``lax.scan`` over the agent axis: trace/compile cost is
@@ -81,8 +88,8 @@ class StageBank:
 
 def _make_stage(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool
                 ) -> AgentStage:
-    def stage(params, grad, batch, local_loss, step, ef_mem):
-        alpha, gain = trig(params, grad, batch, local_loss, step)
+    def stage(params, grad, batch, local_loss, step, ef_mem, scale=None):
+        alpha, gain = trig(params, grad, batch, local_loss, step, scale)
         g_eff = ef_add(grad, ef_mem if use_ef else None)
         sent = chain.compress_tree(g_eff) if chain else g_eff
         if ef_mem is None:

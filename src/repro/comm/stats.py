@@ -50,8 +50,8 @@ def dense_bits(grads) -> float:
     exact for the uniform-dtype trees produced in practice).  The ratio
     baseline for ``CompressorChain.ratio_for``."""
     leaves = jax.tree_util.tree_leaves(grads)
-    entries = sum(l.size for l in leaves)
-    nbytes = sum(l.size * l.dtype.itemsize for l in leaves)
+    entries = sum(x.size for x in leaves)
+    nbytes = sum(x.size * x.dtype.itemsize for x in leaves)
     return 8.0 * nbytes / max(entries, 1)
 
 
@@ -69,6 +69,21 @@ def fold_sum(x: jax.Array) -> jax.Array:
     for i in range(1, int(x.shape[0])):
         total = total + x[i]
     return total
+
+
+def per_agent_wire_bytes(alphas: jax.Array, *, structural: int,
+                         ratios: Sequence[float]) -> jax.Array:
+    """Effective bytes each agent put on the wire this round: a ``(A,)``
+    f32 vector ``structural × ratio_i × alpha_i``.
+
+    The per-agent resolution the scalar :func:`comm_stats` summary
+    integrates away — needed by tiered-network frontiers that check
+    per-tier wire budgets.  A single-element ``ratios`` broadcasts (the
+    homogeneous case).  Pure jnp ops, so it batches transparently when
+    the frontier engine vmaps the train step over a grid axis.
+    """
+    r = jnp.asarray(tuple(float(x) for x in ratios), jnp.float32)
+    return (structural * r * alphas).astype(jnp.float32)
 
 
 def comm_stats(alphas: jax.Array, gains: jax.Array, *,

@@ -56,7 +56,21 @@ class TriggerOutput(NamedTuple):
 
 
 # A trigger maps (params, grad, batch, local_loss, step) -> TriggerOutput.
+# Every trigger also accepts an optional trailing ``scale`` — a traced
+# f32 scalar multiplying its transmit threshold (λ for the gain family,
+# μ for grad_norm; the scheduling baselines ignore it).  ``scale=None``
+# (the default, a static trace-time property) emits no extra ops, so
+# ordinary train steps are untouched; a traced scale is the frontier
+# engine's grid coordinate — one policy *structure*, many operating
+# points under one ``vmap`` (repro.core.frontier).
 TriggerFn = Callable[..., TriggerOutput]
+
+
+def _scaled(threshold, scale):
+    """Threshold × operating-point scale (no-op ops-wise when None)."""
+    if scale is None:
+        return threshold
+    return threshold * jnp.asarray(scale, jnp.float32)
 
 TRIGGERS = Registry("trigger")
 
@@ -102,16 +116,16 @@ def _lam_at(args):
 
 @TRIGGERS.register("always", doc="dense baseline: every agent transmits")
 def _always(args, ctx):
-    def trig(params, grad, batch, local_loss, step):
-        del params, batch, step
+    def trig(params, grad, batch, local_loss, step, scale=None):
+        del params, batch, step, scale
         return TriggerOutput(jnp.float32(1.0), jnp.float32(0.0) * local_loss)
     return trig
 
 
 @TRIGGERS.register("never", doc="silent baseline: nothing transmits")
 def _never(args, ctx):
-    def trig(params, grad, batch, local_loss, step):
-        del params, batch, step
+    def trig(params, grad, batch, local_loss, step, scale=None):
+        del params, batch, step, scale
         return TriggerOutput(jnp.float32(0.0), jnp.float32(0.0) * local_loss)
     return trig
 
@@ -121,8 +135,8 @@ def _never(args, ctx):
 def _periodic(args, ctx):
     period = max(int(args["period"]), 1)
 
-    def trig(params, grad, batch, local_loss, step):
-        del params, batch, local_loss
+    def trig(params, grad, batch, local_loss, step, scale=None):
+        del params, batch, local_loss, scale
         return TriggerOutput(_as_alpha((step % period) == 0), jnp.float32(0.0))
     return trig
 
@@ -134,11 +148,11 @@ def _grad_norm(args, ctx):
     use_kernel = bool(args["kernel"])
     eps = jnp.float32(ctx.probe_eps)
 
-    def trig(params, grad, batch, local_loss, step):
+    def trig(params, grad, batch, local_loss, step, scale=None):
         del params, batch, local_loss, step
         gsq = _norm_sq(grad, use_kernel)
         # report the small-ε proxy gain −ε‖g‖² for logging parity
-        return TriggerOutput(_as_alpha(gsq >= mu), -eps * gsq)
+        return TriggerOutput(_as_alpha(gsq >= _scaled(mu, scale)), -eps * gsq)
     return trig
 
 
@@ -151,7 +165,7 @@ def _gain_lookahead(args, ctx):
     lam_at = _lam_at(args)
     eps = jnp.float32(ctx.probe_eps)
 
-    def trig(params, grad, batch, local_loss, step):
+    def trig(params, grad, batch, local_loss, step, scale=None):
         from repro.sharding.constraint import constrain_params
 
         # probe params are per-agent under vmap — pin to model-axis
@@ -159,7 +173,8 @@ def _gain_lookahead(args, ctx):
         probe = constrain_params(tree_add_scaled(params, grad, -eps), "")
         gain = loss_fn(probe, batch) - local_loss
         return TriggerOutput(
-            _as_alpha(gain <= -lam_at(step)), gain.astype(jnp.float32)
+            _as_alpha(gain <= -_scaled(lam_at(step), scale)),
+            gain.astype(jnp.float32),
         )
     return trig
 
@@ -174,7 +189,7 @@ def _gain_quadratic(args, ctx):
     eps = jnp.float32(ctx.probe_eps)
     use_kernel = bool(args["kernel"])
 
-    def trig(params, grad, batch, local_loss, step):
+    def trig(params, grad, batch, local_loss, step, scale=None):
         del local_loss
         grad_fn = lambda p: jax.grad(loss_fn)(p, batch)
         # H g via forward-over-reverse; both terms fused when the
@@ -185,7 +200,8 @@ def _gain_quadratic(args, ctx):
         else:
             gsq, ghg = tree_norm_sq(grad), tree_vdot(grad, hg)
         gain = -eps * gsq + 0.5 * eps * eps * ghg
-        return TriggerOutput(_as_alpha(gain <= -lam_at(step)), gain)
+        return TriggerOutput(_as_alpha(gain <= -_scaled(lam_at(step), scale)),
+                             gain)
     return trig
 
 
@@ -195,12 +211,13 @@ def _gain_estimated(args, ctx):
     lam_at = _lam_at(args)
     eps = jnp.float32(ctx.probe_eps)
 
-    def trig(params, grad, batch, local_loss, step):
+    def trig(params, grad, batch, local_loss, step, scale=None):
         del local_loss
         xs = batch[0] if isinstance(batch, (tuple, list)) else batch["xs"]
         gain = linreg_gain_estimated(params, grad, eps, xs)
         return TriggerOutput(
-            _as_alpha(gain <= -lam_at(step)), gain.astype(jnp.float32)
+            _as_alpha(gain <= -_scaled(lam_at(step), scale)),
+            gain.astype(jnp.float32),
         )
     return trig
 
@@ -221,11 +238,12 @@ def _gain_exact(args, ctx):
     lam_at = _lam_at(args)
     eps = jnp.float32(ctx.probe_eps)
 
-    def trig(params, grad, batch, local_loss, step):
+    def trig(params, grad, batch, local_loss, step, scale=None):
         del batch, local_loss
         gain = linreg_gain_exact(params, grad, eps, sigma, w_star)
         return TriggerOutput(
-            _as_alpha(gain <= -lam_at(step)), gain.astype(jnp.float32)
+            _as_alpha(gain <= -_scaled(lam_at(step), scale)),
+            gain.astype(jnp.float32),
         )
     return trig
 

@@ -1,6 +1,12 @@
-"""The paper's own experimental configurations (Section 4).
+"""The paper's own experimental configurations (Section 4), plus the
+beyond-paper tiered-network scenario layer.
 
-Three named setups, matching the three figures exactly.
+Three named setups match the three figures exactly; the
+:class:`TieredNetwork` scenarios (ROADMAP "large-m" item) describe the
+smart-city / IoT-fleet regime the abstract motivates — m≥64 agents in
+bandwidth tiers, each tier with its own CommPolicy and per-round wire
+budget — at a scale the ``lax.switch`` stage bank makes free to compile
+(O(#tiers), not O(m)).
 """
 from dataclasses import dataclass
 from typing import Tuple
@@ -50,5 +56,114 @@ FIG1_RIGHT = LinRegConfig(
 # frontier at a scale the paper never ran.
 HETERO_M8 = LinRegConfig(
     name="hetero_m8", n=32, num_agents=8, samples_per_agent=64,
+    stepsize=0.05, steps=40, cov_range=(0.2, 4.0),
+)
+
+
+# ----------------------------------------------------------------------
+# Tiered-network scenarios (m ≥ 64)
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TierSpec:
+    """One bandwidth tier of a tiered network.
+
+    ``policy`` is a ``repro.comm`` spec-string *template*: an optional
+    ``{lam}`` placeholder receives ``lam_base × lam_mult`` when the
+    network is instantiated, so one scenario spans a whole λ family.
+    ``wire_budget`` is the tier's uplink allowance in effective bytes
+    per agent per round (the dense fp32 payload is ``4n`` bytes) —
+    scenario metadata the benchmarks check frontiers against, not a
+    constraint enforced during training.
+    """
+
+    name: str
+    count: int
+    policy: str
+    lam_mult: float = 1.0
+    wire_budget: float = float("inf")
+
+    def spec(self, lam_base: float) -> str:
+        if "{lam}" not in self.policy:
+            return self.policy
+        return self.policy.format(lam=repr(lam_base * self.lam_mult))
+
+
+@dataclass(frozen=True)
+class TieredNetwork:
+    """A named tier mix: the per-agent policy layout of a large fleet."""
+
+    name: str
+    tiers: Tuple[TierSpec, ...]
+
+    @property
+    def num_agents(self) -> int:
+        return sum(t.count for t in self.tiers)
+
+    def policies(self, lam_base: float = 1.0) -> Tuple[str, ...]:
+        """The per-agent spec tuple (tier order, tier-contiguous)."""
+        return tuple(
+            t.spec(lam_base) for t in self.tiers for _ in range(t.count)
+        )
+
+    def tier_index(self) -> Tuple[int, ...]:
+        """Agent → tier id (index into ``tiers``)."""
+        return tuple(i for i, t in enumerate(self.tiers) for _ in range(t.count))
+
+    def budgets(self) -> Tuple[float, ...]:
+        """Per-agent wire budgets (bytes/round), tier-expanded."""
+        return tuple(t.wire_budget for t in self.tiers for _ in range(t.count))
+
+
+def _tiers(backbone: int, metro: int, edge: int, sensor: int, n: int = 32
+           ) -> Tuple[TierSpec, ...]:
+    """The four-tier smart-city template over an n-feature model.
+
+    Dense fp32 payload is 4n bytes/round.  Budgets taper with the tier
+    and are set BELOW each tier's always-transmit wire rate (fp16 every
+    round is 0.5×dense, int8 0.25×, topk(0.05)|int8 0.0625×), so a
+    metered tier only fits its uplink once its trigger actually gates —
+    the frontier has to *cross into* feasibility, it doesn't start
+    there.  λ tightens as budgets shrink (harder gating where bytes are
+    scarce), the coupling arXiv:2101.10007 schedules adaptively.
+    """
+    dense = 4.0 * n
+    return (
+        TierSpec("backbone", backbone, "always"),
+        TierSpec("metro", metro, "gain_lookahead(lam={lam})|fp16",
+                 lam_mult=1.0, wire_budget=0.35 * dense),
+        TierSpec("edge", edge, "gain_lookahead(lam={lam})|int8+ef",
+                 lam_mult=2.0, wire_budget=0.15 * dense),
+        TierSpec("sensor", sensor,
+                 "gain_lookahead(lam={lam})|topk(0.05)|int8+ef",
+                 lam_mult=4.0, wire_budget=0.04 * dense),
+    )
+
+
+# The m=8 pathfinder fleet (benchmarks/hetero_frontier.py): the same
+# four-tier template at the scale PR 2 introduced — one source of truth
+# for the tier layout, so the m=8 and m=64 artifacts cannot drift apart.
+HETERO_M8_NET = TieredNetwork("hetero_m8", _tiers(2, 2, 2, 2))
+
+# The m=64 scenario family: one fleet size, three tier mixes, so a
+# frontier can compare WHERE the agents sit, not just how hard they
+# gate.  All mixes share the four-tier template (4 distinct policies →
+# the stage bank compiles 4 branches regardless of mix).
+TIERED_M64 = TieredNetwork("tiered_m64", _tiers(8, 16, 24, 16))
+TIERED_M64_EDGE_HEAVY = TieredNetwork(
+    "tiered_m64_edge_heavy", _tiers(2, 6, 24, 32)
+)
+TIERED_M64_BACKBONE_HEAVY = TieredNetwork(
+    "tiered_m64_backbone_heavy", _tiers(24, 24, 12, 4)
+)
+
+TIER_MIXES: Tuple[TieredNetwork, ...] = (
+    TIERED_M64, TIERED_M64_EDGE_HEAVY, TIERED_M64_BACKBONE_HEAVY
+)
+
+# The linreg problem the m=64 frontiers run on (same data model as
+# HETERO_M8, eight times the fleet).
+TIERED_M64_CFG = LinRegConfig(
+    name="tiered_m64", n=32, num_agents=64, samples_per_agent=32,
     stepsize=0.05, steps=40, cov_range=(0.2, 4.0),
 )

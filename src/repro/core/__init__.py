@@ -6,12 +6,22 @@
 - ``theory``       — Thm 1 / Thm 2 closed forms
 - ``api``          — EventTriggeredDataParallel train-step builder,
                      parameterized by a ``repro.comm.CommPolicy``
+- ``frontier``     — batched operating-point engine: a whole
+                     loss-vs-wire-bytes frontier over the real train
+                     step as one jitted program
 """
 from repro.core.api import (  # noqa: F401
     TrainState,
     init_train_state,
     make_plain_train_step,
     make_triggered_train_step,
+)
+from repro.core.frontier import (  # noqa: F401
+    FrontierResult,
+    frontier_curve,
+    make_frontier_step,
+    run_frontier,
+    stack_states,
 )
 from repro.core.triggers import make_trigger  # noqa: F401
 from repro.core.aggregation import masked_mean, masked_mean_quantized  # noqa: F401

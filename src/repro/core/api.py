@@ -53,6 +53,7 @@ from repro.comm import (
     ef_residual,
     fold_sum,
     normalize_policy,
+    per_agent_wire_bytes,
     resolve_policy,
     structural_bytes,
 )
@@ -134,8 +135,10 @@ def make_triggered_train_step(
     use_kernel: bool = False,
     oracle: Optional[tuple] = None,
     hetero_dispatch: str = "switch",
+    barriers: bool = True,
+    agent_metrics: bool = False,
 ):
-    """Build ``train_step(state, batch) -> (state, metrics)``.
+    """Build ``train_step(state, batch, scale=None) -> (state, metrics)``.
 
     ``loss_fn(params, batch) -> scalar`` is the local empirical loss; the
     batch pytree's leaves must carry a leading agent axis of size
@@ -155,6 +158,20 @@ def make_triggered_train_step(
     cost O(#distinct policies), usable at m≥64; ``"unroll"`` is the
     PR-1 Python loop (compile cost O(m), kept as the bit-identical
     reference).  Homogeneous policies ignore it.
+
+    The built step takes an optional traced ``scale`` — an f32 scalar
+    multiplying every trigger's transmit threshold (λ/μ).  The default
+    ``None`` adds no ops; a traced scale turns the step into a family
+    of operating points, which is how ``repro.core.frontier`` vmaps a
+    whole loss-vs-wire-bytes frontier out of ONE train step.
+
+    ``barriers=False`` drops the ``optimization_barrier`` ULP pins that
+    keep the two hetero dispatch paths bit-identical — required when
+    the step runs under ``vmap`` (the barrier primitive has no batching
+    rule in this jax); the paths then agree to float tolerance, not
+    bitwise.  ``agent_metrics=True`` adds per-agent vectors
+    (``agent_tx``, ``agent_bytes``, both ``(m,)``) to the metrics —
+    the per-tier wire accounting the tiered-network frontiers need.
     """
     if cfg.microbatches > 1:
         loss_fn = _microbatched(loss_fn, cfg.microbatches)
@@ -211,26 +228,26 @@ def make_triggered_train_step(
         # (EXPERIMENTS.md §Perf, qwen3 iter-6 → iter-7).  No-op when
         # no gather hook is installed (non-FSDP plans, CPU tests).
         g = constrain_params(g, "")
-        if barrier:
+        if barrier and barriers:
             # pin (loss, grad) before the trigger: XLA otherwise
             # CSE-fuses the loss with the trigger's probe
             # re-evaluation, which would put the unrolled hetero path
             # one ULP off the switch path (whose cond boundary blocks
-            # that fusion).  Off under vmap — optimization_barrier
-            # has no batching rule in this jax.
+            # that fusion).  Off under vmap (barriers=False) —
+            # optimization_barrier has no batching rule in this jax.
             main, g = jax.lax.optimization_barrier((main, g))
         return main, g
 
-    def per_agent_fn(params, step, trig, barrier: bool = False):
+    def per_agent_fn(params, step, trig, scale, barrier: bool = False):
         def per_agent(agent_batch):
             main, g = grad_prologue(params, agent_batch, barrier)
-            alpha, gain = trig(params, g, agent_batch, main, step)
+            alpha, gain = trig(params, g, agent_batch, main, step, scale)
             return main, g, alpha, gain
         return per_agent
 
-    def train_step(state: TrainState, batch):
+    def train_step(state: TrainState, batch, scale=None):
         if hetero is None:
-            per_agent = per_agent_fn(state.params, state.step, trigger)
+            per_agent = per_agent_fn(state.params, state.step, trigger, scale)
             losses, grads, alphas, gains = jax.vmap(per_agent)(batch)
             if chain:
                 # EF engages only when the state actually carries memory
@@ -265,20 +282,32 @@ def make_triggered_train_step(
             def agent_body(carry, inp):
                 idx, agent_batch, mem_i = inp
                 main, g = grad_prologue(state.params, agent_batch, True)
-                alpha, gain, sent_i, new_mem_i = jax.lax.switch(
-                    idx, branches,
+                operands = (
                     state.params, g, agent_batch, main, state.step, mem_i,
+                )
+                if scale is not None:
+                    # trailing operand feeds the stages' optional
+                    # threshold scale (the frontier grid coordinate);
+                    # arity stays uniform across the branch list either
+                    # way because the stage declares it with a default
+                    operands = operands + (scale,)
+                alpha, gain, sent_i, new_mem_i = jax.lax.switch(
+                    idx, branches, *operands
                 )
                 return carry, (main, alpha, gain, sent_i, new_mem_i)
 
             _, (losses, alphas, gains, sent, new_mem) = jax.lax.scan(
                 agent_body, 0.0, (agent_idx, batch, mem)
             )
-            # same barrier as the unroll path below: pin the per-agent
-            # scalar stacks so both programs reduce a materialized (m,)
-            # buffer (XLA otherwise folds this mean into the scan as a
-            # sequential accumulator — off by one ULP)
-            losses, gains = jax.lax.optimization_barrier((losses, gains))
+            if barriers:
+                # same barrier as the unroll path below: pin the
+                # per-agent scalar stacks so both programs reduce a
+                # materialized (m,) buffer (XLA otherwise folds this
+                # mean into the scan as a sequential accumulator — off
+                # by one ULP)
+                losses, gains = jax.lax.optimization_barrier(
+                    (losses, gains)
+                )
             new_ef = new_mem if has_mem else state.ef_memory
         else:
             # Heterogeneous "unroll": the PR-1 Python loop over agents —
@@ -287,7 +316,7 @@ def make_triggered_train_step(
             for i, (trig_i, chain_i, ef_i) in enumerate(stages):
                 agent_batch = jax.tree_util.tree_map(lambda x: x[i], batch)
                 main, g, alpha, gain = per_agent_fn(
-                    state.params, state.step, trig_i, barrier=True
+                    state.params, state.step, trig_i, scale, barrier=True
                 )(agent_batch)
                 use_ef = ef_i and state.ef_memory is not None
                 if ef_i and not use_ef:
@@ -304,7 +333,12 @@ def make_triggered_train_step(
             # barrier XLA re-associates mean(stack(scalars)) into a
             # scalar-add chain, drifting one ULP from the switch path's
             # reduce over the scan's output buffer
-            stack = lambda xs: jax.lax.optimization_barrier(jnp.stack(xs))
+            if barriers:
+                stack = lambda xs: jax.lax.optimization_barrier(
+                    jnp.stack(xs)
+                )
+            else:
+                stack = jnp.stack
             losses = stack([p[0] for p in per])
             alphas = stack([p[1] for p in per])
             gains = stack([p[2] for p in per])
@@ -333,11 +367,9 @@ def make_triggered_train_step(
         # wire ratios against the gradients' NATIVE dtype width (int8 on
         # bf16 grads is 0.5, not fp32's 0.25) — all static at trace time
         db = dense_bits(sent)
-        stats = comm_stats(
-            alphas, gains,
-            structural=structural_bytes(sent, per_agent=True),
-            ratios=tuple(c.ratio_for(db) if c else 1.0 for c in chains),
-        )
+        sb = structural_bytes(sent, per_agent=True)
+        ratios = tuple(c.ratio_for(db) if c else 1.0 for c in chains)
+        stats = comm_stats(alphas, gains, structural=sb, ratios=ratios)
         metrics = {
             # fold_sum: association-fixed, so switch/unroll agree bitwise
             "loss": fold_sum(losses) / losses.shape[0],
@@ -353,6 +385,13 @@ def make_triggered_train_step(
             ),
             "wire_bytes": stats.wire_bytes,
         }
+        if agent_metrics:
+            # per-agent vectors for tier-level accounting (a (1,)-long
+            # ratio tuple is the homogeneous case and broadcasts)
+            metrics["agent_tx"] = alphas
+            metrics["agent_bytes"] = per_agent_wire_bytes(
+                alphas, structural=sb, ratios=ratios
+            )
         return (
             TrainState(state.step + 1, params, opt_state, new_ef),
             metrics,

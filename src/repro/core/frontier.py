@@ -1,0 +1,179 @@
+"""Batched operating-point frontiers over the REAL triggered train step.
+
+The paper's headline artifact — loss vs. communication under
+event-triggered scheduling — is a *frontier*: the same training run at
+many trigger tightnesses.  ``repro.core.regression.sweep`` already
+compiles closed-form-simulator frontiers as one program; this module
+does the same for the full :func:`repro.core.api.make_triggered_train_step`
+path (compressor chains, error feedback, heterogeneous stage banks —
+everything the simulator deliberately leaves out), replacing the last
+O(grid) Python rerun loop with one ``jit``.
+
+Grid axis layout
+----------------
+An operating point is the base policy with every trigger threshold
+multiplied by a ``scale`` — one traced f32 per grid point, exactly the
+λ-scale axis the tiered benchmarks sweep.  The engine stacks the
+TrainState ``G`` times (every pytree leaf, EF memory included, gains a
+leading grid axis) and vmaps the train step as
+
+    vmap(step, in_axes=(0, None, 0))(states, batch, scales)
+
+so parameters, optimizer state and EF residuals evolve per lane while
+each round's *batch is shared across lanes* — the same
+comparable-operating-points convention as ``sweep``'s shared trial
+keys.  The step is built with ``barriers=False`` (the ULP-pinning
+``optimization_barrier`` has no vmap batching rule) and
+``agent_metrics=True`` (CommStats accounting stays per lane AND per
+agent: ``agent_bytes`` lets tiered scenarios check per-tier wire
+budgets after the fact).
+
+One compile per frontier: ``run_frontier`` traces a single
+``scan(vmap(step))`` program regardless of ``len(scales)``; the
+heterogeneous ``lax.switch`` dispatch keeps its O(#distinct policies)
+compile cost because the switch *index* is not batched — only the
+operands carry the grid axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import (
+    TrainState,
+    init_train_state,
+    make_triggered_train_step,
+)
+
+
+class FrontierResult(NamedTuple):
+    """One batched frontier run.
+
+    ``state`` is the stacked final TrainState (leading ``(G,)`` axis on
+    every leaf); ``metrics`` maps each train-step metric to its
+    ``(G, K)`` trajectory (``(G, K, m)`` for the per-agent vectors);
+    ``scales`` is the ``(G,)`` operating-point grid.
+    """
+
+    state: TrainState
+    metrics: Dict[str, jnp.ndarray]
+    scales: jnp.ndarray
+
+
+def stack_states(state: TrainState, grid_size: int) -> TrainState:
+    """Broadcast one TrainState into ``grid_size`` identical lanes."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (grid_size,) + x.shape), state
+    )
+
+
+def make_frontier_step(
+    loss_fn: Callable,
+    optimizer,
+    cfg,
+    *,
+    policy=None,
+    aux_loss_fn: Optional[Callable] = None,
+    oracle: Optional[tuple] = None,
+    hetero_dispatch: str = "switch",
+):
+    """Build ``batched_step(states, batch, scales) -> (states, metrics)``.
+
+    The vmapped, barrier-free train step: lane ``i`` advances its own
+    TrainState under threshold scale ``scales[i]`` on the shared
+    ``batch``.  Use :func:`run_frontier` for the whole-run loop.
+    """
+    step = make_triggered_train_step(
+        loss_fn,
+        optimizer,
+        cfg,
+        policy=policy,
+        aux_loss_fn=aux_loss_fn,
+        oracle=oracle,
+        hetero_dispatch=hetero_dispatch,
+        barriers=False,
+        agent_metrics=True,
+    )
+    return jax.vmap(step, in_axes=(0, None, 0))
+
+
+def run_frontier(
+    loss_fn: Callable,
+    optimizer,
+    cfg,
+    params: Any,
+    *,
+    scales,
+    steps: int,
+    batch_fn: Callable,
+    key,
+    policy=None,
+    aux_loss_fn: Optional[Callable] = None,
+    oracle: Optional[tuple] = None,
+    hetero_dispatch: str = "switch",
+) -> FrontierResult:
+    """Run a whole loss-vs-communication frontier as ONE jitted program.
+
+    ``scales`` is the ``(G,)`` grid of trigger-threshold multipliers —
+    ``1.0`` reproduces the base policy exactly (λ·1.0 is the identity
+    in IEEE floats): a single lane of :func:`make_frontier_step` driven
+    round by round is bit-equal to the plain train-step loop, while
+    this function's scanned whole run agrees to ~1 ULP (the scan body
+    compiles in a different fusion context; the integer-valued wire
+    accounting stays exact).  ``batch_fn(round_key) -> batch`` samples one
+    round's per-agent batch inside the scan; every lane consumes the
+    same batch.  ``steps`` rounds are scanned with keys split from
+    ``key``.
+    """
+    scales = jnp.asarray(scales, jnp.float32)
+    if scales.ndim != 1:
+        raise ValueError(f"scales must be a 1-D grid, got shape {scales.shape}")
+    grid = int(scales.shape[0])
+    batched_step = make_frontier_step(
+        loss_fn,
+        optimizer,
+        cfg,
+        policy=policy,
+        aux_loss_fn=aux_loss_fn,
+        oracle=oracle,
+        hetero_dispatch=hetero_dispatch,
+    )
+
+    def _run(params, scales, key):
+        state0 = init_train_state(params, optimizer, cfg, policy=policy)
+        states = stack_states(state0, grid)
+        keys = jax.random.split(key, steps)
+
+        def body(states, k):
+            states, metrics = batched_step(states, batch_fn(k), scales)
+            return states, metrics
+
+        return jax.lax.scan(body, states, keys)
+
+    states, metrics = jax.jit(_run)(params, scales, key)
+    # scan stacks metrics (K, G, ...) — present them grid-major (G, K, ...)
+    metrics = {k: jnp.moveaxis(v, 0, 1) for k, v in metrics.items()}
+    return FrontierResult(state=states, metrics=metrics, scales=scales)
+
+
+def frontier_curve(result: FrontierResult) -> Dict[str, jnp.ndarray]:
+    """Reduce a frontier run to its per-point curve coordinates.
+
+    Returns ``(G,)`` arrays: ``final_loss`` (last-round train loss),
+    ``wire_bytes`` / ``transmissions`` (run totals), ``comm_rate``
+    (run mean), plus ``agent_bytes`` ``(G, m)`` run totals when the
+    per-agent metrics are present.
+    """
+    m = result.metrics
+    curve = {
+        "scale": result.scales,
+        "final_loss": m["loss"][:, -1],
+        "wire_bytes": jnp.sum(m["wire_bytes"], axis=1),
+        "transmissions": jnp.sum(m["num_tx"], axis=1),
+        "comm_rate": jnp.mean(m["comm_rate"], axis=1),
+    }
+    if "agent_bytes" in m:
+        curve["agent_bytes"] = jnp.sum(m["agent_bytes"], axis=1)
+    return curve

@@ -113,6 +113,14 @@ def sample_batch(problem: Problem, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return xs, ys
 
 
+def agent_batches(problem: Problem, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One round's fresh samples for ALL agents, stacked on a leading
+    agent axis: ``((m, N, n), (m, N))`` — the batch layout
+    ``make_triggered_train_step`` and the frontier engine consume."""
+    keys = jax.random.split(key, problem.num_agents)
+    return jax.vmap(lambda k: sample_batch(problem, k))(keys)
+
+
 def empirical_gradient(w, xs, ys):
     """Eq. (7): g = (1/N) Σ (x xᵀ w − x y)."""
     resid = xs @ w - ys
@@ -194,7 +202,7 @@ def lambda_grid(lams: Sequence[float], mode: str = "gain_estimated",
                 lam_decay: str = "const") -> TriggerKnobs:
     """The Fig-2-Left axis: one grid point per λ."""
     return grid_from_points(
-        [dict(mode=mode, lam=float(l), lam_decay=lam_decay) for l in lams]
+        [dict(mode=mode, lam=float(v), lam_decay=lam_decay) for v in lams]
     )
 
 

@@ -35,7 +35,7 @@ def main():
     ap.add_argument("--save", default=None, help="record JSON under this tag")
     args = ap.parse_args()
 
-    import jax  # after XLA_FLAGS
+    import jax  # noqa: F401  (imported for XLA_FLAGS ordering)
 
     from repro.analysis import hlo_cost as H
     from repro.analysis.roofline import Roofline, model_flops

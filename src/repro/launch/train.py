@@ -21,9 +21,7 @@ CPU box use ``--reduced`` (the same family, smoke-scale) or the default
 from __future__ import annotations
 
 import argparse
-import json
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

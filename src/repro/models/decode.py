@@ -17,7 +17,7 @@ lower.  Cache choices per family (DESIGN.md §5):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,6 @@ from repro.models.transformer import (
     _attn_out,
     _ff,
     _group_bounds,
-    forward,
 )
 from repro.sharding.constraint import constrain_params
 

@@ -17,7 +17,7 @@ Public entry points (dispatch on ``cfg.arch_type``):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +32,6 @@ from repro.models.layers import (
     build_rms_norm,
     build_swiglu,
     build_gelu_mlp,
-    cross_entropy,
     cross_entropy_fused,
     embed,
     gelu_mlp,

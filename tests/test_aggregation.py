@@ -3,7 +3,6 @@ with hypothesis property tests on the invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.aggregation import (

@@ -1,0 +1,164 @@
+"""The CI bench gate: benchmarks/run.py fails loudly on typo'd names,
+and benchmarks/check_smoke.py turns smoke-JSON drift into a red job."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+BENCH_DIR = REPO / "experiments" / "bench"
+BASELINE = REPO / "benchmarks" / "smoke_baseline.json"
+
+
+def _run(args, **kw):
+    env = {**os.environ,
+           "PYTHONPATH": f"{REPO / 'src'}{os.pathsep}{REPO}",
+           "JAX_PLATFORMS": "cpu"}
+    return subprocess.run([sys.executable, "-m", *args], env=env, cwd=REPO,
+                          capture_output=True, text=True, timeout=300, **kw)
+
+
+# ----------------------------------------------------------------------
+# benchmarks.run name validation
+# ----------------------------------------------------------------------
+
+def test_unknown_benchmark_name_exits_nonzero():
+    r = _run(["benchmarks.run", "definitely_not_a_benchmark"])
+    assert r.returncode == 2, (r.stdout, r.stderr)
+    assert "unknown benchmark" in r.stderr
+    assert "=====" not in r.stdout, "ran something despite the bad name"
+
+
+def test_unknown_name_rejected_before_known_ones_run():
+    # the typo'd CI invocation must not green-run the valid names first
+    r = _run(["benchmarks.run", "--smoke", "fig2_left", "not_a_bench"])
+    assert r.returncode == 2
+    assert "not_a_bench" in r.stderr
+    assert "=====" not in r.stdout
+
+
+# ----------------------------------------------------------------------
+# benchmarks.check_smoke drift gate
+# ----------------------------------------------------------------------
+
+def _synth_payload(spec):
+    """A minimal payload satisfying one baseline entry — the gate's
+    schema is rich enough to generate its own clean fixtures, so these
+    tests never depend on the (gitignored) CI smoke artifacts."""
+    payload = {}
+    dense = 1000.0
+    wr = spec.get("wire_ratio")
+    if wr:
+        payload[wr["dense_key"]] = dense
+    row_keys_seen = set()
+    for rs in spec.get("rows", []):
+        row = {rk: 1.0 for rk in rs.get("row_keys", [])}
+        if wr and wr["bytes_key"] in row:
+            row[wr["bytes_key"]] = 0.5 * dense
+        payload[rs["key"]] = [dict(row) for _ in range(rs["count"])]
+        row_keys_seen.update(row)
+    for fk in spec.get("finite_keys", []):
+        if fk not in row_keys_seen:
+            payload[fk] = 1.0
+    payload["claims"] = {c: True for c in spec.get("claims", [])}
+    for k in spec.get("required_keys", []):
+        payload.setdefault(k, "synthetic")
+    return payload
+
+
+@pytest.fixture()
+def smoke_dir(tmp_path):
+    """A clean artifact set synthesized from the committed baseline."""
+    for name, spec in json.loads(BASELINE.read_text()).items():
+        path = tmp_path / f"{name}.json"
+        path.write_text(json.dumps(_synth_payload(spec)))
+    return tmp_path
+
+
+def test_gate_passes_on_clean_artifacts(smoke_dir):
+    r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
+    assert r.returncode == 0, (r.stdout, r.stderr)
+    assert "clean" in r.stdout
+
+
+@pytest.mark.skipif(
+    not list(BENCH_DIR.glob("*_smoke.json")),
+    reason="no local smoke artifacts (they are gitignored; CI "
+    "regenerates them in the bench-smoke job before gating)",
+)
+def test_gate_passes_on_real_smoke_artifacts():
+    r = _run(["benchmarks.check_smoke"])
+    assert r.returncode == 0, (r.stdout, r.stderr)
+
+
+def test_gate_fails_on_nan_loss(smoke_dir):
+    path = smoke_dir / "hetero_frontier_smoke.json"
+    payload = json.loads(path.read_text())
+    payload["rows"][0]["final_J"] = float("nan")
+    path.write_text(json.dumps(payload))
+    r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
+    assert r.returncode == 1
+    assert "non-finite" in r.stderr
+
+
+def test_gate_fails_on_wire_ratio_out_of_bounds(smoke_dir):
+    path = smoke_dir / "tiered_m64_smoke.json"
+    payload = json.loads(path.read_text())
+    payload["rows"][0]["wire_bytes"] = (
+        100.0 * payload["dense_bytes_equivalent"]
+    )
+    path.write_text(json.dumps(payload))
+    r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
+    assert r.returncode == 1
+    assert "wire-byte ratio" in r.stderr
+
+
+def test_gate_fails_on_missing_key_and_missing_rows(smoke_dir):
+    path = smoke_dir / "fig2_left_smoke.json"
+    payload = json.loads(path.read_text())
+    del payload["claims"]
+    payload["rows"] = payload["rows"][:3]
+    path.write_text(json.dumps(payload))
+    r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
+    assert r.returncode == 1
+    assert "missing top-level key" in r.stderr
+    assert "records, found 3" in r.stderr
+
+
+def test_gate_fails_when_baselined_artifact_absent(smoke_dir):
+    (smoke_dir / "lambda_decay_smoke.json").unlink()
+    r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
+    assert r.returncode == 1
+    assert "produced no artifact" in r.stderr
+
+
+def test_gate_fails_on_unbaselined_artifact(smoke_dir):
+    (smoke_dir / "brand_new_smoke.json").write_text("{}")
+    r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
+    assert r.returncode == 1
+    assert "no baseline entry" in r.stderr
+
+
+def test_baseline_matches_the_ci_smoke_invocation():
+    """Every benchmark the CI bench-smoke job runs has a baseline entry
+    and vice versa — adding a benchmark to one place but not the other
+    would make the gate fail (unbaselined artifact) or go stale."""
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text().splitlines()
+    names = []
+    collecting = False
+    for line in ci:
+        if line.lstrip().startswith("#"):
+            continue
+        toks = line.replace("\\", " ").split()
+        if "benchmarks.run" in toks and "--smoke" in toks:
+            names += toks[toks.index("--smoke") + 1:]
+            collecting = line.rstrip().endswith("\\")
+        elif collecting:
+            names += toks
+            collecting = line.rstrip().endswith("\\")
+    assert names, "could not find the --smoke invocation in ci.yml"
+    baseline = set(json.loads(BASELINE.read_text()))
+    assert {f"{n}_smoke" for n in names} == baseline

@@ -15,7 +15,6 @@ from repro.comm import (
     CommPolicy,
     TRIGGERS,
     WireFormat,
-    chain_from_specs,
     structural_bytes,
 )
 from repro.configs.base import TrainConfig, TriggerConfig

@@ -1,0 +1,302 @@
+"""ISSUE-3 acceptance surface: the batched operating-point frontier
+engine (repro.core.frontier) over the REAL triggered train step —
+single-lane bit-equality against the plain train-step loop, switch-vs-
+unroll equality under vmap, one-compile-per-frontier, and the m≥64
+tiered-network scenario layer at toy sizes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.paper_linreg import (
+    LinRegConfig,
+    TIER_MIXES,
+    TIERED_M64,
+    TieredNetwork,
+    _tiers,
+)
+from repro.core import regression as R
+from repro.core.api import init_train_state, make_triggered_train_step
+from repro.core.frontier import (
+    frontier_curve,
+    make_frontier_step,
+    run_frontier,
+    stack_states,
+)
+from repro.optim import optimizers as opt_lib
+
+TOY = LinRegConfig(name="toy", n=6, num_agents=4, samples_per_agent=8,
+                   stepsize=0.1, steps=6)
+STEPS = 6
+MIXED_M4 = ("always",
+            "gain_lookahead(lam=1.0)|fp16",
+            "gain_lookahead(lam=2.0)|int8+ef",
+            "gain_lookahead(lam=4.0)|topk(0.5)|int8+ef")
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return R.make_problem(TOY, jax.random.key(0))
+
+
+def linreg_loss(params, batch):
+    xs, ys = batch
+    r = xs @ params["w"] - ys
+    return 0.5 * jnp.mean(r * r)
+
+
+def _params():
+    return {"w": jnp.zeros(TOY.n)}
+
+
+def _round_keys():
+    return jax.random.split(jax.random.key(7), STEPS)
+
+
+def _plain_loop(cfg, problem, policy=None, scale=None):
+    """The reference: a jitted plain train step driven from Python."""
+    opt = opt_lib.from_config(cfg)
+    step = jax.jit(make_triggered_train_step(linreg_loss, opt, cfg,
+                                             policy=policy))
+    state = init_train_state(_params(), opt, cfg, policy=policy)
+    hist = []
+    for k in _round_keys():
+        args = (state, R.agent_batches(problem, k))
+        state, m = step(*args) if scale is None else step(*args, scale)
+        hist.append({k_: np.asarray(v) for k_, v in m.items()})
+    return state, hist
+
+
+def _tree_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b))
+    )
+
+
+# ----------------------------------------------------------------------
+# single-lane equality vs. the plain make_triggered_train_step loop
+# ----------------------------------------------------------------------
+
+def test_frontier_step_single_lane_bit_equal_to_plain_loop(problem):
+    """ISSUE-3 acceptance: one frontier lane at scale=1.0 IS the plain
+    train step, bitwise — params, EF memory, and every metric — when
+    the vmapped step is driven round by round (λ·1.0 is exact)."""
+    cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                      num_agents=TOY.num_agents,
+                      comm="gain_lookahead(lam=0.3)|int8+ef")
+    opt = opt_lib.from_config(cfg)
+    bstep = jax.jit(make_frontier_step(linreg_loss, opt, cfg))
+    states = stack_states(init_train_state(_params(), opt, cfg), 1)
+    ones = jnp.ones((1,), jnp.float32)
+    hist = []
+    for k in _round_keys():
+        states, m = bstep(states, R.agent_batches(problem, k), ones)
+        hist.append(m)
+    ref_state, ref_hist = _plain_loop(cfg, problem)
+    lane = jax.tree_util.tree_map(lambda x: x[0], states)
+    assert _tree_equal(lane, ref_state)
+    for got, want in zip(hist, ref_hist):
+        for key in want:
+            np.testing.assert_array_equal(np.asarray(got[key][0]),
+                                          want[key], err_msg=key)
+
+
+def test_run_frontier_single_lane_matches_plain_loop(problem):
+    """The whole-run scan matches the plain loop to float tolerance
+    (the scan body compiles in a different fusion context — ~1 ULP),
+    with the integer-valued wire accounting exactly equal."""
+    cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                      num_agents=TOY.num_agents,
+                      comm="gain_lookahead(lam=0.3)|int8+ef")
+    opt = opt_lib.from_config(cfg)
+    res = run_frontier(
+        linreg_loss, opt, cfg, _params(), scales=[1.0], steps=STEPS,
+        batch_fn=lambda k: R.agent_batches(problem, k),
+        key=jax.random.key(7),
+    )
+    ref_state, ref_hist = _plain_loop(cfg, problem)
+    np.testing.assert_allclose(
+        np.asarray(res.state.params["w"][0]),
+        np.asarray(ref_state.params["w"]), rtol=1e-5, atol=1e-6,
+    )
+    for k in ("num_tx", "wire_bytes", "any_tx"):
+        np.testing.assert_array_equal(
+            np.asarray(res.metrics[k][0]),
+            np.stack([h[k] for h in ref_hist]), err_msg=k,
+        )
+    np.testing.assert_allclose(
+        np.asarray(res.metrics["loss"][0]),
+        np.stack([h["loss"] for h in ref_hist]), rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_scale_is_the_lambda_axis(problem):
+    """Base policy λ=1 at scale s ≡ policy λ=s at scale 1 (bitwise):
+    the traced scale really is the operating-point λ coordinate."""
+    def pols(lam):
+        return ("always", f"gain_lookahead(lam={lam})|int8+ef",
+                f"gain_lookahead(lam={2 * lam})|fp16", "never")
+
+    kw = dict(steps=STEPS, batch_fn=lambda k: R.agent_batches(problem, k),
+              key=jax.random.key(3))
+    cfg1 = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                       num_agents=TOY.num_agents, comm=pols(1.0))
+    cfg3 = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                       num_agents=TOY.num_agents, comm=pols(3.0))
+    a = run_frontier(linreg_loss, opt_lib.from_config(cfg1), cfg1,
+                     _params(), scales=[3.0], **kw)
+    b = run_frontier(linreg_loss, opt_lib.from_config(cfg3), cfg3,
+                     _params(), scales=[1.0], **kw)
+    assert _tree_equal(a.state, b.state)
+    assert _tree_equal(a.metrics, b.metrics)
+
+
+# ----------------------------------------------------------------------
+# switch vs unroll under vmap
+# ----------------------------------------------------------------------
+
+def test_switch_vs_unroll_equal_under_vmap(problem):
+    """Both hetero dispatch paths agree lane-for-lane under the grid
+    vmap (barrier-free: the scan's switch conditionals still run the
+    unrolled ops, and on this backend the paths stay bit-identical)."""
+    cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                      num_agents=4, comm=MIXED_M4)
+    opt = opt_lib.from_config(cfg)
+    kw = dict(scales=[0.0, 0.5, 1.0, 4.0], steps=STEPS,
+              batch_fn=lambda k: R.agent_batches(problem, k),
+              key=jax.random.key(5))
+    sw = run_frontier(linreg_loss, opt, cfg, _params(),
+                      hetero_dispatch="switch", **kw)
+    un = run_frontier(linreg_loss, opt, cfg, _params(),
+                      hetero_dispatch="unroll", **kw)
+    assert _tree_equal(sw.state, un.state)
+    for k in sw.metrics:
+        np.testing.assert_array_equal(np.asarray(sw.metrics[k]),
+                                      np.asarray(un.metrics[k]),
+                                      err_msg=k)
+
+
+# ----------------------------------------------------------------------
+# one compiled program per frontier
+# ----------------------------------------------------------------------
+
+def test_one_compile_for_16_operating_points(problem):
+    """ISSUE-3 acceptance: a ≥16-point frontier over the real train
+    step traces ONCE — the loss_fn trace count is a small constant,
+    independent of the grid size (no per-point Python rerun)."""
+    counts = []
+    for grid in (16, 32):
+        n_traces = [0]
+
+        def loss_fn(params, batch):
+            n_traces[0] += 1
+            return linreg_loss(params, batch)
+
+        cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                          num_agents=4, comm=MIXED_M4)
+        opt = opt_lib.from_config(cfg)
+        res = run_frontier(
+            loss_fn, opt, cfg, _params(),
+            scales=jnp.linspace(0.0, 4.0, grid), steps=3,
+            batch_fn=lambda k: R.agent_batches(problem, k),
+            key=jax.random.key(1),
+        )
+        assert res.metrics["loss"].shape == (grid, 3)
+        counts.append(n_traces[0])
+    assert counts[0] == counts[1], "trace count grew with the grid"
+    assert counts[0] < 16, f"per-point retraces: {counts[0]}"
+
+
+def test_frontier_shapes_and_curve(problem):
+    cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                      num_agents=4, comm=MIXED_M4)
+    opt = opt_lib.from_config(cfg)
+    res = run_frontier(
+        linreg_loss, opt, cfg, _params(), scales=[0.0, 1.0, 8.0],
+        steps=STEPS, batch_fn=lambda k: R.agent_batches(problem, k),
+        key=jax.random.key(2),
+    )
+    assert res.state.params["w"].shape == (3, TOY.n)
+    assert res.metrics["wire_bytes"].shape == (3, STEPS)
+    assert res.metrics["agent_bytes"].shape == (3, STEPS, 4)
+    curve = frontier_curve(res)
+    assert curve["final_loss"].shape == (3,)
+    assert curve["agent_bytes"].shape == (3, 4)
+    total = np.asarray(curve["wire_bytes"])
+    np.testing.assert_allclose(
+        np.asarray(curve["agent_bytes"]).sum(axis=1), total, rtol=1e-6
+    )
+    # harder gating can only cut the wire
+    assert total[2] <= total[0] + 1e-6
+    assert np.all(np.isfinite(np.asarray(curve["final_loss"])))
+
+
+def test_frontier_rejects_non_1d_scales(problem):
+    cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd", num_agents=4,
+                      comm="always")
+    opt = opt_lib.from_config(cfg)
+    with pytest.raises(ValueError, match="1-D"):
+        run_frontier(linreg_loss, opt, cfg, _params(),
+                     scales=jnp.ones((2, 2)), steps=2,
+                     batch_fn=lambda k: R.agent_batches(problem, k),
+                     key=jax.random.key(0))
+
+
+# ----------------------------------------------------------------------
+# tiered-network scenario layer
+# ----------------------------------------------------------------------
+
+def test_tiered_m64_scenarios_are_well_formed():
+    for net in TIER_MIXES:
+        assert net.num_agents == 64
+        pols = net.policies(lam_base=1.0)
+        assert len(pols) == 64
+        assert len(set(pols)) == 4, "each mix carries the 4-tier template"
+        assert len(net.tier_index()) == 64
+        assert len(net.budgets()) == 64
+    # budgets sit BELOW each metered tier's always-transmit rate so the
+    # frontier must gate its way into feasibility (dense = 4n = 128 B)
+    dense = 4.0 * 32
+    always_on_rate = {"metro": 0.5, "edge": 0.25, "sensor": 0.0625}
+    for tier in TIERED_M64.tiers[1:]:
+        assert tier.wire_budget < always_on_rate[tier.name] * dense
+
+
+def test_tiered_lambda_template_formats():
+    tier = TIERED_M64.tiers[2]  # edge: lam_mult=2
+    assert tier.spec(0.5) == "gain_lookahead(lam=1.0)|int8+ef"
+    assert TIERED_M64.tiers[0].spec(0.5) == "always"  # no placeholder
+
+
+def test_tiered_toy_frontier_smoke(problem):
+    """A scaled-down tier mix (1 agent/tier) through the batched engine:
+    the per-agent byte accounting feeds per-tier budget checks."""
+    net = TieredNetwork("toy_tiers", _tiers(1, 1, 1, 1, n=TOY.n))
+    assert net.num_agents == TOY.num_agents
+    cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                      num_agents=net.num_agents,
+                      comm=net.policies(lam_base=1.0))
+    opt = opt_lib.from_config(cfg)
+    scales = [0.0, 0.3, 1.0, 3.0, 10.0]
+    res = run_frontier(
+        linreg_loss, opt, cfg, _params(), scales=scales, steps=STEPS,
+        batch_fn=lambda k: R.agent_batches(problem, k),
+        key=jax.random.key(9),
+    )
+    curve = frontier_curve(res)
+    tier_idx = np.asarray(net.tier_index())
+    agent_bytes = np.asarray(curve["agent_bytes"])  # (G, m) run totals
+    assert agent_bytes.shape == (len(scales), net.num_agents)
+    # the dense backbone outspends every compressed tier at any λ
+    assert np.all(
+        agent_bytes[:, tier_idx == 0] >= agent_bytes[:, tier_idx > 0] - 1e-6
+    )
+    rates = agent_bytes / STEPS
+    budgets = np.asarray(net.budgets())
+    # dense tier budget is inf; metered tiers compare against theirs
+    assert np.isinf(budgets[0])
+    feasible = (rates <= budgets[None, :] + 1e-6).all(axis=1)
+    assert feasible.shape == (len(scales),)

@@ -2,7 +2,6 @@
 exercised here; the 512-device meshes only exist inside the dry-run)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 from jax.sharding import Mesh, PartitionSpec as P

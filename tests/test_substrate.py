@@ -1,7 +1,5 @@
 """Substrate layers: optimizers, schedules, data pipeline, checkpointing,
 tree utils, HLO cost model."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np

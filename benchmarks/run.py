@@ -2,13 +2,16 @@
 
   python -m benchmarks.run            # everything
   python -m benchmarks.run fig2_left  # one benchmark
+  python -m benchmarks.run --list     # name + description per benchmark
   python -m benchmarks.run --smoke fig2_left hetero_frontier
                                       # toy sizes, claim asserts off (CI)
 
 Prints each benchmark's CSV and a final summary line per benchmark.
-Dry-run-derived tables (roofline) read cached JSONs from
-``experiments/dryrun`` — run ``python -m repro.launch.dryrun --all``
-first if missing."""
+``--list`` descriptions come straight from each module's docstring, so
+the catalogue cannot drift from the code (see benchmarks/README.md for
+the full table).  Dry-run-derived tables (roofline) read cached JSONs
+from ``experiments/dryrun`` — run ``python -m repro.launch.dryrun
+--all`` first if missing."""
 from __future__ import annotations
 
 import inspect
@@ -17,6 +20,7 @@ import time
 import traceback
 
 from benchmarks import (
+    adaptive_budget,
     fig1_right,
     fig2_left,
     fig2_right,
@@ -37,14 +41,59 @@ ALL = {
     "lambda_decay": lambda_decay.run,  # beyond-paper: diminishing λ
     "hetero_frontier": hetero_frontier.run,  # beyond-paper: m=8 mixed policies
     "tiered_m64": tiered_m64.run,      # beyond-paper: m=64 tier-mix frontiers
+    "adaptive_budget": adaptive_budget.run,  # beyond-paper: closed-loop λ
     "triggered_lm": triggered_lm.run,  # beyond-paper: trigger on real arch
     "kernel_bench": kernel_bench.run,  # kernel traffic model
     "roofline_table": roofline_table.run,  # §Roofline from dry-run cache
 }
 
 
+def describe(fn) -> str:
+    """First docstring sentence of the module defining ``fn``."""
+    doc = inspect.getdoc(sys.modules[fn.__module__]) or ""
+    head = doc.split("\n\n", 1)[0].replace("\n", " ").strip()
+    return head
+
+
+def list_benchmarks() -> int:
+    smoke_ready = {
+        n for n, fn in ALL.items()
+        if "smoke" in inspect.signature(fn).parameters
+    }
+    undocumented = []
+    for name, fn in ALL.items():
+        tag = " [smoke]" if name in smoke_ready else ""
+        desc = describe(fn)
+        if not desc:
+            undocumented.append(name)
+        print(f"{name:17s}{tag:8s} {desc}")
+    if undocumented:
+        # the catalogue's no-drift promise: every benchmark module MUST
+        # carry the docstring this listing is sourced from
+        print(
+            f"benchmark module(s) missing a docstring: "
+            f"{', '.join(undocumented)}",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
 def main() -> int:
     args = sys.argv[1:]
+    if "--list" in args:
+        stray = [a for a in args if a != "--list"]
+        if stray:
+            # same loud-typo contract as the run path: --list takes no
+            # other arguments, so reject them instead of silently
+            # ignoring what may have been meant to run
+            print(
+                f"--list takes no other arguments, got: "
+                f"{', '.join(map(repr, stray))}",
+                file=sys.stderr,
+            )
+            return 2
+        return list_benchmarks()
     smoke = "--smoke" in args
     names = [a for a in args if a != "--smoke"] or list(ALL)
     # reject unknown names (and stray flags, which land here too) UP

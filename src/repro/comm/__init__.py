@@ -11,8 +11,14 @@ Public surface::
 
 Stage registries (``TRIGGERS``, ``COMPRESSORS``) make new triggers and
 wire formats addable without touching the train step — register a
-builder and every spec string, CLI flag, and benchmark can name it.
-See DESIGN.md for the layering and the wire-byte model.
+builder and every spec string, CLI flag, and benchmark can name it;
+``repro.comm.describe()`` prints the full catalogue with each entry's
+one-line help.  Adaptive (closed-loop) triggers — ``budget_dual`` /
+``budget_window`` — carry per-agent controller state in the
+TrainState's ``ctrl_state`` slot (``CTRL_WIDTH`` f32s per agent,
+allocated by ``ctrl_init``); a ``None`` slot adds zero ops, so plain
+policies compile byte-for-byte unchanged.  See DESIGN.md for the
+layering, the wire-byte model, and the controller protocol (§5).
 """
 from repro.comm.bank import StageBank, build_stage_bank
 from repro.comm.compressors import (
@@ -26,6 +32,7 @@ from repro.comm.compressors import (
 from repro.comm.error_feedback import ef_add, ef_init, ef_residual
 from repro.comm.policy import (
     CommPolicy,
+    ctrl_init,
     from_train_config,
     normalize_policy,
     resolve_policy,
@@ -33,6 +40,7 @@ from repro.comm.policy import (
     with_kernel,
 )
 from repro.comm.registry import Registry, StageSpec
+from repro.comm.spec import describe
 from repro.comm.stats import (
     CommStats,
     comm_stats,
@@ -42,15 +50,19 @@ from repro.comm.stats import (
     structural_bytes,
 )
 from repro.comm.triggers import (
+    CTRL_WIDTH,
     TRIGGERS,
     TriggerContext,
     TriggerFn,
     TriggerOutput,
     build_trigger,
+    ctrl_init_row,
+    spec_is_adaptive,
 )
 
 __all__ = [
     "COMPRESSORS",
+    "CTRL_WIDTH",
     "CommPolicy",
     "CommStats",
     "Compressor",
@@ -68,7 +80,10 @@ __all__ = [
     "build_trigger",
     "chain_from_specs",
     "comm_stats",
+    "ctrl_init",
+    "ctrl_init_row",
     "dense_bits",
+    "describe",
     "ef_add",
     "ef_init",
     "ef_residual",
@@ -77,6 +92,7 @@ __all__ = [
     "normalize_policy",
     "per_agent_wire_bytes",
     "resolve_policy",
+    "spec_is_adaptive",
     "structural_bytes",
     "trigger_spec_from_config",
     "with_kernel",

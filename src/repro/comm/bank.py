@@ -6,30 +6,43 @@ trigger/compressor stack once per agent — fine at m=2, hopeless at m≥64.
 A :class:`StageBank` instead *dedupes* the policies into a bank of
 **agent stages** with one uniform call signature
 
-    stage(params, grad, batch, local_loss, step, ef_mem[, scale])
-        -> (alpha, gain, sent, new_ef_mem)
+    stage(params, grad, batch, local_loss, step, ef_mem[, ctrl[, scale]])
+        -> (alpha, gain, sent, new_ef_mem, new_ctrl)
 
-``scale`` is an optional traced f32 scalar multiplying the stage
-trigger's transmit threshold (repro.comm.triggers) — the frontier
-engine's operating-point coordinate.  It is a trailing default so the
-bank keeps ONE branch list for both the plain train step (6 operands)
-and the knobbed frontier step (7 operands); either way every branch
+``ctrl`` is one agent's ``(CTRL_WIDTH,)`` controller row — the
+closed-loop threshold state of the budget-adaptive triggers
+(repro.comm.triggers) — or ``None`` when the TrainState carries no
+controller slot.  ``scale`` is an optional traced f32 scalar: the
+frontier engine's operating-point coordinate, multiplying a fixed
+trigger's transmit threshold or an adaptive trigger's *target*.  Both
+are trailing defaults so the bank keeps ONE branch list for every
+caller — the plain train step (6 operands), the controller-carrying
+step (7) and the knobbed frontier step (8); either way every branch
 sees the same operand count, which is what ``lax.switch`` requires.
+(``None`` is a leafless pytree, so a caller that needs ``scale`` but
+has no controller state simply passes ``ctrl=None`` through.)
 
-so the train step can dispatch each agent with ``lax.switch(idx, stages,
+The train step dispatches each agent with ``lax.switch(idx, stages,
 ...)`` inside a ``lax.scan`` over the agent axis: trace/compile cost is
 O(#distinct policies), not O(m), and a scalar switch index lowers to a
 conditional that runs exactly the ops the unrolled loop ran — the two
 paths are bit-identical (tests/test_sweep.py).
 
 The stage owns everything that differs between policies — trigger
-decision, error-feedback fold-in, compressor chain, residual update —
-while the (policy-independent) gradient computation stays outside the
-switch.  ``ef_mem`` is ONE agent's residual tree, or ``None`` when the
-TrainState carries no EF memory (a static, trace-time property: every
-branch then returns ``None`` and the pytree structures stay uniform).
-Non-EF policies return a zeroed residual slot so silent bank members
-never leak stale memory.
+decision, controller update, error-feedback fold-in, compressor chain,
+residual update — while the (policy-independent) gradient computation
+stays outside the switch.  ``ef_mem`` is ONE agent's residual tree, or
+``None`` when the TrainState carries no EF memory (a static, trace-time
+property: every branch then returns ``None`` and the pytree structures
+stay uniform).  Non-EF policies return a zeroed residual slot so silent
+bank members never leak stale memory.  The controller slot follows the
+same discipline: with ``has_ctrl_state=False`` every branch returns
+``None`` (zero extra ops — plain policies compile unchanged); with it
+True, adaptive branches return their updated row and plain branches
+pass their (unused) row through untouched, keeping the ``(m,
+CTRL_WIDTH)`` carry structurally stable.  An adaptive branch running
+WITHOUT a controller slot falls back to its static initial row
+(``trig.ctrl0`` — open-loop ``lam0`` gating, no adaptation).
 """
 from __future__ import annotations
 
@@ -60,10 +73,16 @@ class StageBank:
     triggers: Tuple[TriggerFn, ...]
     chains: Tuple[CompressorChain, ...]
     ef_flags: Tuple[bool, ...]
+    adaptive_flags: Tuple[bool, ...] = ()
 
     @property
     def needs_ef(self) -> bool:
         return any(self.ef_flags)
+
+    @property
+    def needs_ctrl(self) -> bool:
+        """Any bank policy carrying closed-loop controller state?"""
+        return any(self.adaptive_flags)
 
     @property
     def num_agents(self) -> int:
@@ -73,32 +92,51 @@ class StageBank:
         """Per-AGENT compressor chains (for wire-byte accounting)."""
         return tuple(self.chains[i] for i in self.agent_index)
 
-    def stages(self, has_ef_memory: bool) -> Tuple[AgentStage, ...]:
+    def stages(self, has_ef_memory: bool, has_ctrl_state: bool = False
+               ) -> Tuple[AgentStage, ...]:
         """Build the uniform-signature branch per bank policy.
 
-        ``has_ef_memory`` says whether the TrainState carries residual
-        slots this trace — with it False, EF is off for every branch and
-        all branches return ``None`` memory (stable pytree carry).
+        ``has_ef_memory`` / ``has_ctrl_state`` say which optional slots
+        the TrainState actually carries this trace — both are static
+        properties: with a slot absent, EF (resp. the controllers) is
+        off for every branch and all branches return ``None`` for it
+        (stable pytree carry, zero extra ops).
         """
+        adaptive = self.adaptive_flags or (False,) * len(self.triggers)
         return tuple(
-            _make_stage(trig, chain, use_ef=ef and has_ef_memory)
-            for trig, chain, ef in zip(self.triggers, self.chains, self.ef_flags)
+            _make_stage(trig, chain, use_ef=ef and has_ef_memory,
+                        adaptive=ad, use_ctrl=has_ctrl_state)
+            for trig, chain, ef, ad in zip(
+                self.triggers, self.chains, self.ef_flags, adaptive
+            )
         )
 
 
-def _make_stage(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool
-                ) -> AgentStage:
-    def stage(params, grad, batch, local_loss, step, ef_mem, scale=None):
-        alpha, gain = trig(params, grad, batch, local_loss, step, scale)
+def _make_stage(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool,
+                adaptive: bool = False, use_ctrl: bool = False) -> AgentStage:
+    def stage(params, grad, batch, local_loss, step, ef_mem, ctrl=None,
+              scale=None):
+        if adaptive:
+            # the controller reads its row (or its static init when the
+            # state carries no slot — open-loop lam0 gating) and emits
+            # the updated row only when there is a slot to carry it
+            row = ctrl if use_ctrl else trig.ctrl0
+            (alpha, gain), new_row = trig(
+                params, grad, batch, local_loss, step, row, scale
+            )
+            new_ctrl = new_row if use_ctrl else None
+        else:
+            alpha, gain = trig(params, grad, batch, local_loss, step, scale)
+            new_ctrl = ctrl  # pass the (unused) row through unchanged
         g_eff = ef_add(grad, ef_mem if use_ef else None)
         sent = chain.compress_tree(g_eff) if chain else g_eff
         if ef_mem is None:
-            return alpha, gain, sent, None
+            return alpha, gain, sent, None, new_ctrl
         if use_ef:
             new_mem = ef_residual(g_eff, sent, alpha)
         else:
             new_mem = jax.tree_util.tree_map(jax.numpy.zeros_like, ef_mem)
-        return alpha, gain, sent, new_mem
+        return alpha, gain, sent, new_mem, new_ctrl
 
     return stage
 
@@ -135,4 +173,5 @@ def build_stage_bank(
         ),
         chains=tuple(p.chain() for p in bank),
         ef_flags=tuple(p.needs_ef for p in bank),
+        adaptive_flags=tuple(p.is_adaptive for p in bank),
     )

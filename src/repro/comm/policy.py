@@ -111,7 +111,12 @@ class CommPolicy:
                       oracle=None) -> TriggerFn:
         return build_trigger(
             self.trigger,
-            TriggerContext(loss_fn=loss_fn, probe_eps=probe_eps, oracle=oracle),
+            TriggerContext(
+                loss_fn=loss_fn, probe_eps=probe_eps, oracle=oracle,
+                # byte-target controllers price one transmission with the
+                # policy's own chain ratio (None = uncompressed)
+                ratio_for=self.chain().ratio_for if self.compressors else None,
+            ),
         )
 
     def chain(self) -> CompressorChain:
@@ -126,6 +131,23 @@ class CommPolicy:
     @property
     def needs_ef(self) -> bool:
         return self.error_feedback and bool(self.compressors)
+
+    @property
+    def is_adaptive(self) -> bool:
+        """Does the trigger carry closed-loop controller state
+        (``budget_dual``/``budget_window``)?  Adaptive policies need a
+        ``ctrl_state`` slot in the TrainState (``init_train_state``
+        allocates it)."""
+        from repro.comm.triggers import spec_is_adaptive
+
+        return spec_is_adaptive(self.trigger)
+
+    def ctrl0(self):
+        """This policy's initial ``(CTRL_WIDTH,)`` controller row
+        (a jax f32 array)."""
+        from repro.comm.triggers import ctrl_init_row
+
+        return ctrl_init_row(self.trigger)
 
 
 # ----------------------------------------------------------------------
@@ -222,6 +244,23 @@ def resolve_policy(cfg, policy: Optional[PoliciesLike] = None, *,
             stacklevel=3,
         )
     return from_train_config(cfg, use_kernel=use_kernel)
+
+
+def ctrl_init(policy: Union[CommPolicy, Tuple[CommPolicy, ...]],
+              num_agents: int):
+    """The initial ``(num_agents, CTRL_WIDTH)`` controller slot for a
+    (normalized) policy, or ``None`` when no agent's trigger is adaptive
+    — the ``None`` that keeps plain policies' TrainStates (and compiled
+    steps) byte-for-byte what they were."""
+    import jax.numpy as jnp
+
+    policies = policy if isinstance(policy, tuple) else (policy,)
+    if not any(p.is_adaptive for p in policies):
+        return None
+    if len(policies) == 1:
+        return jnp.broadcast_to(policies[0].ctrl0()[None],
+                                (num_agents, policies[0].ctrl0().shape[0]))
+    return jnp.stack([p.ctrl0() for p in policies])
 
 
 def normalize_policy(policy: Union[CommPolicy, Tuple[CommPolicy, ...]],

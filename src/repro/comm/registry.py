@@ -51,6 +51,22 @@ class RegistryEntry:
     params: Tuple[Tuple[str, Any], ...]  # ordered (param, default)
     builder: Callable[..., Any]
     doc: str = ""
+    # adaptive stages carry closed-loop controller state: their builders
+    # return functions taking (and returning) a per-agent ctrl row in
+    # addition to the plain stage signature (repro.comm.triggers)
+    adaptive: bool = False
+
+    @property
+    def help(self) -> str:
+        """The one-line description surfaced by ``repro.comm.describe()``."""
+        return self.doc
+
+    def signature(self) -> str:
+        """``name(param=default, ...)`` — the spec-string call shape."""
+        if not self.params:
+            return self.name
+        inner = ", ".join(f"{p}={_render_value(d)}" for p, d in self.params)
+        return f"{self.name}({inner})"
 
     def resolve(self, pos_args: Tuple[Any, ...] = (),
                 kw_args: Dict[str, Any] | None = None) -> StageSpec:
@@ -98,12 +114,18 @@ class Registry:
     _entries: Dict[str, RegistryEntry] = field(default_factory=dict)
 
     def register(self, name: str, params: Tuple[Tuple[str, Any], ...] = (),
-                 doc: str = ""):
-        """Decorator: register ``builder`` under ``name``."""
+                 doc: str = "", adaptive: bool = False):
+        """Decorator: register ``builder`` under ``name``.
+
+        ``doc`` is the one-line help string ``repro.comm.describe()``
+        prints; ``adaptive=True`` marks a stage whose builder speaks the
+        controller-state protocol (repro.comm.triggers)."""
         def deco(builder):
             if name in self._entries:
                 raise ValueError(f"duplicate {self.kind} {name!r}")
-            self._entries[name] = RegistryEntry(name, tuple(params), builder, doc)
+            self._entries[name] = RegistryEntry(
+                name, tuple(params), builder, doc, adaptive
+            )
             return builder
         return deco
 

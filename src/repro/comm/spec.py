@@ -123,3 +123,35 @@ def render_policy(trigger: StageSpec, compressors: Tuple[StageSpec, ...],
 def split_multi(text: str) -> List[str]:
     """Split a (possibly per-agent) spec on ";"."""
     return [p.strip() for p in text.split(";") if p.strip()]
+
+
+def describe() -> str:
+    """Human-readable catalogue of the spec-string surface.
+
+    One line per registered stage — ``signature  — help`` — sourced from
+    the registries, so a newly registered trigger/compressor shows up
+    here (and in ``--help`` surfaces built on this) with no extra
+    wiring.  Exposed as ``repro.comm.describe()``.
+    """
+    lines = [
+        "spec grammar:  trigger(args) [|compressor(args)]... [+ef]",
+        '               ";" separates per-agent policies '
+        "(heterogeneous networks)",
+        "",
+        "triggers (repro.comm.TRIGGERS):",
+    ]
+    for name in TRIGGERS.names():
+        entry = TRIGGERS.get(name)
+        mark = "  [adaptive: carries controller state]" if entry.adaptive \
+            else ""
+        lines.append(f"  {entry.signature():<44} {entry.help}{mark}")
+    lines += ["", "compressors (repro.comm.COMPRESSORS):"]
+    for name in COMPRESSORS.names():
+        entry = COMPRESSORS.get(name)
+        lines.append(f"  {entry.signature():<44} {entry.help}")
+    lines += [
+        "",
+        "trailing '+ef' on the last compressor enables error feedback",
+        'example: "gain_lookahead(lam=0.1,decay=inv_t)|topk(0.05)|int8+ef"',
+    ]
+    return "\n".join(lines)

@@ -5,12 +5,31 @@ Owns the wire-byte model so benchmarks stop recomputing it ad hoc:
     effective bytes = structural bytes × compression ratio × comm rate
 
 where *structural bytes* are the dense bytes of one agent's gradient
-tree, *compression ratio* comes from the policy's compressor chain
-(repro.comm.compressors.WireFormat), and *comm rate* is the trigger's
-per-round transmit fraction.  Under SPMD the masked mean is one
-all-reduce regardless of who transmits — the EFFECTIVE bytes (what a
-real network would carry) are what the paper's guarantees bound.  See
-DESIGN.md §2 "Communication accounting under SPMD".
+tree (:func:`structural_bytes` — a Python int, static at trace time),
+*compression ratio* comes from the policy's compressor chain
+(repro.comm.compressors.WireFormat) against the gradients' NATIVE dtype
+width (:func:`dense_bits`), and *comm rate* is the trigger's per-round
+transmit fraction.  Under SPMD the masked mean is one all-reduce
+regardless of who transmits — the EFFECTIVE bytes (what a real network
+would carry) are what the paper's guarantees bound.  See DESIGN.md §2
+"Communication accounting under SPMD".
+
+Two resolutions of the same model:
+
+* :func:`comm_stats` — the scalar per-round summary every train step
+  emits (``comm_rate``, ``any_tx``, ``num_tx``, ``mean_gain``,
+  ``wire_bytes``).
+* :func:`per_agent_wire_bytes` — the ``(A,)`` per-agent vector the
+  summary integrates away; what tiered scenarios check per-tier
+  ``wire_budget``\\s against, and the observable the budget-adaptive
+  triggers (repro.comm.triggers ``budget_window``) drive toward their
+  target — the controller prices one transmission with exactly this
+  ``structural × ratio`` model, so benchmark accounting and controller
+  feedback cannot drift apart.
+
+All helpers are pure jnp ops over the per-agent ``(A,)`` alpha/gain
+vectors, so they batch transparently under the frontier engine's grid
+vmap (``(G,)``/``(G, A)``).
 """
 from __future__ import annotations
 

@@ -33,6 +33,46 @@ Registered triggers (spec-string names):
   transmit iff ``‖g‖² ≥ μ``.
 * ``periodic(period)`` / ``always`` / ``never`` — scheduling baselines.
 
+**Adaptive (closed-loop) triggers** — arXiv:2101.10007's scheduling
+idea: instead of a fixed λ, the threshold is *controller state* updated
+every round from the observed transmissions, driving the agent toward a
+communication budget:
+
+* ``budget_dual(rate,eta,lam0,beta)`` — dual ascent on λ toward a
+  target transmit RATE ``rate`` ∈ [0, 1]:
+  ``λ⁺ = [λ + η·ĝ·(α − rate)]₊`` where ``ĝ`` is an EWMA of ``|gain|``
+  (the natural λ scale, making ``eta`` problem-size-free).
+* ``budget_window(bytes,window,eta,lam0,beta)`` — windowed-rate control
+  of λ toward a target of ``bytes`` *effective wire bytes per round*:
+  an EWMA ``b`` over an effective ``window`` of rounds tracks
+  ``α × tx_cost`` and ``λ⁺ = [λ + η·ĝ·(b⁺ − bytes)/tx_cost]₊``, where
+  ``tx_cost`` (one transmission's wire bytes — dense payload × the
+  policy's compression ratio) is static at trace time.
+
+Both gate exactly like ``gain_lookahead`` (transmit iff the lookahead
+gain ≤ −λ, same ops), so with the controller *disabled* — no
+``ctrl`` state carried — they are bit-identical to
+``gain_lookahead(lam=lam0)``.
+
+**Controller-state protocol.**  Plain triggers map
+``(params, grad, batch, local_loss, step[, scale]) -> TriggerOutput``.
+Adaptive triggers (registry entries with ``adaptive=True``) take a
+per-agent f32 ``ctrl`` row of width :data:`CTRL_WIDTH` *before* the
+optional ``scale`` and additionally return the updated row::
+
+    trig(params, grad, batch, local_loss, step, ctrl[, scale])
+        -> (TriggerOutput, new_ctrl)
+
+Row layout: ``ctrl[0]`` = current threshold λ, ``ctrl[1]`` = EWMA of
+the controlled signal (transmit rate / wire bytes per round),
+``ctrl[2]`` = EWMA of ``|gain|`` (the controller's λ step scale).  The
+initial row is :func:`ctrl_init_row`; each built adaptive trigger also
+carries it as ``trig.ctrl0`` (the open-loop fallback when the
+TrainState holds no controller slot).  For adaptive triggers the
+``scale`` operand multiplies the *target* (rate or bytes) — the
+budget-axis grid coordinate of ``repro.core.frontier`` — not λ, which
+is closed-loop state.
+
 The fused reduction ``(gᵀg, gᵀHg)`` over flattened gradients is the
 technique's per-step hot spot at scale; ``repro.kernels.gain_reduce``
 provides the Pallas TPU kernel for it, enabled *per trigger* with the
@@ -78,6 +118,40 @@ TRIGGERS = Registry("trigger")
 _GAIN_PARAMS = (("lam", 0.0), ("decay", "const"), ("decay_rate", 0.95))
 _KERNEL = (("kernel", False),)
 
+# ----------------------------------------------------------------------
+# Controller state (adaptive triggers)
+# ----------------------------------------------------------------------
+
+# per-agent controller row: [lam, signal_ewma, gain_mag_ewma] — ONE
+# width for every adaptive trigger, so heterogeneous stage banks keep a
+# uniform (m, CTRL_WIDTH) TrainState slot across lax.switch branches
+CTRL_WIDTH = 3
+
+
+def spec_is_adaptive(spec: StageSpec) -> bool:
+    """Does this trigger spec name a closed-loop (controller) trigger?"""
+    return TRIGGERS.get(spec.name).adaptive
+
+
+def _ctrl_row(lam0: float) -> jax.Array:
+    """THE controller-row layout ``[λ, signal EWMA, |gain| EWMA]`` — the
+    single constructor behind ``ctrl_init_row`` and every adaptive
+    trigger's ``ctrl0``, so the allocated slot and the open-loop
+    fallback cannot desynchronize."""
+    return jnp.array([float(lam0), 0.0, 0.0], jnp.float32)
+
+
+def ctrl_init_row(spec: StageSpec) -> jax.Array:
+    """The initial ``(CTRL_WIDTH,)`` controller row for one trigger spec.
+
+    Adaptive triggers start at their ``lam0``; plain triggers get a zero
+    row (allocated only so heterogeneous mixes keep one uniform slot —
+    their stages pass it through untouched).
+    """
+    entry = TRIGGERS.get(spec.name)
+    lam0 = entry.full_args(spec).get("lam0", 0.0) if entry.adaptive else 0.0
+    return _ctrl_row(lam0)
+
 
 class TriggerContext(NamedTuple):
     """Build-time dependencies a trigger may need (all optional)."""
@@ -85,6 +159,10 @@ class TriggerContext(NamedTuple):
     loss_fn: Optional[Callable] = None   # local empirical loss(params, batch)
     probe_eps: float = 1e-2              # ε of the probe step w − ε g
     oracle: Optional[tuple] = None       # (Σ, w*) for gain_exact
+    # the policy's wire-compression ratio as a function of the gradient
+    # dtype's dense bits (CompressorChain.ratio_for) — lets byte-target
+    # controllers price one transmission; None = uncompressed (ratio 1)
+    ratio_for: Optional[Callable] = None
 
 
 def build_trigger(spec: StageSpec, ctx: TriggerContext = TriggerContext()) -> TriggerFn:
@@ -156,22 +234,37 @@ def _grad_norm(args, ctx):
     return trig
 
 
-@TRIGGERS.register("gain_lookahead", params=_GAIN_PARAMS + _KERNEL,
-                   doc="eq. (11) with gain = loss(w - eps g) - loss(w)")
-def _gain_lookahead(args, ctx):
+def _lookahead_gain_fn(ctx: TriggerContext, who: str):
+    """The eq.-(11) lookahead gain ``loss(w − ε g, batch) − loss(w)``.
+
+    Shared by ``gain_lookahead`` and the budget controllers so their
+    gains are computed by the SAME ops — a controller with its state
+    disabled is then bit-identical to ``gain_lookahead(lam=lam0)``.
+    """
     if ctx.loss_fn is None:
-        raise ValueError("gain_lookahead trigger needs loss_fn")
+        raise ValueError(f"{who} trigger needs loss_fn")
     loss_fn = ctx.loss_fn
-    lam_at = _lam_at(args)
     eps = jnp.float32(ctx.probe_eps)
 
-    def trig(params, grad, batch, local_loss, step, scale=None):
+    def gain_of(params, grad, batch, local_loss):
         from repro.sharding.constraint import constrain_params
 
         # probe params are per-agent under vmap — pin to model-axis
         # sharding for the same reason as the grads (see core.api)
         probe = constrain_params(tree_add_scaled(params, grad, -eps), "")
-        gain = loss_fn(probe, batch) - local_loss
+        return loss_fn(probe, batch) - local_loss
+
+    return gain_of
+
+
+@TRIGGERS.register("gain_lookahead", params=_GAIN_PARAMS + _KERNEL,
+                   doc="eq. (11) with gain = loss(w - eps g) - loss(w)")
+def _gain_lookahead(args, ctx):
+    gain_of = _lookahead_gain_fn(ctx, "gain_lookahead")
+    lam_at = _lam_at(args)
+
+    def trig(params, grad, batch, local_loss, step, scale=None):
+        gain = gain_of(params, grad, batch, local_loss)
         return TriggerOutput(
             _as_alpha(gain <= -_scaled(lam_at(step), scale)),
             gain.astype(jnp.float32),
@@ -245,6 +338,128 @@ def _gain_exact(args, ctx):
             _as_alpha(gain <= -_scaled(lam_at(step), scale)),
             gain.astype(jnp.float32),
         )
+    return trig
+
+
+# ----------------------------------------------------------------------
+# Budget-adaptive (closed-loop) triggers — arXiv:2101.10007's scheduling
+# ----------------------------------------------------------------------
+
+def _ctrl_unpack(ctrl):
+    return ctrl[0], ctrl[1], ctrl[2]
+
+
+# λ step scale: η·(ĝ + RELAX·λ).  The |gain| EWMA ĝ makes η problem-
+# scale-free, but when training converges the gains collapse and a λ
+# pumped up by the early transient would unwind at rate η·ĝ ≈ 0 —
+# stuck high, tier silent forever.  The λ-proportional term bounds the
+# unwind to a geometric decay (λ ∝ (1 − η·RELAX·target)^k) regardless
+# of where the gains went, and near equilibrium (λ ≈ gain quantile ≈ ĝ)
+# it is the same order as ĝ, so it only widens the dither slightly.
+_LAM_RELAX = 0.25
+
+
+def _lam_step_scale(eta, gmag, lam):
+    return eta * (gmag + _LAM_RELAX * lam)
+
+
+def _budget_decision(gain_of, params, grad, batch, local_loss, lam):
+    """The shared gate: transmit iff lookahead gain ≤ −λ (λ from state)."""
+    gain = gain_of(params, grad, batch, local_loss)
+    return _as_alpha(gain <= -lam), gain
+
+
+@TRIGGERS.register(
+    "budget_dual",
+    params=(("rate", 0.5), ("eta", 0.5), ("lam0", 0.0), ("beta", 0.1)),
+    doc="closed loop on tx RATE: dual ascent on lam toward `rate`",
+    adaptive=True,
+)
+def _budget_dual(args, ctx):
+    gain_of = _lookahead_gain_fn(ctx, "budget_dual")
+    rate = jnp.float32(args["rate"])
+    eta = jnp.float32(args["eta"])
+    beta = jnp.float32(args["beta"])
+
+    def trig(params, grad, batch, local_loss, step, ctrl, scale=None):
+        del step
+        lam, sig, gmag = _ctrl_unpack(ctrl)
+        alpha, gain = _budget_decision(
+            gain_of, params, grad, batch, local_loss, lam
+        )
+        # |gain| EWMA = the natural λ scale; updating it BEFORE the λ
+        # step makes the very first rounds move at the problem's scale
+        gmag = (1.0 - beta) * gmag + beta * jnp.abs(gain)
+        # dual ascent: too many transmissions ⇒ raise λ (gate harder);
+        # scale (the frontier's budget-axis coordinate) multiplies the
+        # TARGET — λ itself is closed-loop state
+        lam = jnp.maximum(
+            lam + _lam_step_scale(eta, gmag, lam)
+            * (alpha - _scaled(rate, scale)),
+            0.0,
+        )
+        sig = (1.0 - beta) * sig + beta * alpha  # realized-rate estimate
+        return (
+            TriggerOutput(alpha, gain.astype(jnp.float32)),
+            jnp.stack([lam, sig, gmag]).astype(jnp.float32),
+        )
+
+    trig.ctrl0 = _ctrl_row(args["lam0"])
+    return trig
+
+
+@TRIGGERS.register(
+    "budget_window",
+    params=(("bytes", 0.0), ("window", 16), ("eta", 0.5), ("lam0", 0.0),
+            ("beta", 0.1)),
+    doc="closed loop on wire BYTES/round over an EWMA window",
+    adaptive=True,
+)
+def _budget_window(args, ctx):
+    gain_of = _lookahead_gain_fn(ctx, "budget_window")
+    if float(args["bytes"]) <= 0.0:
+        raise ValueError(
+            "budget_window needs a positive bytes/round target, e.g. "
+            "budget_window(bytes=44.8) — a zero target can only ratchet "
+            "lambda up until the agent is permanently silent"
+        )
+    target = jnp.float32(args["bytes"])
+    window = jnp.float32(max(float(args["window"]), 1.0))
+    eta = jnp.float32(args["eta"])
+    beta = jnp.float32(args["beta"])
+    ratio_for = ctx.ratio_for
+
+    def trig(params, grad, batch, local_loss, step, ctrl, scale=None):
+        del step
+        from repro.comm.stats import dense_bits, structural_bytes
+
+        # one transmission's wire bytes: ONE agent's dense payload × the
+        # policy's compression ratio — shapes/dtypes only, so a Python
+        # float, static at trace time (DESIGN.md §2's byte model)
+        cost = structural_bytes(grad, per_agent=False) * (
+            ratio_for(dense_bits(grad)) if ratio_for is not None else 1.0
+        )
+        cost = jnp.float32(cost)
+        lam, meas, gmag = _ctrl_unpack(ctrl)
+        alpha, gain = _budget_decision(
+            gain_of, params, grad, batch, local_loss, lam
+        )
+        gmag = (1.0 - beta) * gmag + beta * jnp.abs(gain)
+        # windowed-rate measurement of bytes/round, then the same dual
+        # step as budget_dual with the byte error priced back into rate
+        # units by the per-transmission cost
+        meas = meas + (alpha * cost - meas) / window
+        lam = jnp.maximum(
+            lam + _lam_step_scale(eta, gmag, lam)
+            * (meas - _scaled(target, scale)) / cost,
+            0.0,
+        )
+        return (
+            TriggerOutput(alpha, gain.astype(jnp.float32)),
+            jnp.stack([lam, meas, gmag]).astype(jnp.float32),
+        )
+
+    trig.ctrl0 = _ctrl_row(args["lam0"])
     return trig
 
 

@@ -167,3 +167,52 @@ TIERED_M64_CFG = LinRegConfig(
     name="tiered_m64", n=32, num_agents=64, samples_per_agent=32,
     stepsize=0.05, steps=40, cov_range=(0.2, 4.0),
 )
+
+
+# ----------------------------------------------------------------------
+# Budget-adaptive tier mix (closed-loop scheduling, arXiv:2101.10007)
+# ----------------------------------------------------------------------
+
+def _adaptive_tiers(backbone: int, metro: int, edge: int, sensor: int,
+                    n: int = 32) -> Tuple[TierSpec, ...]:
+    """The smart-city template with CLOSED-LOOP metered tiers.
+
+    Same tier layout, wire formats and per-tier budgets as
+    :func:`_tiers`, but each metered tier's trigger is a budget
+    controller TARGETING its own ``wire_budget`` instead of a hand-tuned
+    fixed λ: the metro tier runs ``budget_window`` on the byte budget
+    directly, the edge/sensor tiers run ``budget_dual`` on the
+    equivalent transmit rate ``budget / (dense × chain ratio)``.  The
+    budgets still sit BELOW each tier's always-transmit rate, so the
+    controllers must gate their way into feasibility — and, unlike the
+    fixed-λ template, they keep tracking the budget as the gain
+    distribution drifts over training.
+    """
+    dense = 4.0 * n
+    metro_budget = 0.35 * dense
+    edge_budget = 0.15 * dense
+    sensor_budget = 0.04 * dense
+    # per-transmission wire cost per tier: dense payload × chain ratio
+    # (fp16 = 0.5, int8 = 0.25, topk(0.05)|int8 = 0.0625 — DESIGN.md §2)
+    edge_rate = edge_budget / (0.25 * dense)
+    sensor_rate = sensor_budget / (0.0625 * dense)
+    return (
+        TierSpec("backbone", backbone, "always"),
+        TierSpec("metro", metro,
+                 f"budget_window(bytes={metro_budget!r})|fp16",
+                 wire_budget=metro_budget),
+        TierSpec("edge", edge,
+                 f"budget_dual(rate={edge_rate!r})|int8+ef",
+                 wire_budget=edge_budget),
+        TierSpec("sensor", sensor,
+                 f"budget_dual(rate={sensor_rate!r})|topk(0.05)|int8+ef",
+                 wire_budget=sensor_budget),
+    )
+
+
+# The adaptive counterpart of TIERED_M64: identical fleet layout and
+# budgets, controllers instead of hand-tuned λs — the pairing
+# benchmarks/adaptive_budget.py publishes.
+TIERED_M64_ADAPTIVE = TieredNetwork(
+    "tiered_m64_adaptive", _adaptive_tiers(8, 16, 24, 16)
+)

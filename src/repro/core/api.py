@@ -47,6 +47,7 @@ from repro.comm import (
     CommPolicy,
     build_stage_bank,
     comm_stats,
+    ctrl_init,
     dense_bits,
     ef_add,
     ef_init,
@@ -103,17 +104,36 @@ def _warn_ef_memory_missing():
     )
 
 
+def _warn_ctrl_state_missing():
+    """Trace-time notice: the policy carries an adaptive (budget)
+    trigger but the TrainState has no controller slot, so the threshold
+    stays open-loop at its lam0 — no adaptation this run."""
+    import warnings
+
+    warnings.warn(
+        "policy has an adaptive budget trigger but state.ctrl_state is "
+        "None — pass the same policy to init_train_state to allocate "
+        "it; running OPEN-LOOP at the trigger's lam0 (no adaptation)",
+        UserWarning,
+        stacklevel=2,
+    )
+
+
 class TrainState(NamedTuple):
     step: jax.Array
     params: Any
     opt_state: Any
     ef_memory: Optional[Any] = None  # error-feedback residuals (A, *param)
+    # per-agent controller rows (A, CTRL_WIDTH) for adaptive budget
+    # triggers; None (plain policies) threads through with zero extra ops
+    ctrl_state: Optional[Any] = None
 
 
 def init_train_state(params, optimizer, cfg: TrainConfig,
                      policy=None) -> TrainState:
     """Build the initial state; EF memory is allocated iff the resolved
-    policy (or any per-agent policy) carries error feedback."""
+    policy (or any per-agent policy) carries error feedback, and the
+    controller slot iff any trigger is adaptive (budget_dual/_window)."""
     resolved = normalize_policy(resolve_policy(cfg, policy), cfg.num_agents)
     policies = resolved if isinstance(resolved, tuple) else (resolved,)
     ef = ef_init(params, cfg.num_agents) if any(p.needs_ef for p in policies) else None
@@ -122,6 +142,7 @@ def init_train_state(params, optimizer, cfg: TrainConfig,
         params=params,
         opt_state=optimizer.init(params),
         ef_memory=ef,
+        ctrl_state=ctrl_init(resolved, cfg.num_agents),
     )
 
 
@@ -163,7 +184,15 @@ def make_triggered_train_step(
     multiplying every trigger's transmit threshold (λ/μ).  The default
     ``None`` adds no ops; a traced scale turns the step into a family
     of operating points, which is how ``repro.core.frontier`` vmaps a
-    whole loss-vs-wire-bytes frontier out of ONE train step.
+    whole loss-vs-wire-bytes frontier out of ONE train step.  For
+    adaptive budget triggers (``budget_dual``/``budget_window``) the
+    scale multiplies the *target* instead — λ is closed-loop state in
+    ``state.ctrl_state``, a per-agent ``(A, CTRL_WIDTH)`` slot
+    ``init_train_state`` allocates iff the policy is adaptive.  A
+    ``None`` ctrl_state emits zero extra ops (plain policies compile
+    unchanged); an adaptive policy stepped without the slot gates
+    open-loop at its ``lam0`` (with a ``UserWarning``), bit-identical
+    to ``gain_lookahead(lam=lam0)``.
 
     ``barriers=False`` drops the ``optimization_barrier`` ULP pins that
     keep the two hetero dispatch paths bit-identical — required when
@@ -192,21 +221,24 @@ def make_triggered_train_step(
 
     def build_stages(pol: CommPolicy):
         trig = pol.build_trigger(loss_fn=loss_fn, probe_eps=cfg.lr, oracle=oracle)
-        return trig, pol.chain(), pol.needs_ef
+        return trig, pol.chain(), pol.needs_ef, pol.is_adaptive
 
     if hetero is None:
-        trigger, chain, needs_ef = build_stages(resolved)
+        trigger, chain, needs_ef, adaptive = build_stages(resolved)
         chains = (chain,)
+        needs_ctrl = adaptive
     elif hetero_dispatch == "switch":
         bank = build_stage_bank(
             hetero, loss_fn=loss_fn, probe_eps=cfg.lr, oracle=oracle
         )
         needs_ef = bank.needs_ef
+        needs_ctrl = bank.needs_ctrl
         chains = bank.agent_chains()
     else:
         stages = [build_stages(p) for p in hetero]
-        needs_ef = any(ef for _, _, ef in stages)
-        chains = tuple(c for _, c, _ in stages)
+        needs_ef = any(ef for _, _, ef, _ in stages)
+        needs_ctrl = any(ad for _, _, _, ad in stages)
+        chains = tuple(c for _, c, _, _ in stages)
 
     def objective(params, batch):
         main = loss_fn(params, batch)
@@ -238,17 +270,41 @@ def make_triggered_train_step(
             main, g = jax.lax.optimization_barrier((main, g))
         return main, g
 
-    def per_agent_fn(params, step, trig, scale, barrier: bool = False):
-        def per_agent(agent_batch):
-            main, g = grad_prologue(params, agent_batch, barrier)
-            alpha, gain = trig(params, g, agent_batch, main, step, scale)
-            return main, g, alpha, gain
-        return per_agent
+    def trigger_call(trig, is_adaptive, use_ctrl, params, g, agent_batch,
+                     main, step, ctrl_row, scale):
+        """One trigger evaluation under either protocol.
+
+        Returns ``(alpha, gain, new_ctrl_row)`` where the row is
+        ``None`` whenever the state carries no controller slot — the
+        zero-extra-ops contract: plain policies (and adaptive policies
+        stepped open-loop) emit exactly the pre-controller program."""
+        if is_adaptive:
+            row = ctrl_row if use_ctrl else trig.ctrl0
+            (alpha, gain), new_row = trig(
+                params, g, agent_batch, main, step, row, scale
+            )
+            return alpha, gain, (new_row if use_ctrl else None)
+        alpha, gain = trig(params, g, agent_batch, main, step, scale)
+        return alpha, gain, (ctrl_row if use_ctrl else None)
 
     def train_step(state: TrainState, batch, scale=None):
         if hetero is None:
-            per_agent = per_agent_fn(state.params, state.step, trigger, scale)
-            losses, grads, alphas, gains = jax.vmap(per_agent)(batch)
+            use_ctrl = needs_ctrl and state.ctrl_state is not None
+            if needs_ctrl and not use_ctrl:
+                _warn_ctrl_state_missing()
+
+            def per_agent(agent_batch, ctrl_row):
+                main, g = grad_prologue(state.params, agent_batch, False)
+                alpha, gain, new_row = trigger_call(
+                    trigger, adaptive, use_ctrl, state.params, g,
+                    agent_batch, main, state.step, ctrl_row, scale,
+                )
+                return main, g, alpha, gain, new_row
+
+            losses, grads, alphas, gains, new_ctrl = jax.vmap(
+                per_agent, in_axes=(0, 0 if use_ctrl else None)
+            )(batch, state.ctrl_state if use_ctrl else None)
+            new_ctrl = new_ctrl if use_ctrl else state.ctrl_state
             if chain:
                 # EF engages only when the state actually carries memory
                 # (init_train_state with the same policy) — keeping the
@@ -275,30 +331,41 @@ def make_triggered_train_step(
             has_mem = needs_ef and state.ef_memory is not None
             if needs_ef and not has_mem:
                 _warn_ef_memory_missing()
-            branches = bank.stages(has_mem)
+            use_ctrl = needs_ctrl and state.ctrl_state is not None
+            if needs_ctrl and not use_ctrl:
+                _warn_ctrl_state_missing()
+            branches = bank.stages(has_mem, use_ctrl)
             agent_idx = jnp.asarray(bank.agent_index, jnp.int32)
             mem = state.ef_memory if has_mem else None
+            ctrl = state.ctrl_state if use_ctrl else None
 
             def agent_body(carry, inp):
-                idx, agent_batch, mem_i = inp
+                idx, agent_batch, mem_i, ctrl_i = inp
                 main, g = grad_prologue(state.params, agent_batch, True)
                 operands = (
                     state.params, g, agent_batch, main, state.step, mem_i,
                 )
+                if use_ctrl or scale is not None:
+                    # the stage's optional ctrl operand precedes scale,
+                    # so it must be passed (possibly as the leafless
+                    # None pytree) whenever scale is
+                    operands = operands + (ctrl_i,)
                 if scale is not None:
                     # trailing operand feeds the stages' optional
                     # threshold scale (the frontier grid coordinate);
                     # arity stays uniform across the branch list either
                     # way because the stage declares it with a default
                     operands = operands + (scale,)
-                alpha, gain, sent_i, new_mem_i = jax.lax.switch(
+                alpha, gain, sent_i, new_mem_i, new_ctrl_i = jax.lax.switch(
                     idx, branches, *operands
                 )
-                return carry, (main, alpha, gain, sent_i, new_mem_i)
+                return carry, (main, alpha, gain, sent_i, new_mem_i,
+                               new_ctrl_i)
 
-            _, (losses, alphas, gains, sent, new_mem) = jax.lax.scan(
-                agent_body, 0.0, (agent_idx, batch, mem)
-            )
+            _, (losses, alphas, gains, sent, new_mem, new_ctrl) = \
+                jax.lax.scan(
+                    agent_body, 0.0, (agent_idx, batch, mem, ctrl)
+                )
             if barriers:
                 # same barrier as the unroll path below: pin the
                 # per-agent scalar stacks so both programs reduce a
@@ -309,15 +376,24 @@ def make_triggered_train_step(
                     (losses, gains)
                 )
             new_ef = new_mem if has_mem else state.ef_memory
+            new_ctrl = new_ctrl if use_ctrl else state.ctrl_state
         else:
             # Heterogeneous "unroll": the PR-1 Python loop over agents —
             # compile cost O(m), kept as the bit-identical reference.
+            use_ctrl = needs_ctrl and state.ctrl_state is not None
+            if needs_ctrl and not use_ctrl:
+                _warn_ctrl_state_missing()
             per = []
-            for i, (trig_i, chain_i, ef_i) in enumerate(stages):
+            ctrl_rows = []
+            for i, (trig_i, chain_i, ef_i, ad_i) in enumerate(stages):
                 agent_batch = jax.tree_util.tree_map(lambda x: x[i], batch)
-                main, g, alpha, gain = per_agent_fn(
-                    state.params, state.step, trig_i, scale, barrier=True
-                )(agent_batch)
+                main, g = grad_prologue(state.params, agent_batch, True)
+                alpha, gain, new_row = trigger_call(
+                    trig_i, ad_i, use_ctrl, state.params, g, agent_batch,
+                    main, state.step,
+                    state.ctrl_state[i] if use_ctrl else None, scale,
+                )
+                ctrl_rows.append(new_row)
                 use_ef = ef_i and state.ef_memory is not None
                 if ef_i and not use_ef:
                     _warn_ef_memory_missing()
@@ -358,6 +434,9 @@ def make_triggered_train_step(
                 )
             else:
                 new_ef = state.ef_memory
+            new_ctrl = (
+                jnp.stack(ctrl_rows) if use_ctrl else state.ctrl_state
+            )
 
         agg = masked_mean(sent, alphas)
         updates, opt_state = optimizer.update(
@@ -392,8 +471,12 @@ def make_triggered_train_step(
             metrics["agent_bytes"] = per_agent_wire_bytes(
                 alphas, structural=sb, ratios=ratios
             )
+            if needs_ctrl and new_ctrl is not None:
+                # the controllers' per-agent thresholds — the λ
+                # trajectories the adaptive benchmarks plot
+                metrics["agent_lam"] = new_ctrl[..., 0]
         return (
-            TrainState(state.step + 1, params, opt_state, new_ef),
+            TrainState(state.step + 1, params, opt_state, new_ef, new_ctrl),
             metrics,
         )
 

@@ -11,11 +11,17 @@ O(grid) Python rerun loop with one ``jit``.
 
 Grid axis layout
 ----------------
-An operating point is the base policy with every trigger threshold
-multiplied by a ``scale`` — one traced f32 per grid point, exactly the
-λ-scale axis the tiered benchmarks sweep.  The engine stacks the
-TrainState ``G`` times (every pytree leaf, EF memory included, gains a
-leading grid axis) and vmaps the train step as
+An operating point is the base policy with every trigger's *knob*
+multiplied by a ``scale`` — one traced f32 per grid point.  For fixed
+triggers the knob is the transmit threshold (λ/μ): the λ-scale axis the
+tiered benchmarks sweep.  For the adaptive budget triggers
+(``budget_dual``/``budget_window``) λ is closed-loop controller state,
+so the scale multiplies the *target* (rate or bytes) instead — the same
+grid axis sweeps **communication budgets**; :func:`budget_scales` maps
+absolute per-round targets onto it.  The engine stacks the TrainState
+``G`` times (every pytree leaf — EF memory and the ``ctrl_state``
+controller rows included, so each lane's controllers chase their own
+scaled budget) and vmaps the train step as
 
     vmap(step, in_axes=(0, None, 0))(states, batch, scales)
 
@@ -67,6 +73,21 @@ def stack_states(state: TrainState, grid_size: int) -> TrainState:
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x[None], (grid_size,) + x.shape), state
     )
+
+
+def budget_scales(targets, base: float) -> jnp.ndarray:
+    """Absolute per-round budget targets → a ``(G,)`` scale grid.
+
+    The frontier's grid coordinate multiplies an adaptive trigger's
+    target, so a policy built with base target ``base`` (bytes for
+    ``budget_window``, rate for ``budget_dual``) swept at
+    ``budget_scales(targets, base)`` runs one lane per absolute target
+    in ``targets`` — a budget axis instead of a λ axis, same engine,
+    same single compile.
+    """
+    if base <= 0:
+        raise ValueError(f"base target must be positive, got {base!r}")
+    return jnp.asarray(targets, jnp.float32) / jnp.float32(base)
 
 
 def make_frontier_step(
@@ -176,4 +197,7 @@ def frontier_curve(result: FrontierResult) -> Dict[str, jnp.ndarray]:
     }
     if "agent_bytes" in m:
         curve["agent_bytes"] = jnp.sum(m["agent_bytes"], axis=1)
+    if "agent_lam" in m:
+        # final per-agent controller thresholds (adaptive policies)
+        curve["agent_lam"] = m["agent_lam"][:, -1]
     return curve

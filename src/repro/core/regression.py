@@ -233,6 +233,15 @@ def _policy_to_sim_args(policy):
             f"repro.core.api.make_triggered_train_step for those"
         )
     t = pol.trigger
+    from repro.comm import spec_is_adaptive
+
+    if spec_is_adaptive(t):
+        raise ValueError(
+            f"trigger {t.name!r} is a closed-loop budget controller: it "
+            f"carries per-agent state the closed-form simulator does not "
+            f"model — use repro.core.api.make_triggered_train_step (or "
+            f"repro.core.frontier) for adaptive policies"
+        )
     if t.name not in ("gain_exact", "gain_estimated", "grad_norm", "always",
                       "never"):
         raise ValueError(f"trigger {t.name!r} not supported by the simulator")

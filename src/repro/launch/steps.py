@@ -184,14 +184,33 @@ def build_train_step(mesh, plan: RunPlan, *, compute_dtype="bfloat16", param_dty
     opt_abs, _ = _abstract_opt_state(plan.train_cfg.optimizer, params_abs)
     opt_specs = _opt_state_specs(plan.train_cfg.optimizer, param_specs)
 
+    # adaptive budget policies carry a (m, CTRL_WIDTH) controller slot —
+    # the abstract state must include it or the AOT-lowered step (dryrun)
+    # would bake the open-loop no-controller path
+    from repro.comm import CTRL_WIDTH, normalize_policy, resolve_policy
+
+    resolved = normalize_policy(
+        resolve_policy(plan.train_cfg, None), plan.train_cfg.num_agents
+    )
+    policies = resolved if isinstance(resolved, tuple) else (resolved,)
+    if any(p.is_adaptive for p in policies):
+        ctrl_abs = jax.ShapeDtypeStruct(
+            (plan.train_cfg.num_agents, CTRL_WIDTH), jnp.float32
+        )
+        ctrl_specs = P()  # replicated, like the scalar step counter
+    else:
+        ctrl_abs = ctrl_specs = None
+
     state_abs = TrainState(
         step=jax.ShapeDtypeStruct((), jnp.int32),
         params=params_abs,
         opt_state=opt_abs,
         ef_memory=None,
+        ctrl_state=ctrl_abs,
     )
     state_specs = TrainState(
-        step=P(), params=param_specs, opt_state=opt_specs, ef_memory=None
+        step=P(), params=param_specs, opt_state=opt_specs, ef_memory=None,
+        ctrl_state=ctrl_specs,
     )
 
     batch_abs = input_specs(cfg, plan.shape, num_agents=plan.num_agents)

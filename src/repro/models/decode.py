@@ -2,7 +2,7 @@
 
 ``decode_step`` consumes ONE new token against a cache of ``cache_len``
 past positions — this is what the ``decode_32k`` / ``long_500k`` shapes
-lower.  Cache choices per family (DESIGN.md §5):
+lower.  Cache choices per family:
 
 * dense/moe/vlm — per-layer KV cache; ring buffer of ``swa_window``
   slots when sliding-window attention is on (bounded state for

@@ -126,7 +126,7 @@ def input_axes(cfg: ModelConfig, shape: InputShape, *, num_agents: int = 1):
 
 
 def runs_shape(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
-    """Assignment skip rules (DESIGN.md §5). Returns (run?, reason)."""
+    """Assignment skip rules. Returns (run?, reason)."""
     if shape.name == "long_500k":
         if cfg.arch_type == "audio":
             return False, (

@@ -1,0 +1,325 @@
+"""ISSUE-4 acceptance surface: budget-adaptive transmission scheduling
+(repro.comm budget_dual/budget_window) — controller-state threading
+through TrainState/StageBank/train step, zero-op None-state contract,
+dual-ascent convergence to the target rate/bytes, and the frontier
+engine's budget axis."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (
+    CTRL_WIDTH,
+    CommPolicy,
+    TRIGGERS,
+    build_stage_bank,
+    ctrl_init,
+    describe,
+)
+from repro.configs.base import TrainConfig
+from repro.configs.paper_linreg import (
+    LinRegConfig,
+    TIERED_M64_ADAPTIVE,
+    TieredNetwork,
+    _adaptive_tiers,
+)
+from repro.core import regression as R
+from repro.core.api import init_train_state, make_triggered_train_step
+from repro.core.frontier import budget_scales, frontier_curve, run_frontier
+from repro.optim import optimizers as opt_lib
+
+TOY = LinRegConfig(name="toy", n=6, num_agents=4, samples_per_agent=8,
+                   stepsize=0.1, steps=6)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return R.make_problem(TOY, jax.random.key(0))
+
+
+def linreg_loss(params, batch):
+    xs, ys = batch
+    r = xs @ params["w"] - ys
+    return 0.5 * jnp.mean(r * r)
+
+
+def _params():
+    return {"w": jnp.zeros(TOY.n)}
+
+
+def _cfg(comm):
+    return TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                       num_agents=TOY.num_agents, comm=comm)
+
+
+def _run(cfg, problem, steps, state=None, **step_kw):
+    opt = opt_lib.from_config(cfg)
+    step = jax.jit(make_triggered_train_step(linreg_loss, opt, cfg,
+                                             **step_kw))
+    if state is None:
+        state = init_train_state(_params(), opt, cfg)
+    hist = []
+    for i in range(steps):
+        state, m = step(state, R.agent_batches(
+            problem, jax.random.fold_in(jax.random.key(7), i)))
+        hist.append({k: np.asarray(v) for k, v in m.items()})
+    return state, hist
+
+
+def _tree_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b))
+    )
+
+
+# ----------------------------------------------------------------------
+# spec surface
+# ----------------------------------------------------------------------
+
+def test_budget_specs_round_trip_and_flags():
+    for text in ("budget_dual(rate=0.3)",
+                 "budget_window(bytes=8.0,window=8)|topk(frac=0.05)|int8+ef"):
+        pol = CommPolicy.parse(text)
+        assert pol.is_adaptive
+        assert CommPolicy.parse(str(pol)) == pol
+    assert not CommPolicy.parse("gain_lookahead(lam=0.1)").is_adaptive
+    assert TRIGGERS.get("budget_dual").adaptive
+    assert not TRIGGERS.get("always").adaptive
+
+
+def test_describe_surfaces_help_lines():
+    text = describe()
+    for name in TRIGGERS.names():
+        assert name in text
+        assert TRIGGERS.get(name).help in text
+    assert "[adaptive" in text
+
+
+def test_simulator_rejects_adaptive_policies():
+    with pytest.raises(ValueError, match="controller"):
+        R.grid_from_specs(["budget_dual(rate=0.3)"])
+
+
+# ----------------------------------------------------------------------
+# state allocation
+# ----------------------------------------------------------------------
+
+def test_ctrl_state_allocated_iff_adaptive():
+    opt = opt_lib.from_config(_cfg("always"))
+    s_plain = init_train_state(_params(), opt, _cfg("gain_lookahead(lam=0.1)"))
+    assert s_plain.ctrl_state is None
+    s_ad = init_train_state(_params(), opt, _cfg("budget_dual(rate=0.3,lam0=0.2)"))
+    assert s_ad.ctrl_state.shape == (TOY.num_agents, CTRL_WIDTH)
+    np.testing.assert_allclose(np.asarray(s_ad.ctrl_state[:, 0]), 0.2)
+    # heterogeneous: per-agent rows from each agent's own policy
+    mix = CommPolicy.parse(
+        "always ; budget_dual(rate=0.3,lam0=0.5) ; "
+        "gain_lookahead(lam=1.0) ; budget_window(bytes=4.0,lam0=0.1)")
+    rows = ctrl_init(mix, 4)
+    np.testing.assert_allclose(np.asarray(rows[:, 0]), [0.0, 0.5, 0.0, 0.1])
+
+
+def test_stage_bank_carries_adaptive_flags():
+    pols = CommPolicy.parse("always ; budget_dual(rate=0.3) ; always")
+    bank = build_stage_bank(pols, loss_fn=linreg_loss, probe_eps=0.1)
+    assert bank.needs_ctrl
+    assert bank.adaptive_flags == (False, True)
+    # without a controller slot every branch returns None for it
+    params = _params()
+    xs, ys = R.agent_batches(R.make_problem(TOY, jax.random.key(1)),
+                             jax.random.key(2))
+    ab = (xs[0], ys[0])
+    g = jax.grad(linreg_loss)(params, ab)
+    for stage in bank.stages(False, False):
+        *_, new_ctrl = stage(params, g, ab, linreg_loss(params, ab),
+                             jnp.int32(0), None)
+        assert new_ctrl is None
+    # with one, every branch returns a row (adaptive updated, plain
+    # passed through untouched)
+    row = jnp.array([0.3, 0.0, 0.0], jnp.float32)
+    outs = [stage(params, g, ab, linreg_loss(params, ab), jnp.int32(0),
+                  None, row)
+            for stage in bank.stages(False, True)]
+    assert all(o[-1].shape == (CTRL_WIDTH,) for o in outs)
+    np.testing.assert_array_equal(np.asarray(outs[0][-1]), np.asarray(row))
+
+
+# ----------------------------------------------------------------------
+# zero-op / bit-equality contracts
+# ----------------------------------------------------------------------
+
+def test_none_ctrl_state_bit_equal_to_fixed_lambda(problem):
+    """ISSUE-4 acceptance: an adaptive policy stepped with
+    ctrl_state=None gates open-loop at lam0 — bit-equal (params, EF
+    memory, every metric) to the plain gain_lookahead(lam=lam0) step."""
+    cfg_a = _cfg("budget_dual(rate=0.5,lam0=0.4)")
+    cfg_f = _cfg("gain_lookahead(lam=0.4)")
+    opt = opt_lib.from_config(cfg_a)
+    sa = init_train_state(_params(), opt, cfg_a)._replace(ctrl_state=None)
+    with pytest.warns(UserWarning, match="OPEN-LOOP"):
+        sa, hist_a = _run(cfg_a, problem, steps=8, state=sa)
+    sf, hist_f = _run(cfg_f, problem, steps=8)
+    assert _tree_equal(sa.params, sf.params)
+    assert sa.ctrl_state is None
+    for ma, mf in zip(hist_a, hist_f):
+        for k in mf:
+            np.testing.assert_array_equal(ma[k], mf[k], err_msg=k)
+
+
+def test_none_ctrl_state_bit_equal_with_compressors_and_ef(problem):
+    """The same zero-op contract through the compressor/EF path."""
+    cfg_a = _cfg("budget_window(bytes=2.0,lam0=0.4)|int8+ef")
+    cfg_f = _cfg("gain_lookahead(lam=0.4)|int8+ef")
+    opt = opt_lib.from_config(cfg_a)
+    sa = init_train_state(_params(), opt, cfg_a)._replace(ctrl_state=None)
+    with pytest.warns(UserWarning, match="OPEN-LOOP"):
+        sa, hist_a = _run(cfg_a, problem, steps=8, state=sa)
+    sf, hist_f = _run(cfg_f, problem, steps=8)
+    assert _tree_equal(sa.params, sf.params)
+    assert _tree_equal(sa.ef_memory, sf.ef_memory)
+    for ma, mf in zip(hist_a, hist_f):
+        for k in mf:
+            np.testing.assert_array_equal(ma[k], mf[k], err_msg=k)
+
+
+def test_adaptive_hetero_switch_equals_unroll(problem):
+    """Mixed adaptive/fixed policies: the lax.switch stage-bank path and
+    the unrolled reference agree bitwise — controller rows included."""
+    mix = ("always", "budget_dual(rate=0.3)",
+           "gain_lookahead(lam=0.5)|int8+ef",
+           "budget_window(bytes=3.0,window=8)|fp16")
+    cfg = _cfg(mix)
+    ssw, hsw = _run(cfg, problem, steps=8, hetero_dispatch="switch")
+    sun, hun = _run(cfg, problem, steps=8, hetero_dispatch="unroll")
+    assert _tree_equal(ssw, sun)
+    for ma, mf in zip(hsw, hun):
+        for k in mf:
+            np.testing.assert_array_equal(ma[k], mf[k], err_msg=k)
+
+
+# ----------------------------------------------------------------------
+# convergence (the closed loop actually closes)
+# ----------------------------------------------------------------------
+
+def test_budget_dual_converges_to_target_rate(problem):
+    """ISSUE-4 acceptance: budget_dual drives the observed tx rate to
+    within tolerance of its target on the toy problem."""
+    target = 0.4
+    cfg = _cfg(f"budget_dual(rate={target})")
+    _, hist = _run(cfg, problem, steps=300)
+    tail = np.mean([h["comm_rate"] for h in hist[-150:]])
+    assert abs(tail - target) <= 0.1 * target, tail
+
+
+def test_budget_window_converges_to_target_bytes(problem):
+    """budget_window lands the realized bytes/agent/round on its byte
+    target (dense n=6 fp32 payload is 24 B; target 9 B ⇒ rate 0.375)."""
+    cfg = _cfg("budget_window(bytes=9.0)")
+    _, hist = _run(cfg, problem, steps=300)
+    per_agent = np.mean(
+        [h["wire_bytes"] / TOY.num_agents for h in hist[-150:]]
+    )
+    assert abs(per_agent - 9.0) <= 0.1 * 9.0, per_agent
+
+
+def test_controller_tracks_as_gains_shrink(problem):
+    """The point of closing the loop: a fixed λ tuned mid-run stops
+    transmitting once training converges, the controller keeps its
+    rate.  (Tail rate of budget_dual stays on target; the λ it needed
+    early differs from the λ it needs late.)"""
+    cfg = _cfg("budget_dual(rate=0.5)")
+    state, hist = _run(cfg, problem, steps=400)
+    early = np.mean([h["comm_rate"] for h in hist[40:120]])
+    tail = np.mean([h["comm_rate"] for h in hist[-100:]])
+    assert abs(tail - 0.5) <= 0.075, tail
+    assert abs(early - 0.5) <= 0.15, early
+
+
+# ----------------------------------------------------------------------
+# frontier budget axis
+# ----------------------------------------------------------------------
+
+def test_frontier_scale_sweeps_budget_targets(problem):
+    """The frontier grid coordinate multiplies the controllers' TARGET:
+    lanes at budget scales 0.5/1.0 realize ~half/full the tx rate."""
+    cfg = _cfg("budget_dual(rate=0.6)")
+    opt = opt_lib.from_config(cfg)
+    scales = budget_scales([0.3, 0.6], base=0.6)
+    np.testing.assert_allclose(np.asarray(scales), [0.5, 1.0])
+    res = run_frontier(
+        linreg_loss, opt, cfg, _params(), scales=scales, steps=240,
+        batch_fn=lambda k: R.agent_batches(problem, k),
+        key=jax.random.key(3),
+    )
+    tail_rates = np.asarray(res.metrics["comm_rate"])[:, -120:].mean(axis=1)
+    np.testing.assert_allclose(tail_rates, [0.3, 0.6], atol=0.06)
+    # per-lane controller state: each lane's λ evolved separately
+    assert res.state.ctrl_state.shape == (2, TOY.num_agents, CTRL_WIDTH)
+    curve = frontier_curve(res)
+    assert curve["agent_lam"].shape == (2, TOY.num_agents)
+
+
+def test_budget_scales_rejects_bad_base():
+    with pytest.raises(ValueError, match="positive"):
+        budget_scales([1.0], base=0.0)
+
+
+# ----------------------------------------------------------------------
+# adaptive tiered scenario
+# ----------------------------------------------------------------------
+
+def test_adaptive_tier_template_well_formed():
+    net = TIERED_M64_ADAPTIVE
+    assert net.num_agents == 64
+    pols = [CommPolicy.parse_one(p) for p in net.policies()]
+    # metered tiers are adaptive, backbone stays dense
+    assert [p.is_adaptive for p in pols].count(True) == 56
+    assert not pols[0].is_adaptive
+    # same budgets as the fixed template: below always-transmit rates
+    dense = 4.0 * 32
+    always_on = {"metro": 0.5, "edge": 0.25, "sensor": 0.0625}
+    for tier in net.tiers[1:]:
+        assert tier.wire_budget < always_on[tier.name] * dense
+        # and the implied rate target is feasible (< 1)
+        pol = CommPolicy.parse_one(tier.spec(1.0))
+        if pol.trigger.name == "budget_dual":
+            assert 0.0 < pol.trigger.arg("rate") < 1.0
+
+
+def test_adaptive_toy_tiers_track_budgets(problem):
+    """A 1-agent-per-tier adaptive mix through the frontier engine:
+    every metered tier's tail bytes/round lands near its budget."""
+    net = TieredNetwork("toy_adaptive", _adaptive_tiers(1, 1, 1, 1, n=TOY.n))
+    cfg = _cfg(net.policies())
+    opt = opt_lib.from_config(cfg)
+    res = run_frontier(
+        linreg_loss, opt, cfg, _params(), scales=[1.0], steps=300,
+        batch_fn=lambda k: R.agent_batches(problem, k),
+        key=jax.random.key(5),
+    )
+    rates = np.asarray(res.metrics["agent_bytes"])[0, -150:, :].mean(axis=0)
+    budgets = np.asarray(net.budgets())
+    assert np.isinf(budgets[0])
+    for i in range(1, 4):
+        assert abs(rates[i] / budgets[i] - 1.0) <= 0.2, (i, rates[i], budgets[i])
+
+
+# ----------------------------------------------------------------------
+# open-loop warning hygiene
+# ----------------------------------------------------------------------
+
+def test_adaptive_policy_without_slot_warns_once_per_trace(problem):
+    cfg = _cfg("budget_dual(rate=0.3)")
+    opt = opt_lib.from_config(cfg)
+    state = init_train_state(_params(), opt, cfg)._replace(ctrl_state=None)
+    step = jax.jit(make_triggered_train_step(linreg_loss, opt, cfg))
+    batch = R.agent_batches(problem, jax.random.key(0))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        state, _ = step(state, batch)
+        state, _ = step(state, batch)  # cached trace: no second warning
+    assert sum("OPEN-LOOP" in str(w.message) for w in rec) == 1

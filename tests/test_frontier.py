@@ -133,6 +133,50 @@ def test_run_frontier_single_lane_matches_plain_loop(problem):
     )
 
 
+def test_frontier_step_single_lane_bit_equal_with_ctrl_state(problem):
+    """ISSUE-4 acceptance: the bit-equality contract extends to the
+    controller slot — one frontier lane of an ADAPTIVE policy at
+    scale=1.0 (scale multiplies the budget target; ·1.0 is exact)
+    matches the plain train-step loop bitwise, ctrl rows included."""
+    cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                      num_agents=TOY.num_agents,
+                      comm="budget_dual(rate=0.4)|int8+ef")
+    opt = opt_lib.from_config(cfg)
+    bstep = jax.jit(make_frontier_step(linreg_loss, opt, cfg))
+    from repro.comm import CTRL_WIDTH
+
+    states = stack_states(init_train_state(_params(), opt, cfg), 1)
+    assert states.ctrl_state.shape == (1, TOY.num_agents, CTRL_WIDTH)
+    ones = jnp.ones((1,), jnp.float32)
+    hist = []
+    for k in _round_keys():
+        states, m = bstep(states, R.agent_batches(problem, k), ones)
+        hist.append(m)
+    ref_state, ref_hist = _plain_loop(cfg, problem)
+    lane = jax.tree_util.tree_map(lambda x: x[0], states)
+    assert _tree_equal(lane, ref_state)
+    for got, want in zip(hist, ref_hist):
+        for key in want:
+            np.testing.assert_array_equal(np.asarray(got[key][0]),
+                                          want[key], err_msg=key)
+
+
+def test_plain_policies_keep_none_ctrl_state_through_engine(problem):
+    """Non-adaptive policies thread ctrl_state=None end to end — the
+    frontier engine allocates nothing and the stacked state keeps the
+    pre-controller pytree structure (the zero-extra-ops contract)."""
+    cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                      num_agents=4, comm=MIXED_M4)
+    opt = opt_lib.from_config(cfg)
+    res = run_frontier(
+        linreg_loss, opt, cfg, _params(), scales=[0.5, 1.0], steps=3,
+        batch_fn=lambda k: R.agent_batches(problem, k),
+        key=jax.random.key(11),
+    )
+    assert res.state.ctrl_state is None
+    assert "agent_lam" not in res.metrics
+
+
 def test_scale_is_the_lambda_axis(problem):
     """Base policy λ=1 at scale s ≡ policy λ=s at scale 1 (bitwise):
     the traced scale really is the operating-point λ coordinate."""

@@ -246,18 +246,22 @@ def test_stage_bank_dedupes_policies():
 
 def test_stage_bank_uniform_signature_smoke():
     """Every stage answers the uniform (params, grad, batch, loss, step,
-    ef_mem) call with a uniform (alpha, gain, sent, new_mem) tuple."""
+    ef_mem[, ctrl[, scale]]) call with a uniform (alpha, gain, sent,
+    new_mem, new_ctrl) tuple — and without a controller slot, new_ctrl
+    is None for every branch (stable pytree carry)."""
     pols = CommPolicy.parse("always|int8 ; grad_norm(mu=0.0)")
     bank = build_stage_bank(pols, loss_fn=linreg_loss, probe_eps=0.1)
+    assert not bank.needs_ctrl
     params = {"w": jnp.zeros(N_FEATURES)}
     xs, ys = _batch(jax.random.key(0), 2)
     ab = (xs[0], ys[0])
     g = jax.grad(linreg_loss)(params, ab)
     for stage in bank.stages(False):
-        alpha, gain, sent, new_mem = stage(
+        alpha, gain, sent, new_mem, new_ctrl = stage(
             params, g, ab, linreg_loss(params, ab), jnp.int32(0), None
         )
         assert alpha.shape == () and gain.shape == ()
         assert jax.tree_util.tree_structure(sent) == \
             jax.tree_util.tree_structure(g)
         assert new_mem is None
+        assert new_ctrl is None

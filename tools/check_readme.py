@@ -1,0 +1,50 @@
+"""Docs drift gate: execute every ```python block in README.md.
+
+The README's quickstart is a promise about the public API; this script
+keeps it honest — CI runs it after the docs change so a renamed
+function or spec argument fails the build instead of shipping a broken
+front door.  Only ``python``-fenced blocks run (``bash``/``text``
+blocks are display-only); each block executes in its own namespace with
+``src`` on the path.
+
+Usage: ``python tools/check_readme.py [README.md ...]``
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+_BLOCK_RE = re.compile(r"```python\n(.*?)```", re.S)
+
+
+def python_blocks(text: str) -> list:
+    return [m.group(1) for m in _BLOCK_RE.finditer(text)]
+
+
+def main(argv=None) -> int:
+    sys.path.insert(0, str(REPO / "src"))
+    paths = [Path(p) for p in (argv or sys.argv[1:])] or [REPO / "README.md"]
+    failures = 0
+    for path in paths:
+        blocks = python_blocks(path.read_text())
+        if not blocks:
+            print(f"{path.name}: no python blocks found", file=sys.stderr)
+            failures += 1
+            continue
+        for i, block in enumerate(blocks, 1):
+            label = f"{path.name} python block {i}/{len(blocks)}"
+            try:
+                exec(compile(block, f"<{label}>", "exec"), {"__name__": "__readme__"})
+            except Exception as e:  # report and count every failure kind
+                print(f"DRIFT {label}: {type(e).__name__}: {e}",
+                      file=sys.stderr)
+                failures += 1
+            else:
+                print(f"ok {label}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

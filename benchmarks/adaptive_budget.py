@@ -133,7 +133,10 @@ def _none_state_bit_check(cfg_lr, problem, steps: int) -> bool:
     return params_eq and metrics_eq and sa.ctrl_state is None
 
 
-def run(verbose: bool = True, smoke: bool = False) -> dict:
+def run(verbose: bool = True, smoke: bool = False,
+        dispatch: str | None = None) -> dict:
+    """``dispatch`` pins the hetero train-step path (None = the default
+    ``hybrid``); artifacts gain a ``_MODE`` suffix for the CI lanes."""
     cfg_lr = TIERED_M64_CFG
     steps = 80 if smoke else 240
     problem = R.make_problem(cfg_lr, jax.random.key(30))
@@ -151,6 +154,7 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
             _loss_fn, opt, cfg, {"w": jnp.zeros(cfg_lr.n)},
             scales=scales, steps=steps, batch_fn=batch_fn,
             key=jax.random.key(31),
+            hetero_dispatch=dispatch or "hybrid",
         )
         J = np.asarray(jax.vmap(problem.J)(res.state.params["w"]))
         return res, J
@@ -187,6 +191,7 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
                    f"N={cfg_lr.samples_per_agent}, eps={cfg_lr.stepsize}, "
                    f"K={steps}, tail=last {steps - steps // 2}, "
                    f"tol={TOL})"),
+        "dispatch": dispatch or "hybrid",
         "J_init": J0,
         "dense_bytes_equivalent": steps * cfg_lr.num_agents * cfg_lr.n * 4.0,
         "budget_scales": BUDGET_SCALES,
@@ -224,8 +229,11 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
                       for t in net.tiers),
                 ))
         print("claims:", claims)
-    save_result("adaptive_budget_smoke" if smoke else "adaptive_budget",
-                payload)
+    tag = f"_{dispatch}" if dispatch else ""
+    save_result(
+        f"adaptive_budget{tag}_smoke" if smoke else f"adaptive_budget{tag}",
+        payload,
+    )
     if not smoke:
         assert all(claims.values()), claims
     return payload

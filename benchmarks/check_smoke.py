@@ -21,10 +21,18 @@ green artifacts.  The baseline pins, per benchmark:
 * ``wire_ratio``     — ``{"dense_key", "bytes_key", "bounds"}``: every
                        ``bytes_key`` value divided by the payload's
                        ``dense_key`` must land in ``bounds``
+* ``lanes``          — a list of dispatch-mode lanes (e.g. ``["switch",
+                       "hybrid"]``): the CI job runs the benchmark once
+                       per lane via ``benchmarks.run --dispatch MODE``,
+                       and each lane's artifact (``<name>_MODE_smoke``
+                       .json) is REQUIRED and gated against this same
+                       spec.  The un-suffixed base artifact (a local
+                       default-dispatch run) becomes optional — checked
+                       when present, not demanded.
 
 A ``*_smoke.json`` file with no baseline entry fails the gate (add the
-entry when adding the benchmark), as does a baselined file that the CI
-run did not produce.
+entry when adding the benchmark), as does a required baselined file
+that the CI run did not produce.
 
 Usage: ``python -m benchmarks.check_smoke [--dir DIR] [--baseline FILE]``
 """
@@ -119,6 +127,24 @@ def check_one(name: str, payload: dict, spec: dict) -> list:
     return errs
 
 
+def expected_files(baseline: dict) -> dict:
+    """``filename -> (spec, required, lane)`` for every artifact the
+    baseline speaks for.  A ``lanes`` entry expands to one REQUIRED
+    file per dispatch lane (``<name>_<lane>_smoke.json``) plus the
+    optional un-suffixed base file; entries without lanes require the
+    base.  ``lane`` (None for base files) is the dispatch mode the
+    payload must have been produced under."""
+    out = {}
+    for name, spec in baseline.items():
+        lanes = spec.get("lanes", [])
+        out[f"{name}.json"] = (spec, not lanes, None)
+        stem = name[: -len("_smoke")] if name.endswith("_smoke") else name
+        suffix = "_smoke" if name.endswith("_smoke") else ""
+        for lane in lanes:
+            out[f"{stem}_{lane}{suffix}.json"] = (spec, True, lane)
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
@@ -136,36 +162,55 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     baseline = json.loads(args.baseline.read_text())
+    expected = expected_files(baseline)
     produced = {p.name: p for p in sorted(args.dir.glob("*_smoke.json"))}
     failures = {}
 
     for fname in produced:
-        if fname[: -len(".json")] not in baseline:
+        if fname not in expected:
             failures[fname] = [
                 "no baseline entry — add one to "
                 f"{args.baseline.relative_to(REPO)}"
             ]
-    for name, spec in baseline.items():
-        fname = f"{name}.json"
+    checked = 0
+    for fname, (spec, required, lane) in expected.items():
         path = produced.get(fname)
         if path is None:
-            failures[fname] = ["baselined benchmark produced no artifact"]
+            if required:
+                failures[fname] = ["baselined benchmark produced no artifact"]
             continue
+        checked += 1
         try:
             payload = json.loads(path.read_text())
         except json.JSONDecodeError as e:
             failures[fname] = [f"unparseable JSON: {e}"]
             continue
-        errs = check_one(name, payload, spec)
+        errs = check_one(fname, payload, spec)
+        if lane is not None and payload.get("dispatch") != lane:
+            # a lane file must really have been produced under its
+            # lane's dispatch mode — a mislabeled artifact would leave
+            # that path silently unexercised while the gate stays green
+            errs.append(
+                f"lane file carries dispatch="
+                f"{payload.get('dispatch')!r}, expected {lane!r}"
+            )
         if errs:
             failures[fname] = errs
 
     for fname in sorted(failures):
         for e in failures[fname]:
             print(f"DRIFT {fname}: {e}", file=sys.stderr)
-    ok = len(baseline) - sum(1 for f in failures if f[:-5] in baseline)
+    # count only files that were actually checked: missing-required
+    # failures never entered `checked`, so they must not be subtracted
+    ok = checked - sum(
+        1 for f in failures if f in expected and f in produced
+    )
+    required_n = sum(1 for spec_req in expected.values() if spec_req[1])
     drift = f", {len(failures)} file(s) drifted" if failures else ""
-    print(f"bench gate: {ok}/{len(baseline)} baselined benchmarks clean{drift}")
+    print(
+        f"bench gate: {ok}/{checked} gated artifacts clean "
+        f"({required_n} required){drift}"
+    )
     return 1 if failures else 0
 
 

@@ -35,7 +35,10 @@ from repro.optim import optimizers as opt_lib
 LAM_SCALES = [0.0, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0]
 
 
-def run(verbose: bool = True, smoke: bool = False) -> dict:
+def run(verbose: bool = True, smoke: bool = False,
+        dispatch: str | None = None) -> dict:
+    """``dispatch`` pins the hetero train-step path (None = the default
+    ``hybrid``); artifacts gain a ``_MODE`` suffix for the CI lanes."""
     cfg_lr = HETERO_M8
     steps = 10 if smoke else cfg_lr.steps
     problem = R.make_problem(cfg_lr, jax.random.key(20))
@@ -58,6 +61,7 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
         scales=LAM_SCALES, steps=steps,
         batch_fn=lambda k: R.agent_batches(problem, k),
         key=jax.random.key(21),
+        hetero_dispatch=dispatch or "hybrid",
     )
     curve = jax.tree_util.tree_map(np.asarray, frontier_curve(res))
     final_J = np.asarray(jax.vmap(problem.J)(res.state.params["w"]))
@@ -82,6 +86,7 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
         "config": (f"hetero_m8 (n={cfg_lr.n}, m={cfg_lr.num_agents}, "
                    f"N={cfg_lr.samples_per_agent}, eps={cfg_lr.stepsize}, "
                    f"K={steps})"),
+        "dispatch": dispatch or "hybrid",
         "J_init": J0,
         "dense_bytes_equivalent": dense_bytes,
         "rows": rows,
@@ -100,8 +105,11 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
             print(fmt_row(r["lam_scale"], f"{r['final_J']:.4f}",
                           f"{r['wire_bytes']:.0f}", f"{r['transmissions']:.0f}"))
         print("claims:", payload["claims"])
-    save_result("hetero_frontier_smoke" if smoke else "hetero_frontier",
-                payload)
+    tag = f"_{dispatch}" if dispatch else ""
+    save_result(
+        f"hetero_frontier{tag}_smoke" if smoke else f"hetero_frontier{tag}",
+        payload,
+    )
     if not smoke:
         assert all(payload["claims"].values()), payload["claims"]
     return payload

@@ -5,13 +5,19 @@
   python -m benchmarks.run --list     # name + description per benchmark
   python -m benchmarks.run --smoke fig2_left hetero_frontier
                                       # toy sizes, claim asserts off (CI)
+  python -m benchmarks.run --smoke --dispatch switch tiered_m64
+                                      # pin the hetero dispatch path
 
 Prints each benchmark's CSV and a final summary line per benchmark.
 ``--list`` descriptions come straight from each module's docstring, so
 the catalogue cannot drift from the code (see benchmarks/README.md for
-the full table).  Dry-run-derived tables (roofline) read cached JSONs
-from ``experiments/dryrun`` — run ``python -m repro.launch.dryrun
---all`` first if missing."""
+the full table).  ``--dispatch MODE`` (one of repro.core.api's
+``DISPATCH_MODES``) pins the heterogeneous train-step dispatch path for
+the benchmarks that take one — their artifacts gain a ``_MODE`` name
+suffix so CI can gate each lane separately; benchmarks without the knob
+are skipped loudly, mirroring ``--smoke``.  Dry-run-derived tables
+(roofline) read cached JSONs from ``experiments/dryrun`` — run ``python
+-m repro.launch.dryrun --all`` first if missing."""
 from __future__ import annotations
 
 import inspect
@@ -21,6 +27,7 @@ import traceback
 
 from benchmarks import (
     adaptive_budget,
+    dispatch_bench,
     fig1_right,
     fig2_left,
     fig2_right,
@@ -32,6 +39,7 @@ from benchmarks import (
     tiered_m64,
     triggered_lm,
 )
+from repro.core.api import DISPATCH_MODES
 
 ALL = {
     "fig2_left": fig2_left.run,        # paper Fig 2 (Left)
@@ -42,6 +50,7 @@ ALL = {
     "hetero_frontier": hetero_frontier.run,  # beyond-paper: m=8 mixed policies
     "tiered_m64": tiered_m64.run,      # beyond-paper: m=64 tier-mix frontiers
     "adaptive_budget": adaptive_budget.run,  # beyond-paper: closed-loop λ
+    "dispatch_bench": dispatch_bench.run,  # unroll/switch/hybrid step+compile
     "triggered_lm": triggered_lm.run,  # beyond-paper: trigger on real arch
     "kernel_bench": kernel_bench.run,  # kernel traffic model
     "roofline_table": roofline_table.run,  # §Roofline from dry-run cache
@@ -95,6 +104,22 @@ def main() -> int:
             return 2
         return list_benchmarks()
     smoke = "--smoke" in args
+    dispatch = None
+    if "--dispatch" in args:
+        at = args.index("--dispatch")
+        value = args[at + 1] if at + 1 < len(args) else None
+        # same loud-typo contract as unknown benchmark names: an
+        # invalid dispatch mode fails up front on stderr (rc 2),
+        # before anything runs — mirroring core.api's own validation
+        if value is None or value not in DISPATCH_MODES:
+            print(
+                f"unknown dispatch mode {value!r}: expected one of "
+                f"{', '.join(DISPATCH_MODES)}",
+                file=sys.stderr,
+            )
+            return 2
+        dispatch = value
+        args = args[:at] + args[at + 2:]
     names = [a for a in args if a != "--smoke"] or list(ALL)
     # reject unknown names (and stray flags, which land here too) UP
     # FRONT, on stderr, before anything runs: a typo'd CI invocation
@@ -118,11 +143,20 @@ def main() -> int:
             print(f"\n===== {name} =====\n[{name}] SKIPPED: no smoke mode",
                   flush=True)
             continue
+        if dispatch and "dispatch" not in inspect.signature(fn).parameters:
+            # same contract for --dispatch: a benchmark that cannot pin
+            # the dispatch path must not silently run on the default
+            print(f"\n===== {name} =====\n[{name}] SKIPPED: no dispatch "
+                  f"knob", flush=True)
+            continue
         print(f"\n===== {name} =====", flush=True)
         t0 = time.time()
         ran += 1
         try:
-            fn(verbose=True, **(dict(smoke=True) if smoke else {}))
+            kw = dict(smoke=True) if smoke else {}
+            if dispatch:
+                kw["dispatch"] = dispatch
+            fn(verbose=True, **kw)
             print(f"[{name}] OK in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:
             failures.append(name)
@@ -130,7 +164,8 @@ def main() -> int:
             traceback.print_exc()
     skipped = len(names) - ran
     print(f"\n{ran - len(failures)}/{ran} benchmarks passed"
-          + (f" ({skipped} without a smoke mode skipped)" if skipped else ""))
+          + (f" ({skipped} skipped: no smoke mode / no dispatch knob)"
+             if skipped else ""))
     # a run that executed nothing (every name skipped) must not go green
     return 1 if failures or ran == 0 else 0
 

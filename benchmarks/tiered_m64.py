@@ -35,7 +35,11 @@ SCALES = [0.0, 0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.8,
           1.2, 1.8, 2.7, 4.0, 6.0, 9.0, 13.0, 20.0]
 
 
-def run(verbose: bool = True, smoke: bool = False) -> dict:
+def run(verbose: bool = True, smoke: bool = False,
+        dispatch: str | None = None) -> dict:
+    """``dispatch`` pins the hetero train-step path (None = the default
+    ``hybrid``); artifacts gain a ``_MODE`` suffix so the CI smoke job
+    can gate the ``switch`` and ``hybrid`` lanes independently."""
     cfg_lr = TIERED_M64_CFG
     steps = 8 if smoke else cfg_lr.steps
     problem = R.make_problem(cfg_lr, jax.random.key(30))
@@ -63,6 +67,7 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
             loss_fn, opt, cfg, {"w": jnp.zeros(cfg_lr.n)},
             scales=SCALES, steps=steps, batch_fn=batch_fn,
             key=jax.random.key(31),
+            hetero_dispatch=dispatch or "hybrid",
         )
         curve = jax.tree_util.tree_map(np.asarray, frontier_curve(res))
         final_J = np.asarray(jax.vmap(problem.J)(res.state.params["w"]))
@@ -136,6 +141,7 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
         "config": (f"tiered_m64 (n={cfg_lr.n}, m={cfg_lr.num_agents}, "
                    f"N={cfg_lr.samples_per_agent}, eps={cfg_lr.stepsize}, "
                    f"K={steps}, grid={len(SCALES)} points/mix)"),
+        "dispatch": dispatch or "hybrid",
         "J_init": J0,
         "dense_bytes_equivalent": dense_total,
         "scales": SCALES,
@@ -153,7 +159,9 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
                               f"{r['transmissions']:.0f}",
                               r["within_budget"]))
         print("claims:", claims)
-    save_result("tiered_m64_smoke" if smoke else "tiered_m64", payload)
+    tag = f"_{dispatch}" if dispatch else ""
+    save_result(f"tiered_m64{tag}_smoke" if smoke else f"tiered_m64{tag}",
+                payload)
     if not smoke:
         assert all(claims.values()), claims
     return payload

@@ -20,7 +20,7 @@ allocated by ``ctrl_init``); a ``None`` slot adds zero ops, so plain
 policies compile byte-for-byte unchanged.  See DESIGN.md for the
 layering, the wire-byte model, and the controller protocol (§5).
 """
-from repro.comm.bank import StageBank, build_stage_bank
+from repro.comm.bank import StageBank, batch_prologue, build_stage_bank
 from repro.comm.compressors import (
     COMPRESSORS,
     Compressor,
@@ -45,6 +45,7 @@ from repro.comm.stats import (
     CommStats,
     comm_stats,
     dense_bits,
+    dense_entries,
     fold_sum,
     per_agent_wire_bytes,
     structural_bytes,
@@ -75,6 +76,7 @@ __all__ = [
     "TriggerFn",
     "TriggerOutput",
     "WireFormat",
+    "batch_prologue",
     "build_compressor",
     "build_stage_bank",
     "build_trigger",
@@ -83,6 +85,7 @@ __all__ = [
     "ctrl_init",
     "ctrl_init_row",
     "dense_bits",
+    "dense_entries",
     "describe",
     "ef_add",
     "ef_init",

@@ -1,12 +1,27 @@
-"""Stage banks — per-agent heterogeneous policies as switchable branches.
+"""Stage banks — per-agent heterogeneous policies as a two-phase program.
 
 A heterogeneous network gives every agent its own CommPolicy.  Unrolling
 a Python loop over agents (the PR-1 path) traces the whole
 trigger/compressor stack once per agent — fine at m=2, hopeless at m≥64.
-A :class:`StageBank` instead *dedupes* the policies into a bank of
-**agent stages** with one uniform call signature
+A :class:`StageBank` instead *dedupes* the policies and splits each
+agent's round into the two phases the train step dispatches separately:
 
-    stage(params, grad, batch, local_loss, step, ef_mem[, ctrl[, scale]])
+**Phase 1 — the shared gradient prologue.**  The per-agent
+``value_and_grad`` (plus anything else that is the same computation for
+every policy) is policy-*independent*: nothing about it needs a
+``lax.switch``.  :func:`batch_prologue` batches it over the agent axis
+in ONE ``jax.vmap`` — agent-parallel gradient work, the half of the
+round that dominates step time.  (The ``hetero_dispatch="switch"`` path
+instead carries the prologue along inside its ``lax.scan``, serializing
+it per agent; ``"hybrid"`` is the vmapped split.)
+
+**Phase 2 — the comm epilogue.**  Everything that *differs* between
+policies — trigger gate, controller update, error-feedback fold-in,
+compressor chain, residual update — is built per DISTINCT policy by
+:meth:`StageBank.epilogues` with one uniform call signature (the
+``lax.switch`` branch contract):
+
+    epilogue(params, grad, batch, local_loss, step, ef_mem[, ctrl[, scale]])
         -> (alpha, gain, sent, new_ef_mem, new_ctrl)
 
 ``ctrl`` is one agent's ``(CTRL_WIDTH,)`` controller row — the
@@ -22,27 +37,39 @@ sees the same operand count, which is what ``lax.switch`` requires.
 (``None`` is a leafless pytree, so a caller that needs ``scale`` but
 has no controller state simply passes ``ctrl=None`` through.)
 
-The train step dispatches each agent with ``lax.switch(idx, stages,
-...)`` inside a ``lax.scan`` over the agent axis: trace/compile cost is
-O(#distinct policies), not O(m), and a scalar switch index lowers to a
-conditional that runs exactly the ops the unrolled loop ran — the two
-paths are bit-identical (tests/test_sweep.py).
+The train step consumes the branch list two ways.  The hybrid default
+scans ``lax.switch`` over the DISTINCT POLICIES — branch ``p`` vmaps
+its epilogue over its own agents' rows (:meth:`StageBank.policy_groups`
+supplies the static gather/merge layout, padded to the largest group) —
+so comm work is agent-parallel and only the policy axis is sequential.
+The pre-hybrid ``"switch"`` path instead runs ``lax.switch(idx,
+epilogues, ...)`` inside a ``lax.scan`` over the AGENT axis.  Either
+way trace/compile cost is O(#distinct policies), not O(m), and because
+a scalar switch index lowers to a conditional running exactly the ops
+the unrolled loop ran — and vmapped per-agent programs produce
+bit-equal results on CPU — the paths are bit-identical
+(tests/test_sweep.py; tests/test_frontier.py and tests/test_adaptive.py
+at m=64, with EF, controllers, and under the frontier grid vmap).
 
-The stage owns everything that differs between policies — trigger
-decision, controller update, error-feedback fold-in, compressor chain,
-residual update — while the (policy-independent) gradient computation
-stays outside the switch.  ``ef_mem`` is ONE agent's residual tree, or
-``None`` when the TrainState carries no EF memory (a static, trace-time
-property: every branch then returns ``None`` and the pytree structures
-stay uniform).  Non-EF policies return a zeroed residual slot so silent
-bank members never leak stale memory.  The controller slot follows the
-same discipline: with ``has_ctrl_state=False`` every branch returns
-``None`` (zero extra ops — plain policies compile unchanged); with it
-True, adaptive branches return their updated row and plain branches
-pass their (unused) row through untouched, keeping the ``(m,
-CTRL_WIDTH)`` carry structurally stable.  An adaptive branch running
-WITHOUT a controller slot falls back to its static initial row
-(``trig.ctrl0`` — open-loop ``lam0`` gating, no adaptation).
+Why the error-feedback FOLD-IN lives in the epilogue, not the prologue:
+``ef_add`` looks shared (an elementwise add), but whether it runs at
+all is a property of the policy (``+ef``), and hoisting it into the
+prologue would have non-EF agents compute ``g + 0`` — which is NOT a
+bitwise no-op for IEEE floats (``-0.0 + 0.0 = +0.0``).  Keeping it per
+branch preserves the bit-identity contract; it is O(payload) cheap.
+
+``ef_mem`` is ONE agent's residual tree, or ``None`` when the
+TrainState carries no EF memory (a static, trace-time property: every
+branch then returns ``None`` and the pytree structures stay uniform).
+Non-EF policies return a zeroed residual slot so silent bank members
+never leak stale memory.  The controller slot follows the same
+discipline: with ``has_ctrl_state=False`` every branch returns ``None``
+(zero extra ops — plain policies compile unchanged); with it True,
+adaptive branches return their updated row and plain branches pass
+their (unused) row through untouched, keeping the ``(m, CTRL_WIDTH)``
+carry structurally stable.  An adaptive branch running WITHOUT a
+controller slot falls back to its static initial row (``trig.ctrl0`` —
+open-loop ``lam0`` gating, no adaptation).
 """
 from __future__ import annotations
 
@@ -56,8 +83,28 @@ from repro.comm.error_feedback import ef_add, ef_residual
 from repro.comm.policy import CommPolicy
 from repro.comm.triggers import TriggerFn
 
-# the uniform agent-stage signature (the lax.switch branch contract)
-AgentStage = Callable[..., tuple]
+# the uniform comm-epilogue signature (the lax.switch branch contract);
+# "AgentStage" is the pre-hybrid name, kept as an alias
+AgentEpilogue = Callable[..., tuple]
+AgentStage = AgentEpilogue
+
+
+def batch_prologue(grad_fn: Callable) -> Callable:
+    """Phase 1 of the hybrid dispatch: ONE ``jax.vmap`` over agents.
+
+    ``grad_fn(agent_batch) -> (local_loss, grad)`` is the shared,
+    policy-independent gradient prologue for ONE agent (the train step's
+    ``value_and_grad`` of the local objective).  The returned function
+    maps the whole stacked batch to stacked ``(losses, grads)`` —
+    agent-PARALLEL gradient work, where the scan-carried prologue of the
+    ``"switch"`` path runs the same ops sequentially per agent.
+
+    No ``optimization_barrier`` may live inside ``grad_fn`` (the
+    primitive has no vmap batching rule); the caller pins the *stacked*
+    outputs instead, which serves the same anti-CSE purpose because the
+    scan over the epilogues materializes its inputs anyway.
+    """
+    return jax.vmap(grad_fn)
 
 
 @dataclass(frozen=True)
@@ -92,9 +139,93 @@ class StageBank:
         """Per-AGENT compressor chains (for wire-byte accounting)."""
         return tuple(self.chains[i] for i in self.agent_index)
 
-    def stages(self, has_ef_memory: bool, has_ctrl_state: bool = False
-               ) -> Tuple[AgentStage, ...]:
-        """Build the uniform-signature branch per bank policy.
+    @property
+    def epilogue_batch_free(self) -> bool:
+        """Can the epilogue scan run WITHOUT the per-agent batch?
+
+        True when every bank trigger either exposes a prologue (its
+        batch consumption moves into the vmapped phase 1, and with a
+        precursor supplied it provably never touches ``batch``) or
+        declares ``uses_batch = False`` (the scheduling baselines).
+        The hybrid dispatch then feeds the switch a leafless ``None``
+        batch operand, sparing the scan one per-iteration slice of the
+        full data arrays.  A trigger registered without either marker
+        conservatively keeps the batch in the scan.
+        """
+        return all(
+            getattr(t, "prologue_key", None) is not None
+            or getattr(t, "uses_batch", True) is False
+            for t in self.triggers
+        )
+
+    def policy_groups(self) -> Tuple[Tuple[Tuple[int, ...], ...],
+                                     Tuple[int, ...], Tuple[int, ...]]:
+        """Static agent-group layout for the policy-axis epilogue scan.
+
+        The hybrid dispatch scans the DISTINCT-POLICY axis (P
+        iterations), each ``lax.switch`` branch running its policy's
+        epilogue vmapped over the agents that actually carry that
+        policy.  Branch operand/result shapes must be uniform for
+        ``lax.switch``, so every group is padded to the largest group
+        size by repeating its first agent (the duplicate rows compute
+        identical, discarded values).  Returns ``(padded_rows, sel_p,
+        sel_pos)``: ``padded_rows[p]`` are branch ``p``'s agent rows
+        (padded, length ``max group size``), and agent ``i``'s true
+        result lives at ``[sel_p[i], sel_pos[i]]`` of the scan-stacked
+        ``(P, s_max, ...)`` outputs — a static gather, so the merge is
+        exact (no arithmetic touches the selected values).
+        """
+        rows: list = [[] for _ in self.policies]
+        for i, p in enumerate(self.agent_index):
+            rows[p].append(i)
+        s_max = max(len(r) for r in rows)
+        pos = {}
+        padded = []
+        for r in rows:
+            for j, i in enumerate(r):
+                pos[i] = j
+            padded.append(tuple(r + [r[0]] * (s_max - len(r))))
+        sel_pos = tuple(pos[i] for i in range(len(self.agent_index)))
+        return tuple(padded), self.agent_index, sel_pos
+
+    def prologues(self) -> Tuple[Tuple[Callable, ...], Tuple[int, ...]]:
+        """The bank's deduped trigger prologues (phase-1 gain precursors).
+
+        Returns ``(fns, index)``: ``fns`` are the DISTINCT precursor
+        computations (deduped by ``trig.prologue_key`` — valid because
+        every bank trigger was built against the same TriggerContext, so
+        e.g. all lookahead-probe triggers share ONE probe evaluation),
+        and ``index[b]`` maps bank branch ``b`` to its entry in ``fns``
+        (``-1`` for triggers with no precursor: always/never/periodic).
+
+        The hybrid dispatch evaluates every ``fns`` entry for every
+        agent inside its single prologue vmap — union-compute, the
+        price of keeping the prologue un-switched.  It is bounded by
+        the number of distinct precursor computations (≤ #distinct
+        policies, usually 1) and runs agent-parallel, where the
+        scan-carried alternative runs exactly one precursor per agent
+        but serially.
+        """
+        keys: list = []
+        fns: list = []
+        index: list = []
+        for trig in self.triggers:
+            key = getattr(trig, "prologue_key", None)
+            if key is None:
+                index.append(-1)
+                continue
+            if key not in keys:
+                keys.append(key)
+                fns.append(trig.prologue)
+            index.append(keys.index(key))
+        return tuple(fns), tuple(index)
+
+    def epilogues(self, has_ef_memory: bool, has_ctrl_state: bool = False
+                  ) -> Tuple[AgentEpilogue, ...]:
+        """Build the uniform-signature comm-epilogue branch per bank
+        policy (phase 2 of the two-phase contract; the gradient
+        prologue is shared and supplied by the caller — vmapped under
+        ``hetero_dispatch="hybrid"``, scan-carried under ``"switch"``).
 
         ``has_ef_memory`` / ``has_ctrl_state`` say which optional slots
         the TrainState actually carries this trace — both are static
@@ -103,30 +234,46 @@ class StageBank:
         (stable pytree carry, zero extra ops).
         """
         adaptive = self.adaptive_flags or (False,) * len(self.triggers)
+        _, pre_index = self.prologues()
         return tuple(
-            _make_stage(trig, chain, use_ef=ef and has_ef_memory,
-                        adaptive=ad, use_ctrl=has_ctrl_state)
-            for trig, chain, ef, ad in zip(
-                self.triggers, self.chains, self.ef_flags, adaptive
+            _make_epilogue(trig, chain, use_ef=ef and has_ef_memory,
+                           adaptive=ad, use_ctrl=has_ctrl_state,
+                           pre_index=pidx)
+            for trig, chain, ef, ad, pidx in zip(
+                self.triggers, self.chains, self.ef_flags, adaptive,
+                pre_index
             )
         )
 
+    # pre-hybrid spelling of the branch list, kept for callers that
+    # predate the prologue/epilogue split
+    stages = epilogues
 
-def _make_stage(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool,
-                adaptive: bool = False, use_ctrl: bool = False) -> AgentStage:
-    def stage(params, grad, batch, local_loss, step, ef_mem, ctrl=None,
-              scale=None):
+
+def _make_epilogue(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool,
+                   adaptive: bool = False, use_ctrl: bool = False,
+                   pre_index: int = -1) -> AgentEpilogue:
+    def epilogue(params, grad, batch, local_loss, step, ef_mem, ctrl=None,
+                 scale=None, pre=None):
+        # ``pre`` is the hybrid dispatch's stacked (P,) gain-precursor
+        # vector for this agent; the branch selects its own entry.  The
+        # kwarg is only forwarded when this trigger declared a prologue
+        # (pre_index >= 0), so pre-split trigger closures keep working.
+        kw = {"pre": pre[pre_index]} if (
+            pre is not None and pre_index >= 0
+        ) else {}
         if adaptive:
             # the controller reads its row (or its static init when the
             # state carries no slot — open-loop lam0 gating) and emits
             # the updated row only when there is a slot to carry it
             row = ctrl if use_ctrl else trig.ctrl0
             (alpha, gain), new_row = trig(
-                params, grad, batch, local_loss, step, row, scale
+                params, grad, batch, local_loss, step, row, scale, **kw
             )
             new_ctrl = new_row if use_ctrl else None
         else:
-            alpha, gain = trig(params, grad, batch, local_loss, step, scale)
+            alpha, gain = trig(params, grad, batch, local_loss, step, scale,
+                               **kw)
             new_ctrl = ctrl  # pass the (unused) row through unchanged
         g_eff = ef_add(grad, ef_mem if use_ef else None)
         sent = chain.compress_tree(g_eff) if chain else g_eff
@@ -138,7 +285,7 @@ def _make_stage(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool,
             new_mem = jax.tree_util.tree_map(jax.numpy.zeros_like, ef_mem)
         return alpha, gain, sent, new_mem, new_ctrl
 
-    return stage
+    return epilogue
 
 
 def build_stage_bank(

@@ -20,6 +20,12 @@ Each compressor transforms that ``WireFormat``:
 * ``randk(f)`` kept fraction ×= f with NO index bits — sender and
               receiver draw the subset from shared randomness
               (Stich et al. 2018)
+* ``sketch(rows,cols,seed)`` — count-sketch: the payload is a FIXED
+              ``rows × cols`` grid of f32 counters per tensor
+              (``abs_entries``), regardless of the tensor's size; hash
+              and sign functions come from shared randomness, so no
+              index bits (Charikar et al. 2002; the FetchSGD/SketchML
+              wire family)
 
 ``ratio = frac × (value_bits + index_bits) / dense_bits`` — so for fp32
 gradients ``int8`` alone is 0.25, ``topk(0.05)`` alone is 0.10, and
@@ -27,16 +33,28 @@ chained ``topk(0.05)|int8`` is ``0.05 × (8+32)/32 ≈ 0.0625``; for bf16
 gradients ``int8`` is 0.5.  Effective bytes on the wire are
 ``structural_bytes × ratio × comm_rate`` (see repro.comm.stats).
 
+A sketching stage makes the ratio **size-dependent** (a fixed counter
+grid against a variable dense payload): its ``WireFormat`` carries
+``abs_entries`` and the chain's :meth:`CompressorChain.ratio_for` then
+needs the per-agent dense entry count (``entries=``, from
+``repro.comm.stats.dense_entries``) — querying a sketch chain's ratio
+without it raises.  The accounting treats the per-agent gradient tree
+as one flat vector (exact for single-leaf trees; multi-leaf trees send
+one sketch per leaf, which the single-``abs_entries`` model understates
+— noted here rather than silently ignored).
+
 The numerical kernels (int8 quant, top-k threshold) migrated here from
 ``repro.core.aggregation``, which still re-exports them.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, replace
 from typing import Callable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.comm.registry import Registry, StageSpec
 
@@ -86,17 +104,51 @@ class WireFormat:
     ``dense_bits`` is the native per-entry width of the uncompressed
     gradient (32 for fp32, 16 for bf16): the ratio baseline, so int8 on
     bf16 gradients is 0.5, not 0.25.
+
+    ``abs_entries`` (set by sketching stages) replaces the fractional
+    payload with a FIXED count of entries independent of the tensor's
+    size — the ratio then depends on the dense entry count and must be
+    asked via :meth:`ratio_at`.
     """
 
     value_bits: float = 32.0
     index_bits: float = 0.0
     frac: float = 1.0  # fraction of entries actually sent
     dense_bits: float = 32.0
+    abs_entries: float | None = None  # fixed payload size (sketches)
 
     @property
     def ratio(self) -> float:
         """Bytes relative to the dense tensor at its native dtype."""
+        if self.abs_entries is not None:
+            raise ValueError(
+                "wire format carries a fixed-size payload (sketch): the "
+                "ratio depends on the dense entry count — use "
+                "ratio_at(entries) / CompressorChain.ratio_for(..., "
+                "entries=...)"
+            )
         return self.frac * (self.value_bits + self.index_bits) / self.dense_bits
+
+    def ratio_at(self, entries: float) -> float:
+        """Bytes relative to a dense payload of ``entries`` entries.
+
+        For frac-based formats this equals :attr:`ratio`; for fixed-size
+        (sketch) formats the kept count is ``abs_entries × frac`` (later
+        ``topk``-style stages thin the counters) and the result is
+        capped at 1.0 — a sender whose sketch would cost more than the
+        dense tensor (few entries, or 32-bit counters over a sub-32-bit
+        payload) just sends dense, so the format is never counted worse
+        than dense.
+        """
+        if entries <= 0:
+            raise ValueError(f"entries must be positive, got {entries!r}")
+        if self.abs_entries is None:
+            return self.ratio
+        kept = min(self.abs_entries * self.frac, float(entries))
+        ratio = kept * (self.value_bits + self.index_bits) / (
+            entries * self.dense_bits
+        )
+        return min(ratio, 1.0)
 
 
 @dataclass(frozen=True)
@@ -217,6 +269,74 @@ def _randk(args, spec):
     )
 
 
+@functools.lru_cache(maxsize=32)
+def _sketch_tables(rows: int, cols: int, seed: int, size: int):
+    """Shared-randomness hash/sign tables for one tensor size.
+
+    Real count-sketch systems fix the hash family up front and share it
+    between sender and receiver (no index bits on the wire); here the
+    tables are drawn once per ``(rows, cols, seed, size)`` with a host
+    RNG at trace time, so they are embedded as constants — no per-step
+    table regeneration, and identical across jit/vmap contexts (the
+    bit-identity contract of the dispatch paths).  The cache is bounded
+    (tables are O(rows × size) host bytes; eviction only costs a
+    deterministic redraw at the next trace) — the per-trace device
+    constants are the design's real memory price, same as every other
+    trace-time constant.
+    """
+    rng = np.random.default_rng(np.random.SeedSequence((seed, rows, cols, size)))
+    # host arrays (NOT jnp): a device constant created inside one trace
+    # must not be cached into another — jnp.asarray at the use site
+    # turns these into per-trace constants instead
+    idx = rng.integers(0, cols, size=(rows, size), dtype=np.int32)
+    sign = (rng.integers(0, 2, size=(rows, size)) * 2.0 - 1.0).astype(np.float32)
+    return idx, sign
+
+
+def count_sketch(x: jax.Array, rows: int, cols: int, seed: int) -> jax.Array:
+    """Count-sketch round trip: sketch ``x`` into ``rows × cols`` f32
+    counters, then reconstruct by the median-of-rows estimator
+    (Charikar et al. 2002) — the tensor the receiver would decode.
+
+    Each row ``r`` scatters ``s_r(i)·x_i`` into bucket ``h_r(i)``; the
+    estimate of ``x_i`` is ``median_r(s_r(i)·S[r, h_r(i)])``.  Heavy
+    hitters survive; collision noise averages out across rows.  Shapes
+    and dtype are preserved (fake-compress contract).
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    idx_h, sign_h = _sketch_tables(rows, cols, seed, int(flat.size))
+    idx, sign = jnp.asarray(idx_h), jnp.asarray(sign_h)
+    contrib = sign * flat[None, :]
+    sketch = jax.vmap(
+        lambda c, i: jnp.zeros((cols,), jnp.float32).at[i].add(c)
+    )(contrib, idx)
+    est = jnp.median(sign * jnp.take_along_axis(sketch, idx, axis=1), axis=0)
+    return est.reshape(x.shape).astype(x.dtype)
+
+
+@COMPRESSORS.register("sketch", params=(("rows", 5), ("cols", 64), ("seed", 0)),
+                      doc="count-sketch: fixed rows*cols f32 counters per "
+                          "tensor (shared hashes: no index bits)")
+def _sketch(args, spec):
+    rows, cols, seed = int(args["rows"]), int(args["cols"]), int(args["seed"])
+    if rows < 1 or cols < 1:
+        raise ValueError(
+            f"sketch needs rows >= 1 and cols >= 1, got rows={rows}, "
+            f"cols={cols}"
+        )
+    return Compressor(
+        spec,
+        compress=lambda x: count_sketch(x, rows, cols, seed),
+        # the wire payload is the counter grid itself: a FIXED
+        # rows × cols f32 entries (value_bits 32 even on narrower
+        # gradients — the counters are accumulators), no index bits
+        # (hash family is shared), and the frac axis resets so later
+        # thinning stages compose against the counters
+        wire=lambda w: replace(w, abs_entries=float(rows * cols),
+                               value_bits=32.0, index_bits=0.0, frac=1.0),
+    )
+
+
 # ----------------------------------------------------------------------
 
 
@@ -258,9 +378,26 @@ class CompressorChain:
         """Ratio for fp32 gradients (the common case)."""
         return self.ratio_for(32.0)
 
-    def ratio_for(self, dense_bits: float) -> float:
-        """Ratio against a dense tensor of ``dense_bits`` per entry."""
-        return self.wire_format(dense_bits).ratio
+    def ratio_for(self, dense_bits: float, entries: float | None = None
+                  ) -> float:
+        """Ratio against a dense tensor of ``dense_bits`` per entry.
+
+        ``entries`` — the per-agent dense entry count
+        (``repro.comm.stats.dense_entries``) — is required when the
+        chain carries a fixed-size sketching stage (its payload does
+        not scale with the tensor, so the ratio depends on the size it
+        displaces) and ignored otherwise.
+        """
+        fmt = self.wire_format(dense_bits)
+        if fmt.abs_entries is None:
+            return fmt.ratio
+        if entries is None:
+            raise ValueError(
+                "chain contains a fixed-size sketching stage: pass the "
+                "dense entry count, e.g. "
+                "ratio_for(dense_bits, entries=dense_entries(grads))"
+            )
+        return fmt.ratio_at(entries)
 
 
 def chain_from_specs(specs: Sequence[StageSpec]) -> CompressorChain:

@@ -64,6 +64,20 @@ def structural_bytes(grads, *, per_agent: bool = True) -> int:
     return total
 
 
+def dense_entries(grads, *, per_agent: bool = True) -> int:
+    """Dense entry count of a gradient pytree (a Python int — static at
+    trace).  With ``per_agent=True`` the leading agent axis is excluded.
+    The size a fixed-payload (sketch) wire format is priced against —
+    see ``CompressorChain.ratio_for(..., entries=...)``."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(grads):
+        n = leaf.size
+        if per_agent:
+            n //= leaf.shape[0]
+        total += int(n)
+    return total
+
+
 def dense_bits(grads) -> float:
     """Size-weighted native bits per gradient entry (32 for fp32 trees;
     exact for the uniform-dtype trees produced in practice).  The ratio

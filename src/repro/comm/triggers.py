@@ -63,6 +63,28 @@ optional ``scale`` and additionally return the updated row::
     trig(params, grad, batch, local_loss, step, ctrl[, scale])
         -> (TriggerOutput, new_ctrl)
 
+**Prologue/epilogue split.**  A trigger's round is two halves: a heavy,
+*threshold-independent* gain precursor (the lookahead probe forward
+pass, the quadratic HVP + fused ``gain_reduce`` reduction, ``‖g‖²``)
+and a cheap gate/controller step that compares it against λ/μ.  Built
+triggers with such a precursor expose it for the hybrid dispatch
+(repro.comm.bank) to batch over agents in one ``jax.vmap``:
+
+* ``trig.prologue(params, grad, batch, local_loss) -> f32 scalar`` —
+  the precursor, computed by the SAME ops the trigger itself would run.
+* ``trig.prologue_key`` — a hashable identity of that computation
+  *within one stage bank* (all bank triggers share a TriggerContext),
+  so e.g. ``gain_lookahead`` and ``budget_dual`` branches share ONE
+  probe evaluation instead of recomputing it per distinct policy.
+* the trigger callable accepts a keyword-only ``pre=`` carrying the
+  precomputed precursor; omitted (the scan-carried ``"switch"`` path,
+  the unrolled loop, the homogeneous vmap) it recomputes internally —
+  identical ops either way, which is what keeps the dispatch paths
+  bit-identical.
+
+Scheduling baselines (``always``/``never``/``periodic``) have no
+precursor and no ``prologue`` attribute.
+
 Row layout: ``ctrl[0]`` = current threshold λ, ``ctrl[1]`` = EWMA of
 the controlled signal (transmit rate / wire bytes per round),
 ``ctrl[2]`` = EWMA of ``|gain|`` (the controller's λ step scale).  The
@@ -197,6 +219,8 @@ def _always(args, ctx):
     def trig(params, grad, batch, local_loss, step, scale=None):
         del params, batch, step, scale
         return TriggerOutput(jnp.float32(1.0), jnp.float32(0.0) * local_loss)
+
+    trig.uses_batch = False
     return trig
 
 
@@ -205,6 +229,8 @@ def _never(args, ctx):
     def trig(params, grad, batch, local_loss, step, scale=None):
         del params, batch, step, scale
         return TriggerOutput(jnp.float32(0.0), jnp.float32(0.0) * local_loss)
+
+    trig.uses_batch = False
     return trig
 
 
@@ -216,6 +242,8 @@ def _periodic(args, ctx):
     def trig(params, grad, batch, local_loss, step, scale=None):
         del params, batch, local_loss, scale
         return TriggerOutput(_as_alpha((step % period) == 0), jnp.float32(0.0))
+
+    trig.uses_batch = False
     return trig
 
 
@@ -226,11 +254,18 @@ def _grad_norm(args, ctx):
     use_kernel = bool(args["kernel"])
     eps = jnp.float32(ctx.probe_eps)
 
-    def trig(params, grad, batch, local_loss, step, scale=None):
+    def prologue(params, grad, batch, local_loss):
+        del params, batch, local_loss
+        return _norm_sq(grad, use_kernel)
+
+    def trig(params, grad, batch, local_loss, step, scale=None, *, pre=None):
         del params, batch, local_loss, step
-        gsq = _norm_sq(grad, use_kernel)
+        gsq = prologue(None, grad, None, None) if pre is None else pre
         # report the small-ε proxy gain −ε‖g‖² for logging parity
         return TriggerOutput(_as_alpha(gsq >= _scaled(mu, scale)), -eps * gsq)
+
+    trig.prologue = prologue
+    trig.prologue_key = ("gsq", use_kernel)
     return trig
 
 
@@ -257,18 +292,27 @@ def _lookahead_gain_fn(ctx: TriggerContext, who: str):
     return gain_of
 
 
+# the shared prologue identity of every lookahead-probe trigger
+# (gain_lookahead + both budget controllers): one probe forward pass
+# serves every such branch in a stage bank
+_LOOKAHEAD_KEY = ("lookahead_gain",)
+
+
 @TRIGGERS.register("gain_lookahead", params=_GAIN_PARAMS + _KERNEL,
                    doc="eq. (11) with gain = loss(w - eps g) - loss(w)")
 def _gain_lookahead(args, ctx):
     gain_of = _lookahead_gain_fn(ctx, "gain_lookahead")
     lam_at = _lam_at(args)
 
-    def trig(params, grad, batch, local_loss, step, scale=None):
-        gain = gain_of(params, grad, batch, local_loss)
+    def trig(params, grad, batch, local_loss, step, scale=None, *, pre=None):
+        gain = gain_of(params, grad, batch, local_loss) if pre is None else pre
         return TriggerOutput(
             _as_alpha(gain <= -_scaled(lam_at(step), scale)),
             gain.astype(jnp.float32),
         )
+
+    trig.prologue = gain_of
+    trig.prologue_key = _LOOKAHEAD_KEY
     return trig
 
 
@@ -282,7 +326,7 @@ def _gain_quadratic(args, ctx):
     eps = jnp.float32(ctx.probe_eps)
     use_kernel = bool(args["kernel"])
 
-    def trig(params, grad, batch, local_loss, step, scale=None):
+    def prologue(params, grad, batch, local_loss):
         del local_loss
         grad_fn = lambda p: jax.grad(loss_fn)(p, batch)
         # H g via forward-over-reverse; both terms fused when the
@@ -292,9 +336,16 @@ def _gain_quadratic(args, ctx):
             gsq, ghg = _fused_gain_terms(grad, hg)
         else:
             gsq, ghg = tree_norm_sq(grad), tree_vdot(grad, hg)
-        gain = -eps * gsq + 0.5 * eps * eps * ghg
+        return -eps * gsq + 0.5 * eps * eps * ghg
+
+    def trig(params, grad, batch, local_loss, step, scale=None, *, pre=None):
+        gain = (prologue(params, grad, batch, local_loss)
+                if pre is None else pre)
         return TriggerOutput(_as_alpha(gain <= -_scaled(lam_at(step), scale)),
                              gain)
+
+    trig.prologue = prologue
+    trig.prologue_key = ("quadratic_gain", use_kernel)
     return trig
 
 
@@ -304,14 +355,21 @@ def _gain_estimated(args, ctx):
     lam_at = _lam_at(args)
     eps = jnp.float32(ctx.probe_eps)
 
-    def trig(params, grad, batch, local_loss, step, scale=None):
+    def prologue(params, grad, batch, local_loss):
         del local_loss
         xs = batch[0] if isinstance(batch, (tuple, list)) else batch["xs"]
-        gain = linreg_gain_estimated(params, grad, eps, xs)
+        return linreg_gain_estimated(params, grad, eps, xs)
+
+    def trig(params, grad, batch, local_loss, step, scale=None, *, pre=None):
+        gain = (prologue(params, grad, batch, local_loss)
+                if pre is None else pre)
         return TriggerOutput(
             _as_alpha(gain <= -_scaled(lam_at(step), scale)),
             gain.astype(jnp.float32),
         )
+
+    trig.prologue = prologue
+    trig.prologue_key = ("estimated_gain",)
     return trig
 
 
@@ -331,13 +389,20 @@ def _gain_exact(args, ctx):
     lam_at = _lam_at(args)
     eps = jnp.float32(ctx.probe_eps)
 
-    def trig(params, grad, batch, local_loss, step, scale=None):
+    def prologue(params, grad, batch, local_loss):
         del batch, local_loss
-        gain = linreg_gain_exact(params, grad, eps, sigma, w_star)
+        return linreg_gain_exact(params, grad, eps, sigma, w_star)
+
+    def trig(params, grad, batch, local_loss, step, scale=None, *, pre=None):
+        gain = (prologue(params, grad, batch, local_loss)
+                if pre is None else pre)
         return TriggerOutput(
             _as_alpha(gain <= -_scaled(lam_at(step), scale)),
             gain.astype(jnp.float32),
         )
+
+    trig.prologue = prologue
+    trig.prologue_key = ("exact_gain",)
     return trig
 
 
@@ -363,9 +428,13 @@ def _lam_step_scale(eta, gmag, lam):
     return eta * (gmag + _LAM_RELAX * lam)
 
 
-def _budget_decision(gain_of, params, grad, batch, local_loss, lam):
-    """The shared gate: transmit iff lookahead gain ≤ −λ (λ from state)."""
-    gain = gain_of(params, grad, batch, local_loss)
+def _budget_decision(gain_of, params, grad, batch, local_loss, lam, pre):
+    """The shared gate: transmit iff lookahead gain ≤ −λ (λ from state).
+
+    ``pre`` is the hybrid dispatch's precomputed probe gain (one vmapped
+    evaluation shared across the bank); ``None`` recomputes it with the
+    same ops — the bit-identity contract across dispatch paths."""
+    gain = gain_of(params, grad, batch, local_loss) if pre is None else pre
     return _as_alpha(gain <= -lam), gain
 
 
@@ -381,11 +450,12 @@ def _budget_dual(args, ctx):
     eta = jnp.float32(args["eta"])
     beta = jnp.float32(args["beta"])
 
-    def trig(params, grad, batch, local_loss, step, ctrl, scale=None):
+    def trig(params, grad, batch, local_loss, step, ctrl, scale=None, *,
+             pre=None):
         del step
         lam, sig, gmag = _ctrl_unpack(ctrl)
         alpha, gain = _budget_decision(
-            gain_of, params, grad, batch, local_loss, lam
+            gain_of, params, grad, batch, local_loss, lam, pre
         )
         # |gain| EWMA = the natural λ scale; updating it BEFORE the λ
         # step makes the very first rounds move at the problem's scale
@@ -405,6 +475,8 @@ def _budget_dual(args, ctx):
         )
 
     trig.ctrl0 = _ctrl_row(args["lam0"])
+    trig.prologue = gain_of
+    trig.prologue_key = _LOOKAHEAD_KEY
     return trig
 
 
@@ -429,20 +501,24 @@ def _budget_window(args, ctx):
     beta = jnp.float32(args["beta"])
     ratio_for = ctx.ratio_for
 
-    def trig(params, grad, batch, local_loss, step, ctrl, scale=None):
+    def trig(params, grad, batch, local_loss, step, ctrl, scale=None, *,
+             pre=None):
         del step
-        from repro.comm.stats import dense_bits, structural_bytes
+        from repro.comm.stats import dense_bits, dense_entries, structural_bytes
 
         # one transmission's wire bytes: ONE agent's dense payload × the
         # policy's compression ratio — shapes/dtypes only, so a Python
-        # float, static at trace time (DESIGN.md §2's byte model)
+        # float, static at trace time (DESIGN.md §2's byte model; the
+        # entry count prices fixed-payload sketch chains)
         cost = structural_bytes(grad, per_agent=False) * (
-            ratio_for(dense_bits(grad)) if ratio_for is not None else 1.0
+            ratio_for(dense_bits(grad),
+                      entries=dense_entries(grad, per_agent=False))
+            if ratio_for is not None else 1.0
         )
         cost = jnp.float32(cost)
         lam, meas, gmag = _ctrl_unpack(ctrl)
         alpha, gain = _budget_decision(
-            gain_of, params, grad, batch, local_loss, lam
+            gain_of, params, grad, batch, local_loss, lam, pre
         )
         gmag = (1.0 - beta) * gmag + beta * jnp.abs(gain)
         # windowed-rate measurement of bytes/round, then the same dual
@@ -460,6 +536,8 @@ def _budget_window(args, ctx):
         )
 
     trig.ctrl0 = _ctrl_row(args["lam0"])
+    trig.prologue = gain_of
+    trig.prologue_key = _LOOKAHEAD_KEY
     return trig
 
 

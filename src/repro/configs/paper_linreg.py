@@ -5,8 +5,12 @@ Three named setups match the three figures exactly; the
 :class:`TieredNetwork` scenarios (ROADMAP "large-m" item) describe the
 smart-city / IoT-fleet regime the abstract motivates — m≥64 agents in
 bandwidth tiers, each tier with its own CommPolicy and per-round wire
-budget — at a scale the ``lax.switch`` stage bank makes free to compile
-(O(#tiers), not O(m)).
+budget — at a scale the stage bank makes free to compile (O(#tiers),
+not O(m)) and, under the default ``hetero_dispatch="hybrid"``, fast to
+STEP: the four-tier mixes dedupe to 4 epilogue branches over a single
+vmapped gradient prologue, so only the tier axis is sequential
+(benchmarks/dispatch_bench.py measures the tiers' step/compile times
+per dispatch path on these exact scenarios).
 """
 from dataclasses import dataclass
 from typing import Tuple

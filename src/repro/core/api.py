@@ -45,10 +45,12 @@ import jax.numpy as jnp
 
 from repro.comm import (
     CommPolicy,
+    batch_prologue,
     build_stage_bank,
     comm_stats,
     ctrl_init,
     dense_bits,
+    dense_entries,
     ef_add,
     ef_init,
     ef_residual,
@@ -65,6 +67,11 @@ from repro.utils.tree import tree_add_scaled
 
 METRIC_KEYS = ("loss", "comm_rate", "any_tx", "num_tx", "mean_gain",
                "grad_norm", "wire_bytes")
+
+# the heterogeneous-network execution paths, fastest first (the default
+# is DISPATCH_MODES[0]); benchmarks/run.py --dispatch validates against
+# this same tuple so the CLI and the API cannot drift apart
+DISPATCH_MODES = ("hybrid", "switch", "unroll")
 
 
 def _microbatched(fn, m: int):
@@ -155,7 +162,7 @@ def make_triggered_train_step(
     aux_loss_fn: Optional[Callable] = None,
     use_kernel: bool = False,
     oracle: Optional[tuple] = None,
-    hetero_dispatch: str = "switch",
+    hetero_dispatch: str = "hybrid",
     barriers: bool = True,
     agent_metrics: bool = False,
 ):
@@ -173,12 +180,22 @@ def make_triggered_train_step(
     ``kernel=true`` spec argument.  ``oracle`` is the ``(Σ, w*)`` pair
     the ``gain_exact`` trigger requires.
 
-    ``hetero_dispatch`` picks the heterogeneous-network execution path:
-    ``"switch"`` (default) scans the agent axis and ``lax.switch``es
-    each agent into a deduped :class:`~repro.comm.StageBank` — compile
-    cost O(#distinct policies), usable at m≥64; ``"unroll"`` is the
-    PR-1 Python loop (compile cost O(m), kept as the bit-identical
-    reference).  Homogeneous policies ignore it.
+    ``hetero_dispatch`` picks the heterogeneous-network execution path
+    (one of :data:`DISPATCH_MODES`): ``"hybrid"`` (default) batches the
+    shared gradient prologue — per-agent ``value_and_grad`` plus the
+    :class:`~repro.comm.StageBank`'s deduped trigger gain precursors —
+    over the agent axis in ONE ``jax.vmap``, then runs only the comm
+    epilogue (trigger gate / compressor / EF update / controller step)
+    through a ``lax.scan`` + ``lax.switch`` over the DISTINCT policies,
+    each branch vmapped over its own agents — agent-parallel gradient
+    AND comm work, with only the policy axis sequential, at O(#distinct
+    policies) compile cost; ``"switch"`` scans the agent axis with the
+    prologue carried inside the scan (the pre-hybrid path: same compile
+    cost, all per-agent work serialized); ``"unroll"`` is the PR-1
+    Python loop (compile cost O(m), kept as the bit-identical
+    reference).  Homogeneous policies ignore it (the homogeneous path
+    has always vmapped the whole agent axis).  benchmarks/
+    BENCH_dispatch.json records the measured step/compile times.
 
     The built step takes an optional traced ``scale`` — an f32 scalar
     multiplying every trigger's transmit threshold (λ/μ).  The default
@@ -207,10 +224,10 @@ def make_triggered_train_step(
         if aux_loss_fn is not None:
             aux_loss_fn = _microbatched(aux_loss_fn, cfg.microbatches)
 
-    if hetero_dispatch not in ("switch", "unroll"):
+    if hetero_dispatch not in DISPATCH_MODES:
         raise ValueError(
-            f"hetero_dispatch must be 'switch' or 'unroll', "
-            f"got {hetero_dispatch!r}"
+            f"unknown hetero_dispatch {hetero_dispatch!r}: expected one "
+            f"of {', '.join(repr(m) for m in DISPATCH_MODES)}"
         )
     resolved = normalize_policy(
         resolve_policy(cfg, policy, use_kernel=use_kernel), cfg.num_agents
@@ -227,13 +244,21 @@ def make_triggered_train_step(
         trigger, chain, needs_ef, adaptive = build_stages(resolved)
         chains = (chain,)
         needs_ctrl = adaptive
-    elif hetero_dispatch == "switch":
+    elif hetero_dispatch in ("hybrid", "switch"):
         bank = build_stage_bank(
             hetero, loss_fn=loss_fn, probe_eps=cfg.lr, oracle=oracle
         )
         needs_ef = bank.needs_ef
         needs_ctrl = bank.needs_ctrl
         chains = bank.agent_chains()
+        # the bank's deduped phase-1 gain precursors (probe forward
+        # pass / HVP / ‖g‖²) — the hybrid path evaluates them inside
+        # its prologue vmap so the epilogue scan is left with only the
+        # cheap gate/controller/compressor work.  When every trigger's
+        # batch consumption lives in the prologue, the scan also drops
+        # the per-agent batch slice entirely (a leafless None operand).
+        prologue_fns, _ = bank.prologues()
+        scan_batch_free = bank.epilogue_batch_free
     else:
         stages = [build_stages(p) for p in hetero]
         needs_ef = any(ef for _, _, ef, _ in stages)
@@ -322,50 +347,156 @@ def make_triggered_train_step(
                 )
             else:
                 sent, new_ef = grads, state.ef_memory
-        elif hetero_dispatch == "switch":
-            # Heterogeneous: lax.scan over the agent axis, lax.switch
-            # into the deduped stage bank per agent.  A scalar switch
-            # index lowers to a conditional running exactly the ops the
-            # unrolled loop ran (bit-identical), but the stack is traced
-            # once per DISTINCT policy, not once per agent.
+        elif hetero_dispatch in ("hybrid", "switch"):
+            # Heterogeneous two-phase dispatch into the deduped stage
+            # bank.  "hybrid" runs phase 1 — the policy-independent
+            # gradient prologue plus the bank's deduped trigger gain
+            # precursors — batched over the agent axis in ONE vmap
+            # (agent-parallel gradient work), then scans the comm
+            # epilogue over the DISTINCT-POLICY axis: P iterations,
+            # each lax.switch branch vmapping its policy's epilogue
+            # over that policy's own agents.  "switch" carries the
+            # prologue along a scan over the AGENT axis (the pre-hybrid
+            # path: same O(#distinct policies) compile cost, but both
+            # gradient and comm work serialized per agent).  Either way
+            # every agent runs exactly the ops the unrolled loop ran
+            # (bit-identical on CPU), traced once per DISTINCT policy.
+            hybrid = hetero_dispatch == "hybrid"
             has_mem = needs_ef and state.ef_memory is not None
             if needs_ef and not has_mem:
                 _warn_ef_memory_missing()
             use_ctrl = needs_ctrl and state.ctrl_state is not None
             if needs_ctrl and not use_ctrl:
                 _warn_ctrl_state_missing()
-            branches = bank.stages(has_mem, use_ctrl)
-            agent_idx = jnp.asarray(bank.agent_index, jnp.int32)
+            branches = bank.epilogues(has_mem, use_ctrl)
             mem = state.ef_memory if has_mem else None
             ctrl = state.ctrl_state if use_ctrl else None
 
-            def agent_body(carry, inp):
-                idx, agent_batch, mem_i, ctrl_i = inp
-                main, g = grad_prologue(state.params, agent_batch, True)
-                operands = (
-                    state.params, g, agent_batch, main, state.step, mem_i,
-                )
-                if use_ctrl or scale is not None:
-                    # the stage's optional ctrl operand precedes scale,
-                    # so it must be passed (possibly as the leafless
-                    # None pytree) whenever scale is
-                    operands = operands + (ctrl_i,)
-                if scale is not None:
-                    # trailing operand feeds the stages' optional
-                    # threshold scale (the frontier grid coordinate);
-                    # arity stays uniform across the branch list either
-                    # way because the stage declares it with a default
-                    operands = operands + (scale,)
-                alpha, gain, sent_i, new_mem_i, new_ctrl_i = jax.lax.switch(
-                    idx, branches, *operands
-                )
-                return carry, (main, alpha, gain, sent_i, new_mem_i,
-                               new_ctrl_i)
+            if hybrid:
+                use_pre = bool(prologue_fns)
 
-            _, (losses, alphas, gains, sent, new_mem, new_ctrl) = \
-                jax.lax.scan(
-                    agent_body, 0.0, (agent_idx, batch, mem, ctrl)
+                # phase 1: stacked (losses, grads) — plus the deduped
+                # trigger gain precursors, stacked to a per-agent (P,)
+                # vector — for all agents from ONE vmap.  Precursors
+                # are union-computed (every distinct precursor for
+                # every agent: the prologue is un-switched), which is
+                # agent-parallel and bounded by the handful of distinct
+                # computations a bank dedupes to.  The prologue's
+                # optimization_barrier must stay OFF inside the vmap
+                # (no batching rule); pinning the stacked outputs
+                # instead serves the same anti-CSE purpose — the
+                # epilogue consumes materialized stacks, so the
+                # trigger's probe re-evaluation cannot fuse back into
+                # the loss computation anyway.
+                def agent_prologue(ab):
+                    main, g = grad_prologue(state.params, ab, False)
+                    if not prologue_fns:
+                        return main, g, None
+                    pre = jnp.stack([
+                        jnp.asarray(fn(state.params, g, ab, main),
+                                    jnp.float32)
+                        for fn in prologue_fns
+                    ])
+                    return main, g, pre
+
+                losses, grads, pres = batch_prologue(agent_prologue)(batch)
+                if barriers:
+                    if pres is None:
+                        losses, grads = jax.lax.optimization_barrier(
+                            (losses, grads)
+                        )
+                    else:
+                        losses, grads, pres = jax.lax.optimization_barrier(
+                            (losses, grads, pres)
+                        )
+
+                # phase 2: lax.scan + lax.switch over the DISTINCT
+                # POLICIES.  Branch p gathers its own agents' rows
+                # (static indices, padded to the largest group so every
+                # branch has uniform shapes) and vmaps the epilogue
+                # over them — the comm work is agent-parallel within
+                # each policy, and only the policy axis (P entries, not
+                # m agents) is sequential.  With every trigger's batch
+                # use hoisted into the prologue, the branches skip
+                # gathering the data arrays entirely.
+                padded_rows, sel_p, sel_pos = bank.policy_groups()
+
+                def make_branch(rows, epilogue):
+                    rows = jnp.asarray(rows, jnp.int32)
+                    take = lambda tree: jax.tree_util.tree_map(
+                        lambda x: x[rows], tree
+                    )
+
+                    def branch():
+                        def per_agent(main, g, pre_i, ab, mem_i, ctrl_i):
+                            return epilogue(
+                                state.params, g, ab, main, state.step,
+                                mem_i, ctrl_i, scale, pre_i,
+                            )
+
+                        return jax.vmap(per_agent)(
+                            losses[rows], take(grads),
+                            take(pres) if use_pre else None,
+                            None if scan_batch_free else take(batch),
+                            take(mem), take(ctrl),
+                        )
+
+                    return branch
+
+                vbranches = [
+                    make_branch(rows, epi)
+                    for rows, epi in zip(padded_rows, branches)
+                ]
+
+                def policy_body(carry, p):
+                    return carry, jax.lax.switch(p, vbranches)
+
+                _, outs = jax.lax.scan(
+                    policy_body, 0.0,
+                    jnp.arange(len(vbranches), dtype=jnp.int32),
                 )
+                # agent i's true result sits at [sel_p[i], sel_pos[i]]
+                # of the (P, s_max, ...) stacks — a static gather, so
+                # the merge is exact (padding duplicates are discarded)
+                sp = jnp.asarray(sel_p, jnp.int32)
+                spos = jnp.asarray(sel_pos, jnp.int32)
+                merge = lambda tree: jax.tree_util.tree_map(
+                    lambda x: x[sp, spos], tree
+                )
+                alphas, gains, sent, new_mem, new_ctrl = (
+                    merge(o) for o in outs
+                )
+            else:
+                agent_idx = jnp.asarray(bank.agent_index, jnp.int32)
+
+                def agent_body(carry, inp):
+                    idx, agent_batch, mem_i, ctrl_i = inp
+                    main, g = grad_prologue(state.params, agent_batch, True)
+                    operands = (
+                        state.params, g, agent_batch, main, state.step,
+                        mem_i,
+                    )
+                    if use_ctrl or scale is not None:
+                        # the epilogue's optional ctrl operand precedes
+                        # scale, so it must be passed (possibly as the
+                        # leafless None pytree) whenever scale is
+                        operands = operands + (ctrl_i,)
+                    if scale is not None:
+                        # trailing operand feeds the epilogues' optional
+                        # threshold scale (the frontier grid
+                        # coordinate); arity stays uniform across the
+                        # branch list either way because the epilogue
+                        # declares it with a default
+                        operands = operands + (scale,)
+                    alpha, gain, sent_i, new_mem_i, new_ctrl_i = \
+                        jax.lax.switch(idx, branches, *operands)
+                    return carry, (main, alpha, gain, sent_i, new_mem_i,
+                                   new_ctrl_i)
+
+                _, (losses, alphas, gains, sent, new_mem, new_ctrl) = \
+                    jax.lax.scan(
+                        agent_body, 0.0, (agent_idx, batch, mem, ctrl)
+                    )
             if barriers:
                 # same barrier as the unroll path below: pin the
                 # per-agent scalar stacks so both programs reduce a
@@ -444,10 +575,14 @@ def make_triggered_train_step(
         )
         params = tree_add_scaled(state.params, updates, 1.0)
         # wire ratios against the gradients' NATIVE dtype width (int8 on
-        # bf16 grads is 0.5, not fp32's 0.25) — all static at trace time
+        # bf16 grads is 0.5, not fp32's 0.25) — all static at trace
+        # time; the entry count prices fixed-payload sketch chains
         db = dense_bits(sent)
         sb = structural_bytes(sent, per_agent=True)
-        ratios = tuple(c.ratio_for(db) if c else 1.0 for c in chains)
+        de = dense_entries(sent, per_agent=True)
+        ratios = tuple(
+            c.ratio_for(db, entries=de) if c else 1.0 for c in chains
+        )
         stats = comm_stats(alphas, gains, structural=sb, ratios=ratios)
         metrics = {
             # fold_sum: association-fixed, so switch/unroll agree bitwise

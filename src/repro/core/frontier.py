@@ -38,7 +38,12 @@ One compile per frontier: ``run_frontier`` traces a single
 ``scan(vmap(step))`` program regardless of ``len(scales)``; the
 heterogeneous ``lax.switch`` dispatch keeps its O(#distinct policies)
 compile cost because the switch *index* is not batched — only the
-operands carry the grid axis.
+operands carry the grid axis.  The default ``hetero_dispatch="hybrid"``
+step composes cleanly under the grid vmap: its internal agent-axis vmap
+(the shared gradient prologue) simply gains the leading ``(G,)`` batch
+dimension — vmap-of-vmap — while the comm-epilogue scan+switch stays
+index-unbatched exactly as before (tests/test_frontier.py pins
+hybrid/switch/unroll lane-for-lane equality under the grid).
 """
 from __future__ import annotations
 
@@ -98,7 +103,7 @@ def make_frontier_step(
     policy=None,
     aux_loss_fn: Optional[Callable] = None,
     oracle: Optional[tuple] = None,
-    hetero_dispatch: str = "switch",
+    hetero_dispatch: str = "hybrid",
 ):
     """Build ``batched_step(states, batch, scales) -> (states, metrics)``.
 
@@ -133,7 +138,7 @@ def run_frontier(
     policy=None,
     aux_loss_fn: Optional[Callable] = None,
     oracle: Optional[tuple] = None,
-    hetero_dispatch: str = "switch",
+    hetero_dispatch: str = "hybrid",
 ) -> FrontierResult:
     """Run a whole loss-vs-communication frontier as ONE jitted program.
 

@@ -71,10 +71,20 @@ def _synth_payload(spec):
 
 @pytest.fixture()
 def smoke_dir(tmp_path):
-    """A clean artifact set synthesized from the committed baseline."""
+    """A clean artifact set synthesized from the committed baseline,
+    mirroring what CI produces: one file per dispatch LANE for laned
+    benchmarks (no base file — CI only runs the lanes), the plain base
+    file otherwise."""
     for name, spec in json.loads(BASELINE.read_text()).items():
-        path = tmp_path / f"{name}.json"
-        path.write_text(json.dumps(_synth_payload(spec)))
+        lanes = spec.get("lanes", [])
+        stem = name[: -len("_smoke")] if name.endswith("_smoke") else name
+        for lane in lanes or [None]:
+            payload = _synth_payload(spec)
+            fname = f"{stem}_{lane}_smoke.json" if lane else f"{name}.json"
+            if lane:
+                # a lane file must carry its lane's dispatch mode
+                payload["dispatch"] = lane
+            (tmp_path / fname).write_text(json.dumps(payload))
     return tmp_path
 
 
@@ -95,7 +105,7 @@ def test_gate_passes_on_real_smoke_artifacts():
 
 
 def test_gate_fails_on_nan_loss(smoke_dir):
-    path = smoke_dir / "hetero_frontier_smoke.json"
+    path = smoke_dir / "hetero_frontier_switch_smoke.json"
     payload = json.loads(path.read_text())
     payload["rows"][0]["final_J"] = float("nan")
     path.write_text(json.dumps(payload))
@@ -105,7 +115,7 @@ def test_gate_fails_on_nan_loss(smoke_dir):
 
 
 def test_gate_fails_on_wire_ratio_out_of_bounds(smoke_dir):
-    path = smoke_dir / "tiered_m64_smoke.json"
+    path = smoke_dir / "tiered_m64_hybrid_smoke.json"
     payload = json.loads(path.read_text())
     payload["rows"][0]["wire_bytes"] = (
         100.0 * payload["dense_bytes_equivalent"]
@@ -142,23 +152,93 @@ def test_gate_fails_on_unbaselined_artifact(smoke_dir):
     assert "no baseline entry" in r.stderr
 
 
+def test_gate_fails_when_a_dispatch_lane_is_missing(smoke_dir):
+    """Both CI dispatch lanes are REQUIRED for laned benchmarks: losing
+    one (a lane silently falling out of the CI invocation) reddens the
+    gate even though the other lane's artifact is clean."""
+    (smoke_dir / "adaptive_budget_switch_smoke.json").unlink()
+    r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
+    assert r.returncode == 1
+    assert "adaptive_budget_switch_smoke.json" in r.stderr
+    assert "produced no artifact" in r.stderr
+
+
+def test_gate_fails_on_lane_dispatch_mismatch(smoke_dir):
+    """A lane artifact whose payload was produced under a DIFFERENT
+    dispatch mode (mislabeled file, tagging drift) reddens the gate —
+    otherwise that lane's path would go silently unexercised."""
+    path = smoke_dir / "tiered_m64_switch_smoke.json"
+    payload = json.loads(path.read_text())
+    payload["dispatch"] = "hybrid"
+    path.write_text(json.dumps(payload))
+    r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
+    assert r.returncode == 1
+    assert "expected 'switch'" in r.stderr
+
+
+def test_gate_checks_optional_base_artifact_of_laned_benchmark(smoke_dir):
+    """A local default-dispatch run writes the un-suffixed base name:
+    not required alongside the CI lanes, but gated when present."""
+    baseline = json.loads(BASELINE.read_text())
+    # clean base artifact: passes alongside the lane files
+    payload = _synth_payload(baseline["hetero_frontier_smoke"])
+    base = smoke_dir / "hetero_frontier_smoke.json"
+    base.write_text(json.dumps(payload))
+    r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
+    assert r.returncode == 0, (r.stdout, r.stderr)
+    # corrupt it: the optional file is still gated
+    payload["rows"][0]["final_J"] = float("inf")
+    base.write_text(json.dumps(payload))
+    r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
+    assert r.returncode == 1
+    assert "hetero_frontier_smoke.json" in r.stderr
+
+
 def test_baseline_matches_the_ci_smoke_invocation():
     """Every benchmark the CI bench-smoke job runs has a baseline entry
     and vice versa — adding a benchmark to one place but not the other
     would make the gate fail (unbaselined artifact) or go stale."""
     ci = (REPO / ".github" / "workflows" / "ci.yml").read_text().splitlines()
-    names = []
+    raw = []
     collecting = False
     for line in ci:
         if line.lstrip().startswith("#"):
             continue
         toks = line.replace("\\", " ").split()
         if "benchmarks.run" in toks and "--smoke" in toks:
-            names += toks[toks.index("--smoke") + 1:]
+            # sentinel: each invocation resets the lane context below,
+            # so a later lane-less invocation is not misattributed to
+            # the previous --dispatch lane
+            raw.append("<invocation>")
+            raw += toks[toks.index("--smoke") + 1:]
             collecting = line.rstrip().endswith("\\")
         elif collecting:
-            names += toks
+            raw += toks
             collecting = line.rstrip().endswith("\\")
+    # sequential parse: a "--dispatch MODE" flag puts the names that
+    # follow it (within the same invocation) under that lane
+    names, lanes, pending_lane, lane = [], {}, False, None
+    for tok in raw:
+        if tok == "<invocation>":
+            lane, pending_lane = None, False
+            continue
+        if pending_lane:
+            lane, pending_lane = tok, False
+            continue
+        if tok == "--dispatch":
+            pending_lane = True
+            continue
+        names.append(tok)
+        if lane:
+            lanes.setdefault(tok, set()).add(lane)
     assert names, "could not find the --smoke invocation in ci.yml"
-    baseline = set(json.loads(BASELINE.read_text()))
-    assert {f"{n}_smoke" for n in names} == baseline
+    baseline = json.loads(BASELINE.read_text())
+    assert {f"{n}_smoke" for n in names} == set(baseline)
+    # every laned baseline entry is exercised by a CI lane invocation
+    for name, spec in baseline.items():
+        for lane in spec.get("lanes", []):
+            stem = name[: -len("_smoke")]
+            assert lane in lanes.get(stem, set()), (
+                f"baseline lane {lane!r} of {name} has no matching "
+                f"--dispatch {lane} invocation in ci.yml"
+            )

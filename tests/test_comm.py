@@ -97,7 +97,8 @@ def test_registries_list_expected_stages():
     for name in ("always", "never", "periodic", "grad_norm", "gain_lookahead",
                  "gain_quadratic", "gain_estimated", "gain_exact"):
         assert name in TRIGGERS.names()
-    for name in ("identity", "int8", "topk", "fp16", "bf16", "randk"):
+    for name in ("identity", "int8", "topk", "fp16", "bf16", "randk",
+                 "sketch"):
         assert name in COMPRESSORS.names()
 
 
@@ -276,6 +277,69 @@ def test_randk_trains_with_error_feedback():
                       comm="always|randk(0.5)+ef")
     _, hist = _smoke_run(cfg, steps=15)
     assert float(hist[-1]["loss"]) < float(hist[0]["loss"]) * 0.5
+
+
+def test_sketch_round_trip_recovers_heavy_hitters(rng):
+    """Count-sketch preserves shape/dtype, is deterministic, recovers
+    heavy hitters exactly at generous width, and degrades (not crashes)
+    when the sketch is much narrower than the tensor."""
+    from repro.comm.compressors import count_sketch
+
+    noise = 0.01 * jax.random.normal(rng, (64,))
+    x = noise.at[7].set(10.0).at[20].set(-4.0)
+    y = count_sketch(x, rows=5, cols=64, seed=0)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    # deterministic per input (shared hash family is fixed, not salted)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(count_sketch(x, 5, 64, 0)))
+    # heavy hitters survive the median-of-rows estimator
+    assert abs(float(y[7]) - 10.0) < 0.1
+    assert abs(float(y[20]) + 4.0) < 0.1
+    # overall reconstruction is tight at cols == size
+    rel = float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
+    assert rel < 0.05, rel
+    # a narrow sketch still reconstructs something finite and keeps the
+    # dominant coordinate's sign/magnitude ordering
+    z = count_sketch(x, rows=5, cols=8, seed=0)
+    assert np.all(np.isfinite(np.asarray(z)))
+    assert float(jnp.argmax(jnp.abs(z))) == 7
+
+
+def test_sketch_wire_accounting_is_size_dependent():
+    """The sketch payload is a fixed rows×cols counter grid: the byte
+    model prices it against the dense entry count, clamps at dense, and
+    refuses to answer without the size."""
+    chain = CommPolicy.parse("always|sketch(rows=3,cols=8)").chain()
+    # 24 f32 counters against 100 dense fp32 entries
+    assert chain.ratio_for(32.0, entries=100) == pytest.approx(24 / 100)
+    # counters are f32 accumulators even over bf16 gradients
+    assert chain.ratio_for(16.0, entries=100) == pytest.approx(
+        24 * 32 / (100 * 16))
+    # a sketch wider than the tensor is never counted worse than dense —
+    # including over sub-32-bit gradients, where the 32-bit counters
+    # would otherwise price ABOVE the dense bf16 payload
+    assert chain.ratio_for(32.0, entries=10) == pytest.approx(1.0)
+    assert chain.ratio_for(16.0, entries=10) == pytest.approx(1.0)
+    # quantized counters compose
+    q = CommPolicy.parse("always|sketch(rows=3,cols=8)|int8").chain()
+    assert q.ratio_for(32.0, entries=100) == pytest.approx(24 * 8 / (100 * 32))
+    with pytest.raises(ValueError, match="entries"):
+        chain.ratio_for(32.0)
+    with pytest.raises(ValueError, match="rows >= 1"):
+        CommPolicy.parse("always|sketch(rows=0)").chain()
+
+
+def test_sketch_spec_round_trips_and_trains():
+    pol = CommPolicy.parse("gain_lookahead(lam=0.1)|sketch(rows=3,cols=8)+ef")
+    assert CommPolicy.parse(str(pol)) == pol
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=2,
+                      comm="always|sketch(rows=5,cols=16)+ef")
+    _, hist = _smoke_run(cfg, steps=15)
+    assert float(hist[-1]["loss"]) < float(hist[0]["loss"]) * 0.5
+    # the train step's wire accounting uses the entry-priced ratio:
+    # 80 counters vs N_FEATURES dense entries per agent, clamped at 1
+    expect = min(80.0 / N_FEATURES, 1.0) * N_FEATURES * 4 * 2
+    assert float(hist[0]["wire_bytes"]) == pytest.approx(expect)
 
 
 def test_wire_ratio_respects_native_dtype():

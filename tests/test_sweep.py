@@ -179,11 +179,14 @@ def _train(cfg, dispatch, steps=12):
     return state, hist
 
 
-def test_switch_dispatch_bit_identical_to_unrolled_m4():
-    """ISSUE-2 acceptance: metrics, params, opt state and EF memory are
-    BIT-identical between the two hetero dispatch paths at m=4 mixed."""
+@pytest.mark.parametrize("dispatch", ["switch", "hybrid"])
+def test_bank_dispatch_bit_identical_to_unrolled_m4(dispatch):
+    """ISSUE-2/ISSUE-5 acceptance: metrics, params, opt state and EF
+    memory are BIT-identical between each stage-bank dispatch path
+    (agent-axis switch scan; vmap-prologue hybrid) and the unrolled
+    reference at m=4 mixed policies."""
     cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=4, comm=MIXED_M4)
-    s_sw, h_sw = _train(cfg, "switch")
+    s_sw, h_sw = _train(cfg, dispatch)
     s_un, h_un = _train(cfg, "unroll")
     for a, b in zip(h_sw, h_un):
         for k in a:
@@ -193,10 +196,11 @@ def test_switch_dispatch_bit_identical_to_unrolled_m4():
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_switch_dispatch_bit_identical_under_adamw():
+@pytest.mark.parametrize("dispatch", ["switch", "hybrid"])
+def test_bank_dispatch_bit_identical_under_adamw(dispatch):
     cfg = TrainConfig(lr=0.05, optimizer="adamw", num_agents=4,
                       comm=MIXED_M4)
-    s_sw, h_sw = _train(cfg, "switch", steps=6)
+    s_sw, h_sw = _train(cfg, dispatch, steps=6)
     s_un, h_un = _train(cfg, "unroll", steps=6)
     for a, b in zip(h_sw, h_un):
         for k in a:
@@ -219,12 +223,20 @@ def test_switch_dispatch_scales_to_m16_with_3_banks():
 
 
 def test_invalid_dispatch_rejected():
+    """ISSUE-5 satellite: an unknown mode fails up front with an error
+    that lists every valid mode (the same DISPATCH_MODES vocabulary
+    benchmarks/run.py --dispatch validates against)."""
+    from repro.core.api import DISPATCH_MODES
+
     cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=2,
                       comm=("always", "never"))
     opt = opt_lib.from_config(cfg)
-    with pytest.raises(ValueError, match="hetero_dispatch"):
+    with pytest.raises(ValueError, match="hetero_dispatch") as err:
         make_triggered_train_step(linreg_loss, opt, cfg,
                                   hetero_dispatch="sideways")
+    assert DISPATCH_MODES == ("hybrid", "switch", "unroll")
+    for mode in DISPATCH_MODES:
+        assert mode in str(err.value)
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,326 @@
+"""repro.net lossy-wire scheduling: loss-rate × budget-scale frontiers
+on the m=64 tiered fleet, fixed-λ vs loss-aware budget controllers.
+
+``adaptive_budget`` showed closed-loop controllers tracking per-tier
+wire budgets over an IDEAL wire.  This benchmark drops 20% of every
+metered tier's transmissions (``@ bernoulli(p=0.2,boost=0.05)`` —
+``repro.configs.paper_linreg.TIERED_M64_ADAPTIVE_LOSSY``) and sweeps a
+2-D operating grid in ONE compile: ``repro.core.frontier`` vmaps the
+train step over aligned ``scales`` (budget multiplier) and
+``chan_scales`` (channel severity: 0 = lossless, 1 = nominal 20% loss)
+vectors — a loss-rate × budget-scale surface as a single
+``scan(vmap(step))`` program.  Because the controllers price DELIVERED
+bytes (``repro.comm.triggers`` ``obs = α·d``), they re-open their gates
+under loss and keep the delivered-byte rate on target; the hand-tuned
+fixed-λ template (``TIERED_M64_LOSSY``) has no feedback path, so its
+delivered bytes sag with the channel and its budget bands break.
+
+Reported per lane: tail-half DELIVERED bytes/round per tier (the train
+step's ``agent_bytes`` prices delivery under a channel) against the
+scaled budget, plus the attempted/delivered split and mean staleness.
+
+Claims: every ``@ ideal`` / channel-free pairing across the TIER_MIXES
+fleets (and the adaptive mix) is BIT-equal under the frontier grid vmap
+(the zero-op contract of the ``net_state`` slot); severity-0 lanes
+deliver every attempted byte; adaptive lanes at 20% loss hold every
+metered tier within 15% of its scaled delivered-byte budget while the
+fixed-λ lanes miss at least one band; every lane still learns (final
+J ≪ J(w₀) — the lossless backbone tier keeps eq. (10) fed at any
+severity).
+"""
+from __future__ import annotations
+
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_row, save_result
+from repro.configs.base import TrainConfig
+from repro.configs.paper_linreg import (
+    TIER_MIXES,
+    TIERED_M64,
+    TIERED_M64_ADAPTIVE,
+    TIERED_M64_CFG,
+    _lossy,
+)
+from repro.core import regression as R
+from repro.core.frontier import run_frontier
+from repro.optim import optimizers as opt_lib
+
+# the 2-D operating grid: budget multiplier × channel severity.  The
+# aligned lane vectors below flatten its meshgrid — one compile total.
+BUDGET_SCALES = [0.6, 1.0]
+CHAN_SEVERITIES = [0.0, 1.0]  # ×p loss: 0 = lossless lane, 1 = 20% loss
+TOL_LOSSY = 0.15  # delivered-byte acceptance band under loss
+
+# committed full-size artifact (the gitignored experiments/bench copy is
+# the working artifact; this one ships with the repo like BENCH_dispatch)
+BENCH_PATH = Path(__file__).resolve().parent / "BENCH_lossy.json"
+
+
+def _loss_fn(params, batch):
+    xs, ys = batch
+    r = xs @ params["w"] - ys
+    return 0.5 * jnp.mean(r * r)
+
+
+def _grid(budget_scales, severities):
+    """Flatten the 2-D grid into aligned per-lane vectors."""
+    b, c = np.meshgrid(budget_scales, severities, indexing="ij")
+    return list(b.ravel()), list(c.ravel())
+
+
+def _tier_rows(net, res, scales, chans, steps, J, budgets_scaled):
+    """Per-lane rows: tail-half realized DELIVERED bytes/round per tier
+    vs the (scaled) budget, plus the attempted/delivered split."""
+    tier_idx = np.asarray(net.tier_index())
+    tail = steps // 2
+    # (G, K, m) delivered bytes per agent per round → tail mean (G, m)
+    rates = np.asarray(res.metrics["agent_bytes"])[:, tail:, :].mean(axis=1)
+    lam = np.asarray(res.metrics["agent_lam"])[:, -1, :] \
+        if "agent_lam" in res.metrics else None
+    att = np.asarray(res.metrics["wire_bytes_attempted"]) \
+        if "wire_bytes_attempted" in res.metrics else None
+    stale = np.asarray(res.metrics["mean_staleness"]) \
+        if "mean_staleness" in res.metrics else None
+    rows = []
+    for g, (scale, chan) in enumerate(zip(scales, chans)):
+        per_tier = {}
+        rel_err = {}
+        within = True
+        for i, tier in enumerate(net.tiers):
+            mean_rate = float(rates[g, tier_idx == i].mean())
+            per_tier[tier.name] = mean_rate
+            if np.isfinite(tier.wire_budget):
+                target = tier.wire_budget * (scale if budgets_scaled else 1.0)
+                err = mean_rate / target - 1.0
+                rel_err[tier.name] = err
+                within = within and abs(err) <= TOL_LOSSY
+        row = {
+            "scale": float(scale),
+            "chan_scale": float(chan),
+            "final_J": float(J[g]),
+            "wire_bytes": float(
+                np.asarray(res.metrics["wire_bytes"])[g].sum()
+            ),
+            "tier_bytes_per_round": per_tier,
+            "tier_rel_err": rel_err,
+            "within_budget": bool(within),
+        }
+        if att is not None:
+            row["wire_bytes_attempted"] = float(att[g].sum())
+            row["delivered_rate"] = float(
+                np.asarray(res.metrics["delivered_rate"])[g, tail:].mean()
+            )
+        if stale is not None:
+            row["mean_staleness_final"] = float(stale[g, -1])
+        if lam is not None:
+            row["tier_lam_final"] = {
+                t.name: float(lam[g, tier_idx == i].mean())
+                for i, t in enumerate(net.tiers)
+            }
+        rows.append(row)
+    return rows
+
+
+def _ideal_bit_check(cfg_lr, dispatch, steps: int):
+    """``@ ideal`` must be byte-for-byte the channel-free program.
+
+    Every TIER_MIXES fleet (plus the adaptive mix, for controller
+    coverage) runs the SAME frontier grid twice — plain policies and
+    ``@ ideal``-suffixed — and every output (params, opt state, EF
+    memory, controller rows, every metric trajectory) must be bitwise
+    equal under the grid vmap.  Returns per-mix results."""
+    scales = [0.7, 1.0]
+
+    def batch_fn(key):
+        return R.agent_batches(problem, key)
+
+    problem = R.make_problem(cfg_lr, jax.random.key(30))
+
+    def frontier(policies):
+        cfg = TrainConfig(lr=cfg_lr.stepsize, optimizer="sgd",
+                          num_agents=cfg_lr.num_agents, comm=policies)
+        opt = opt_lib.from_config(cfg)
+        return run_frontier(
+            _loss_fn, opt, cfg, {"w": jnp.zeros(cfg_lr.n)},
+            scales=scales, steps=steps, batch_fn=batch_fn,
+            key=jax.random.key(31), hetero_dispatch=dispatch or "hybrid",
+        )
+
+    def eq_tree(a, b):
+        la = jax.tree_util.tree_leaves(a)
+        lb = jax.tree_util.tree_leaves(b)
+        return len(la) == len(lb) and all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(la, lb)
+        )
+
+    results = []
+    for net in TIER_MIXES + (TIERED_M64_ADAPTIVE,):
+        plain = net.policies(lam_base=1.0)
+        ideal = tuple(f"{p} @ ideal" for p in plain)
+        rp = frontier(plain)
+        ri = frontier(ideal)
+        bit_equal = (
+            ri.state.net_state is None
+            and eq_tree(rp.state.params, ri.state.params)
+            and eq_tree(rp.state.opt_state, ri.state.opt_state)
+            and eq_tree(rp.state.ef_memory, ri.state.ef_memory)
+            and eq_tree(rp.state.ctrl_state, ri.state.ctrl_state)
+            and set(rp.metrics) == set(ri.metrics)
+            and all(eq_tree(rp.metrics[k], ri.metrics[k])
+                    for k in rp.metrics)
+        )
+        results.append({"name": net.name, "bit_equal": bool(bit_equal)})
+    return results
+
+
+def run(verbose: bool = True, smoke: bool = False,
+        dispatch: str | None = None, seed: int = 0) -> dict:
+    """``dispatch`` pins the hetero train-step path (None = the default
+    ``hybrid``); ``seed`` keys the channels' counter-based delivery
+    stream, so CI lanes replay identical drop patterns."""
+    cfg_lr = TIERED_M64_CFG
+    steps = 80 if smoke else 240
+    problem = R.make_problem(cfg_lr, jax.random.key(30))
+    J0 = float(problem.J(jnp.zeros(cfg_lr.n)))
+
+    # the channels' PRNG stream is (seed, step, agent)-keyed — rebuild
+    # the nets so --seed reaches the spec (seed=0 reproduces the
+    # committed TIERED_M64_*_LOSSY scenarios exactly)
+    chan = f"bernoulli(p=0.2,boost=0.05,seed={seed})"
+    net_a = _lossy(TIERED_M64_ADAPTIVE, "tiered_m64_adaptive_lossy", chan)
+    net_f = _lossy(TIERED_M64, "tiered_m64_lossy", chan)
+
+    def batch_fn(key):
+        return R.agent_batches(problem, key)
+
+    def frontier_for(net, scales, chan_scales):
+        cfg = TrainConfig(lr=cfg_lr.stepsize, optimizer="sgd",
+                          num_agents=cfg_lr.num_agents,
+                          comm=net.policies(lam_base=1.0))
+        opt = opt_lib.from_config(cfg)
+        res = run_frontier(
+            _loss_fn, opt, cfg, {"w": jnp.zeros(cfg_lr.n)},
+            scales=scales, steps=steps, batch_fn=batch_fn,
+            key=jax.random.key(31),
+            hetero_dispatch=dispatch or "hybrid",
+            chan_scales=chan_scales,
+        )
+        J = np.asarray(jax.vmap(problem.J)(res.state.params["w"]))
+        return res, J
+
+    # adaptive surface: budget × severity, ONE compile — lane i runs
+    # its controllers at scales[i]× targets under chans[i]× loss
+    a_scales, a_chans = _grid(BUDGET_SCALES, CHAN_SEVERITIES)
+    res_a, J_a = frontier_for(net_a, a_scales, a_chans)
+    adaptive_rows = _tier_rows(net_a, res_a, a_scales, a_chans, steps, J_a,
+                               budgets_scaled=True)
+
+    # fixed-λ baseline: the hand-tuned template at λ-scale 1, lossless
+    # and lossy lanes — judged against the NOMINAL budgets
+    f_scales, f_chans = _grid([1.0], CHAN_SEVERITIES)
+    res_f, J_f = frontier_for(net_f, f_scales, f_chans)
+    fixed_rows = _tier_rows(net_f, res_f, f_scales, f_chans, steps, J_f,
+                            budgets_scaled=False)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", UserWarning)
+        ideal_results = _ideal_bit_check(
+            cfg_lr, dispatch, steps=20 if smoke else 40
+        )
+
+    def lanes_at(rows, sev):
+        return [r for r in rows if r["chan_scale"] == sev]
+
+    lossless = lanes_at(adaptive_rows, 0.0) + lanes_at(fixed_rows, 0.0)
+    claims = {
+        "ideal_bit_equal": all(r["bit_equal"] for r in ideal_results),
+        "lossless_lane_delivers_all": all(
+            r["wire_bytes"] == r["wire_bytes_attempted"] for r in lossless
+        ),
+        "adaptive_tracks_delivered_budget_15pct": all(
+            r["within_budget"] for r in lanes_at(adaptive_rows, 1.0)
+        ),
+        "fixed_misses_under_loss": not all(
+            r["within_budget"] for r in lanes_at(fixed_rows, 1.0)
+        ),
+        "one_compile_grid": (
+            res_a.chan_scales is not None
+            and int(res_a.scales.shape[0])
+            == len(BUDGET_SCALES) * len(CHAN_SEVERITIES)
+        ),
+        "every_point_learns": all(
+            r["final_J"] < 0.5 * J0 for r in adaptive_rows + fixed_rows
+        ),
+    }
+    payload = {
+        "config": (f"lossy_channels (n={cfg_lr.n}, m={cfg_lr.num_agents}, "
+                   f"N={cfg_lr.samples_per_agent}, eps={cfg_lr.stepsize}, "
+                   f"K={steps}, tail=last {steps - steps // 2}, "
+                   f"tol={TOL_LOSSY}, channel={chan})"),
+        "dispatch": dispatch or "hybrid",
+        "seed": seed,
+        "J_init": J0,
+        "dense_bytes_equivalent": steps * cfg_lr.num_agents * cfg_lr.n * 4.0,
+        "budget_scales": BUDGET_SCALES,
+        "chan_severities": CHAN_SEVERITIES,
+        "adaptive": {
+            "name": net_a.name,
+            "tiers": [
+                {"name": t.name, "count": t.count, "policy": t.spec(1.0),
+                 "wire_budget": t.wire_budget}
+                for t in net_a.tiers
+            ],
+            "rows": adaptive_rows,
+        },
+        "fixed": {
+            "name": net_f.name,
+            "tiers": [
+                {"name": t.name, "count": t.count, "policy": t.spec(1.0),
+                 "wire_budget": t.wire_budget}
+                for t in net_f.tiers
+            ],
+            "rows": fixed_rows,
+        },
+        "ideal_check": {"mixes": ideal_results},
+        "claims": claims,
+    }
+    if verbose:
+        for label, net, rows in (("adaptive", net_a, adaptive_rows),
+                                 ("fixed-lambda", net_f, fixed_rows)):
+            print(f"-- {label} ({net.name})")
+            print("scale,chan,final_J,delivered_B,attempted_B,"
+                  "within_budget,"
+                  + ",".join(f"{t.name}_B/round" for t in net.tiers))
+            for r in rows:
+                print(fmt_row(
+                    r["scale"], r["chan_scale"], f"{r['final_J']:.4f}",
+                    f"{r['wire_bytes']:.0f}",
+                    f"{r.get('wire_bytes_attempted', r['wire_bytes']):.0f}",
+                    r["within_budget"],
+                    *(f"{r['tier_bytes_per_round'][t.name]:.2f}"
+                      for t in net.tiers),
+                ))
+        print("ideal bit-check:", ideal_results)
+        print("claims:", claims)
+    tag = f"_{dispatch}" if dispatch else ""
+    payload_path = save_result(
+        f"lossy_channels{tag}_smoke" if smoke else f"lossy_channels{tag}",
+        payload,
+    )
+    if not smoke:
+        assert all(claims.values()), claims
+        # refresh the committed full-size artifact (default lane only,
+        # so CI dispatch lanes don't churn the repo copy)
+        if not dispatch:
+            BENCH_PATH.write_text(payload_path.read_text())
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -15,7 +15,9 @@ the full table).  ``--dispatch MODE`` (one of repro.core.api's
 ``DISPATCH_MODES``) pins the heterogeneous train-step dispatch path for
 the benchmarks that take one — their artifacts gain a ``_MODE`` name
 suffix so CI can gate each lane separately; benchmarks without the knob
-are skipped loudly, mirroring ``--smoke``.  Dry-run-derived tables
+are skipped loudly, mirroring ``--smoke``.  ``--seed N`` re-keys the
+benchmarks whose randomness takes a seed (the lossy-channel delivery
+stream) and skips the rest loudly, same contract.  Dry-run-derived tables
 (roofline) read cached JSONs from ``experiments/dryrun`` — run ``python
 -m repro.launch.dryrun --all`` first if missing."""
 from __future__ import annotations
@@ -34,6 +36,7 @@ from benchmarks import (
     hetero_frontier,
     kernel_bench,
     lambda_decay,
+    lossy_channels,
     roofline_table,
     theory_bounds,
     tiered_m64,
@@ -50,6 +53,7 @@ ALL = {
     "hetero_frontier": hetero_frontier.run,  # beyond-paper: m=8 mixed policies
     "tiered_m64": tiered_m64.run,      # beyond-paper: m=64 tier-mix frontiers
     "adaptive_budget": adaptive_budget.run,  # beyond-paper: closed-loop λ
+    "lossy_channels": lossy_channels.run,  # beyond-paper: lossy wires (repro.net)
     "dispatch_bench": dispatch_bench.run,  # unroll/switch/hybrid step+compile
     "triggered_lm": triggered_lm.run,  # beyond-paper: trigger on real arch
     "kernel_bench": kernel_bench.run,  # kernel traffic model
@@ -120,6 +124,22 @@ def main() -> int:
             return 2
         dispatch = value
         args = args[:at] + args[at + 2:]
+    seed = None
+    if "--seed" in args:
+        at = args.index("--seed")
+        value = args[at + 1] if at + 1 < len(args) else None
+        # same loud-typo contract as --dispatch: a non-integer (or
+        # missing) seed fails up front on stderr (rc 2) before anything
+        # runs, instead of landing in the benchmark-name list
+        try:
+            seed = int(value)
+        except (TypeError, ValueError):
+            print(
+                f"--seed expects an integer, got {value!r}",
+                file=sys.stderr,
+            )
+            return 2
+        args = args[:at] + args[at + 2:]
     names = [a for a in args if a != "--smoke"] or list(ALL)
     # reject unknown names (and stray flags, which land here too) UP
     # FRONT, on stderr, before anything runs: a typo'd CI invocation
@@ -149,6 +169,12 @@ def main() -> int:
             print(f"\n===== {name} =====\n[{name}] SKIPPED: no dispatch "
                   f"knob", flush=True)
             continue
+        if seed is not None and "seed" not in inspect.signature(fn).parameters:
+            # and for --seed: a benchmark whose randomness cannot be
+            # re-keyed must not silently run on its baked-in stream
+            print(f"\n===== {name} =====\n[{name}] SKIPPED: no seed knob",
+                  flush=True)
+            continue
         print(f"\n===== {name} =====", flush=True)
         t0 = time.time()
         ran += 1
@@ -156,6 +182,8 @@ def main() -> int:
             kw = dict(smoke=True) if smoke else {}
             if dispatch:
                 kw["dispatch"] = dispatch
+            if seed is not None:
+                kw["seed"] = seed
             fn(verbose=True, **kw)
             print(f"[{name}] OK in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:

@@ -21,8 +21,19 @@ compressor chain, residual update — is built per DISTINCT policy by
 :meth:`StageBank.epilogues` with one uniform call signature (the
 ``lax.switch`` branch contract):
 
-    epilogue(params, grad, batch, local_loss, step, ef_mem[, ctrl[, scale]])
-        -> (alpha, gain, sent, new_ef_mem, new_ctrl)
+    epilogue(params, grad, batch, local_loss, step, ef_mem
+             [, ctrl[, scale[, pre[, net[, chan_scale]]]]])
+        -> (alpha, gain, sent, new_ef_mem, new_ctrl)            # lossless
+        -> (alpha, gain, sent, new_ef_mem, new_ctrl,
+            delivered, new_net)                # net_state-carrying banks
+
+The extended tail only exists when the bank carries a non-trivial
+channel AND the TrainState holds a ``net_state`` slot (a static,
+trace-time property — see :meth:`StageBank.epilogues`): ``net`` is one
+agent's ``(NET_WIDTH,)`` row ``[staleness, aux, uid]``, ``chan_scale``
+the frontier's channel-parameter grid coordinate, ``delivered = alpha ×
+d`` the realized delivery (channel-free branches alias it to ``alpha``
+— zero extra ops for lossless tiers inside a lossy bank).
 
 ``ctrl`` is one agent's ``(CTRL_WIDTH,)`` controller row — the
 closed-loop threshold state of the budget-adaptive triggers
@@ -121,6 +132,9 @@ class StageBank:
     chains: Tuple[CompressorChain, ...]
     ef_flags: Tuple[bool, ...]
     adaptive_flags: Tuple[bool, ...] = ()
+    # per-branch built ChannelModel, None for channel-free branches AND
+    # trivial (@ ideal) channels — they compile identically
+    channels: Tuple[Optional[object], ...] = ()
 
     @property
     def needs_ef(self) -> bool:
@@ -130,6 +144,11 @@ class StageBank:
     def needs_ctrl(self) -> bool:
         """Any bank policy carrying closed-loop controller state?"""
         return any(self.adaptive_flags)
+
+    @property
+    def needs_net(self) -> bool:
+        """Any bank policy carrying a non-trivial lossy channel?"""
+        return any(c is not None for c in self.channels)
 
     @property
     def num_agents(self) -> int:
@@ -220,28 +239,35 @@ class StageBank:
             index.append(keys.index(key))
         return tuple(fns), tuple(index)
 
-    def epilogues(self, has_ef_memory: bool, has_ctrl_state: bool = False
-                  ) -> Tuple[AgentEpilogue, ...]:
+    def epilogues(self, has_ef_memory: bool, has_ctrl_state: bool = False,
+                  has_net_state: bool = False) -> Tuple[AgentEpilogue, ...]:
         """Build the uniform-signature comm-epilogue branch per bank
         policy (phase 2 of the two-phase contract; the gradient
         prologue is shared and supplied by the caller — vmapped under
         ``hetero_dispatch="hybrid"``, scan-carried under ``"switch"``).
 
-        ``has_ef_memory`` / ``has_ctrl_state`` say which optional slots
-        the TrainState actually carries this trace — both are static
-        properties: with a slot absent, EF (resp. the controllers) is
-        off for every branch and all branches return ``None`` for it
-        (stable pytree carry, zero extra ops).
+        ``has_ef_memory`` / ``has_ctrl_state`` / ``has_net_state`` say
+        which optional slots the TrainState actually carries this trace
+        — all static properties: with a slot absent, EF (resp. the
+        controllers, the channels) is off for every branch and all
+        branches return ``None`` for it (stable pytree carry, zero
+        extra ops).  With ``has_net_state=True`` every branch speaks
+        the extended 7-tuple contract ``(alpha, gain, sent, new_mem,
+        new_ctrl, delivered, new_net)``; without it, the classic
+        5-tuple — so channel-free (and ``@ ideal``) traces stay the
+        exact pre-channel program.
         """
         adaptive = self.adaptive_flags or (False,) * len(self.triggers)
+        channels = self.channels or (None,) * len(self.triggers)
         _, pre_index = self.prologues()
         return tuple(
             _make_epilogue(trig, chain, use_ef=ef and has_ef_memory,
                            adaptive=ad, use_ctrl=has_ctrl_state,
-                           pre_index=pidx)
-            for trig, chain, ef, ad, pidx in zip(
+                           pre_index=pidx, channel=chan,
+                           use_net=has_net_state)
+            for trig, chain, ef, ad, pidx, chan in zip(
                 self.triggers, self.chains, self.ef_flags, adaptive,
-                pre_index
+                pre_index, channels
             )
         )
 
@@ -252,9 +278,10 @@ class StageBank:
 
 def _make_epilogue(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool,
                    adaptive: bool = False, use_ctrl: bool = False,
-                   pre_index: int = -1) -> AgentEpilogue:
+                   pre_index: int = -1, channel=None,
+                   use_net: bool = False) -> AgentEpilogue:
     def epilogue(params, grad, batch, local_loss, step, ef_mem, ctrl=None,
-                 scale=None, pre=None):
+                 scale=None, pre=None, net=None, chan_scale=None):
         # ``pre`` is the hybrid dispatch's stacked (P,) gain-precursor
         # vector for this agent; the branch selects its own entry.  The
         # kwarg is only forwarded when this trigger declared a prologue
@@ -262,27 +289,53 @@ def _make_epilogue(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool,
         kw = {"pre": pre[pre_index]} if (
             pre is not None and pre_index >= 0
         ) else {}
+        # the channel draw comes FIRST (independent of this round's
+        # alpha) so the controllers can price delivered transmissions;
+        # branches without a channel alias delivered to alpha below —
+        # no extra ops, which keeps mixed banks' lossless tiers exact
+        use_chan = use_net and channel is not None and net is not None
+        eff_scale = scale
+        if use_chan:
+            from repro.net.channels import channel_round, stale_scale, tx_cost
+
+            cost = tx_cost(grad, chain)
+            d, stale, finalize = channel_round(
+                channel, net, step, chan_scale, cost
+            )
+            eff_scale = stale_scale(scale, channel.boost, stale, adaptive)
+            if adaptive:
+                kw["delivered"] = d
         if adaptive:
             # the controller reads its row (or its static init when the
             # state carries no slot — open-loop lam0 gating) and emits
             # the updated row only when there is a slot to carry it
             row = ctrl if use_ctrl else trig.ctrl0
             (alpha, gain), new_row = trig(
-                params, grad, batch, local_loss, step, row, scale, **kw
+                params, grad, batch, local_loss, step, row, eff_scale, **kw
             )
             new_ctrl = new_row if use_ctrl else None
         else:
-            alpha, gain = trig(params, grad, batch, local_loss, step, scale,
-                               **kw)
+            alpha, gain = trig(params, grad, batch, local_loss, step,
+                               eff_scale, **kw)
             new_ctrl = ctrl  # pass the (unused) row through unchanged
         g_eff = ef_add(grad, ef_mem if use_ef else None)
         sent = chain.compress_tree(g_eff) if chain else g_eff
+        if use_chan:
+            delivered = alpha * d
+            new_net = finalize(delivered)
+        else:
+            delivered = alpha       # lossless: delivered IS the decision
+            new_net = net           # pass the (unused) row through
         if ef_mem is None:
-            return alpha, gain, sent, None, new_ctrl
-        if use_ef:
-            new_mem = ef_residual(g_eff, sent, alpha)
+            new_mem = None
+        elif use_ef:
+            # a dropped transmission folds its WHOLE payload back
+            new_mem = ef_residual(g_eff, sent, alpha,
+                                  delivered=d if use_chan else None)
         else:
             new_mem = jax.tree_util.tree_map(jax.numpy.zeros_like, ef_mem)
+        if use_net:
+            return alpha, gain, sent, new_mem, new_ctrl, delivered, new_net
         return alpha, gain, sent, new_mem, new_ctrl
 
     return epilogue
@@ -311,6 +364,12 @@ def build_stage_bank(
             seen[p] = len(bank)
             bank.append(p)
         index.append(seen[p])
+
+    def built_channel(p: CommPolicy):
+        # trivial (@ ideal) channels collapse to None — the branch then
+        # compiles exactly as a channel-free one
+        return p.channel_model() if p.needs_net else None
+
     return StageBank(
         policies=tuple(bank),
         agent_index=tuple(index),
@@ -321,4 +380,5 @@ def build_stage_bank(
         chains=tuple(p.chain() for p in bank),
         ef_flags=tuple(p.needs_ef for p in bank),
         adaptive_flags=tuple(p.is_adaptive for p in bank),
+        channels=tuple(built_channel(p) for p in bank),
     )

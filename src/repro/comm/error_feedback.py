@@ -31,19 +31,31 @@ def ef_add(grads, ef_memory):
     return jax.tree_util.tree_map(lambda g, m: g + m, grads, ef_memory)
 
 
-def ef_residual(grads, sent, alphas):
+def ef_residual(grads, sent, alphas, delivered=None):
     """New memory: (g − C(g)) for transmitting agents, 0 for silent ones.
 
     ``alphas`` is the (A,) transmit-decision vector matching the leaves'
     leading agent axis, or a scalar when ``grads``/``sent`` are a single
     agent's tree (the heterogeneous per-agent path).
+
+    ``delivered`` (a channel's {0,1} delivery indicator, same shape as
+    ``alphas``) folds LOST transmissions back whole: the residual
+    becomes ``(g − C(g)·d)·α`` — on a drop (``d=0``) the entire
+    intended payload ``g`` returns to memory, so nothing an agent owed
+    the wire is silently forgotten.  ``None`` (channel-free, the
+    static default) emits exactly the pre-channel ops.
     """
-    def mask(g):
-        a = alphas.astype(g.dtype)
+    def bcast(v, g):
+        a = v.astype(g.dtype)
         if a.ndim == 0:
             return a
         return a.reshape((-1,) + (1,) * (g.ndim - 1))
 
+    if delivered is None:
+        return jax.tree_util.tree_map(
+            lambda g, s: (g - s) * bcast(alphas, g), grads, sent
+        )
     return jax.tree_util.tree_map(
-        lambda g, s: (g - s) * mask(g), grads, sent
+        lambda g, s: (g - s * bcast(delivered, g)) * bcast(alphas, g),
+        grads, sent,
     )

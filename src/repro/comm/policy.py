@@ -45,6 +45,9 @@ class CommPolicy:
     )
     compressors: Tuple[StageSpec, ...] = ()
     error_feedback: bool = False
+    # optional lossy-wire model (repro.net.CHANNELS), the "@ channel"
+    # spec suffix; None (and the trivial "ideal") compile channel-free
+    channel: Optional[StageSpec] = None
 
     # ------------------------------------------------------------------
     # construction
@@ -61,8 +64,9 @@ class CommPolicy:
             raise ValueError(
                 f"expected a single policy, got {len(parts)} in {text!r}"
             )
-        trig, comps, ef = spec_mod.parse_policy(parts[0])
-        return cls(trigger=trig, compressors=comps, error_feedback=ef)
+        trig, comps, ef, chan = spec_mod.parse_policy(parts[0])
+        return cls(trigger=trig, compressors=comps, error_feedback=ef,
+                   channel=chan)
 
     @classmethod
     def parse(cls, text: PoliciesLike) -> Union["CommPolicy", Tuple["CommPolicy", ...]]:
@@ -98,7 +102,8 @@ class CommPolicy:
     # ------------------------------------------------------------------
     def to_spec(self) -> str:
         return spec_mod.render_policy(
-            self.trigger, self.compressors, self.error_feedback
+            self.trigger, self.compressors, self.error_feedback,
+            self.channel,
         )
 
     def __str__(self) -> str:
@@ -148,6 +153,30 @@ class CommPolicy:
         from repro.comm.triggers import ctrl_init_row
 
         return ctrl_init_row(self.trigger)
+
+    # ------------------------------------------------------------------
+    # channel (lossy-wire) stage
+    # ------------------------------------------------------------------
+    def channel_model(self):
+        """The built :class:`repro.net.ChannelModel`, or ``None`` when
+        the policy names no channel."""
+        if self.channel is None:
+            return None
+        from repro.net.channels import build_channel
+
+        return build_channel(self.channel)
+
+    @property
+    def needs_net(self) -> bool:
+        """Does this policy need the TrainState's ``net_state`` slot?
+        False for channel-free specs AND the trivial ``@ ideal`` —
+        the static property that keeps both compiling to the exact
+        pre-channel program."""
+        if self.channel is None:
+            return False
+        from repro.net.channels import spec_is_trivial
+
+        return not spec_is_trivial(self.channel)
 
 
 # ----------------------------------------------------------------------

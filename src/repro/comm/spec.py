@@ -3,12 +3,14 @@
 Grammar (whitespace-insensitive)::
 
     policies   := policy (";" policy)*          # ";" = per-agent list
-    policy     := trigger ("|" compressor)*
+    policy     := trigger ("|" compressor)* ["@" channel]
     trigger    := stage
     compressor := stage ["+ef"] | "ef"          # "+ef" enables error feedback
                                                # (requires ≥1 compressor —
                                                # EF of an uncompressed
                                                # gradient is a no-op)
+    channel    := stage                         # lossy-wire model
+                                               # (repro.net.CHANNELS)
     stage      := name ["(" arg ("," arg)* ")"]
     arg        := [key "="] value               # positional args resolve by
                                                # the registry's param order
@@ -19,6 +21,7 @@ string.  Examples::
     gain_lookahead(lam=0.1,decay=inv_t)|topk(0.05)|int8+ef
     grad_norm(mu=4.0,kernel=true)
     always|int8 ; never                        # heterogeneous, 2 agents
+    budget_dual(rate=0.5)|int8+ef @ bernoulli(p=0.2)   # lossy wire
 
 Rendering is canonical (named args only, registry declaration order,
 defaults omitted), so ``parse → str → parse`` is the identity.
@@ -26,7 +29,7 @@ defaults omitted), so ``parse → str → parse`` is the identity.
 from __future__ import annotations
 
 import re
-from typing import Any, List, Tuple
+from typing import Any, List, Optional, Tuple
 
 from repro.comm.compressors import COMPRESSORS
 from repro.comm.registry import StageSpec
@@ -81,8 +84,29 @@ def _parse_stage(text: str, registry) -> StageSpec:
     return registry.get(name).resolve(tuple(pos), kw)
 
 
-def parse_policy(text: str) -> Tuple[StageSpec, Tuple[StageSpec, ...], bool]:
-    """One policy string → (trigger, compressors, error_feedback)."""
+def parse_policy(text: str) -> Tuple[StageSpec, Tuple[StageSpec, ...], bool,
+                                     Optional[StageSpec]]:
+    """One policy string → (trigger, compressors, error_feedback, channel).
+
+    ``channel`` is the optional ``@``-suffixed lossy-wire model
+    (repro.net.CHANNELS), or ``None`` when the spec names no channel —
+    the default that keeps channel-free policies compiling unchanged.
+    """
+    channel: Optional[StageSpec] = None
+    if "@" in text:
+        body, chan_text = text.split("@", 1)
+        if "@" in chan_text:
+            raise ValueError(
+                f"at most one '@ channel' suffix per policy: {text!r}"
+            )
+        if not chan_text.strip():
+            raise ValueError(f"empty channel after '@' in {text!r}")
+        # lazy import: repro.net depends on repro.comm.registry, so the
+        # channel registry must not load at comm import time
+        from repro.net.channels import CHANNELS
+
+        channel = _parse_stage(chan_text, CHANNELS)
+        text = body
     stages = [s.strip() for s in text.split("|")]
     if not stages or not stages[0]:
         raise ValueError(f"empty policy spec {text!r}")
@@ -105,11 +129,12 @@ def parse_policy(text: str) -> Tuple[StageSpec, Tuple[StageSpec, ...], bool]:
             f"error feedback without a compressor stage is a no-op "
             f"(the residual of an uncompressed gradient is zero): {text!r}"
         )
-    return trigger, tuple(compressors), ef
+    return trigger, tuple(compressors), ef, channel
 
 
 def render_policy(trigger: StageSpec, compressors: Tuple[StageSpec, ...],
-                  error_feedback: bool) -> str:
+                  error_feedback: bool,
+                  channel: Optional[StageSpec] = None) -> str:
     parts = [TRIGGERS.render(trigger)]
     parts += [COMPRESSORS.render(c) for c in compressors]
     out = "|".join(parts)
@@ -117,6 +142,10 @@ def render_policy(trigger: StageSpec, compressors: Tuple[StageSpec, ...],
         # a compressor-less EF flag is a no-op (needs_ef is False) and
         # is rejected by the parser, so it is not rendered either
         out += "+ef"
+    if channel is not None:
+        from repro.net.channels import CHANNELS
+
+        out += f" @ {CHANNELS.render(channel)}"
     return out
 
 
@@ -133,8 +162,11 @@ def describe() -> str:
     here (and in ``--help`` surfaces built on this) with no extra
     wiring.  Exposed as ``repro.comm.describe()``.
     """
+    from repro.net.channels import CHANNELS
+
     lines = [
-        "spec grammar:  trigger(args) [|compressor(args)]... [+ef]",
+        "spec grammar:  trigger(args) [|compressor(args)]... [+ef] "
+        "[@ channel(args)]",
         '               ";" separates per-agent policies '
         "(heterogeneous networks)",
         "",
@@ -149,9 +181,15 @@ def describe() -> str:
     for name in COMPRESSORS.names():
         entry = COMPRESSORS.get(name)
         lines.append(f"  {entry.signature():<44} {entry.help}")
+    lines += ["", "channels (repro.net.CHANNELS):"]
+    for name in CHANNELS.names():
+        entry = CHANNELS.get(name)
+        lines.append(f"  {entry.signature():<44} {entry.help}")
     lines += [
         "",
-        "trailing '+ef' on the last compressor enables error feedback",
-        'example: "gain_lookahead(lam=0.1,decay=inv_t)|topk(0.05)|int8+ef"',
+        "trailing '+ef' on the last compressor enables error feedback;",
+        "'@ channel(args)' attaches a lossy-wire model (repro.net)",
+        'example: "gain_lookahead(lam=0.1,decay=inv_t)|topk(0.05)|int8+ef'
+        ' @ bernoulli(p=0.2)"',
     ]
     return "\n".join(lines)

@@ -451,12 +451,18 @@ def _budget_dual(args, ctx):
     beta = jnp.float32(args["beta"])
 
     def trig(params, grad, batch, local_loss, step, ctrl, scale=None, *,
-             pre=None):
+             pre=None, delivered=None):
         del step
         lam, sig, gmag = _ctrl_unpack(ctrl)
         alpha, gain = _budget_decision(
             gain_of, params, grad, batch, local_loss, lam, pre
         )
+        # the controller prices DELIVERED transmissions when a channel
+        # supplies its {0,1} delivery draw: under loss the observed
+        # rate drops and the dual step relaxes λ until delivered (not
+        # attempted) traffic meets the target.  None (channel-free, a
+        # static property) keeps the exact pre-channel ops.
+        obs = alpha if delivered is None else alpha * delivered
         # |gain| EWMA = the natural λ scale; updating it BEFORE the λ
         # step makes the very first rounds move at the problem's scale
         gmag = (1.0 - beta) * gmag + beta * jnp.abs(gain)
@@ -465,10 +471,10 @@ def _budget_dual(args, ctx):
         # TARGET — λ itself is closed-loop state
         lam = jnp.maximum(
             lam + _lam_step_scale(eta, gmag, lam)
-            * (alpha - _scaled(rate, scale)),
+            * (obs - _scaled(rate, scale)),
             0.0,
         )
-        sig = (1.0 - beta) * sig + beta * alpha  # realized-rate estimate
+        sig = (1.0 - beta) * sig + beta * obs  # realized-rate estimate
         return (
             TriggerOutput(alpha, gain.astype(jnp.float32)),
             jnp.stack([lam, sig, gmag]).astype(jnp.float32),
@@ -502,7 +508,7 @@ def _budget_window(args, ctx):
     ratio_for = ctx.ratio_for
 
     def trig(params, grad, batch, local_loss, step, ctrl, scale=None, *,
-             pre=None):
+             pre=None, delivered=None):
         del step
         from repro.comm.stats import dense_bits, dense_entries, structural_bytes
 
@@ -520,11 +526,16 @@ def _budget_window(args, ctx):
         alpha, gain = _budget_decision(
             gain_of, params, grad, batch, local_loss, lam, pre
         )
+        # DELIVERED bytes are what the window measures when a channel
+        # supplies its delivery draw (see budget_dual) — dropped
+        # transmissions cost the budget nothing, so the controller
+        # re-gates toward the delivered-byte target under loss
+        obs = alpha if delivered is None else alpha * delivered
         gmag = (1.0 - beta) * gmag + beta * jnp.abs(gain)
         # windowed-rate measurement of bytes/round, then the same dual
         # step as budget_dual with the byte error priced back into rate
         # units by the per-transmission cost
-        meas = meas + (alpha * cost - meas) / window
+        meas = meas + (obs * cost - meas) / window
         lam = jnp.maximum(
             lam + _lam_step_scale(eta, gmag, lam)
             * (meas - _scaled(target, scale)) / cost,

@@ -12,7 +12,7 @@ vmapped gradient prologue, so only the tier axis is sequential
 (benchmarks/dispatch_bench.py measures the tiers' step/compile times
 per dispatch path on these exact scenarios).
 """
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Tuple
 
 
@@ -219,4 +219,39 @@ def _adaptive_tiers(backbone: int, metro: int, edge: int, sensor: int,
 # benchmarks/adaptive_budget.py publishes.
 TIERED_M64_ADAPTIVE = TieredNetwork(
     "tiered_m64_adaptive", _adaptive_tiers(8, 16, 24, 16)
+)
+
+
+# ----------------------------------------------------------------------
+# Lossy-channel tier mixes (repro.net, benchmarks/lossy_channels.py)
+# ----------------------------------------------------------------------
+
+def _lossy(net: TieredNetwork, name: str, channel: str,
+           skip: Tuple[str, ...] = ("backbone",)) -> TieredNetwork:
+    """Attach an ``@ channel`` suffix to a network's metered tiers.
+
+    The backbone tier keeps its ideal wire by default (fibre links —
+    and keeping ONE lossless always-transmit tier guarantees eq. (10)'s
+    denominator never empties even at high loss severity).  The other
+    tiers share one channel model, so the stage bank still dedupes to
+    four branches.
+    """
+    tiers = tuple(
+        t if t.name in skip else replace(t, policy=f"{t.policy} @ {channel}")
+        for t in net.tiers
+    )
+    return TieredNetwork(name, tiers)
+
+
+# The lossy m=64 pairing benchmarks/lossy_channels.py publishes: the
+# SAME fleet layouts and per-tier budgets as TIERED_M64 /
+# TIERED_M64_ADAPTIVE, with 20% Bernoulli loss on every metered tier.
+# The fixed-λ mix was hand-tuned for an ideal wire, so under loss it
+# either starves (EF folds drops back but the gate never re-opens) or
+# violates its DELIVERED-byte budget; the adaptive mix prices delivered
+# bytes (repro.comm.triggers) and re-gates toward the same budgets.
+LOSSY_CHANNEL = "bernoulli(p=0.2,boost=0.05)"
+TIERED_M64_LOSSY = _lossy(TIERED_M64, "tiered_m64_lossy", LOSSY_CHANNEL)
+TIERED_M64_ADAPTIVE_LOSSY = _lossy(
+    TIERED_M64_ADAPTIVE, "tiered_m64_adaptive_lossy", LOSSY_CHANNEL
 )

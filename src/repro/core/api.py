@@ -62,11 +62,20 @@ from repro.comm import (
 )
 from repro.configs.base import TrainConfig
 from repro.core.aggregation import masked_mean
+from repro.net.channels import channel_round, net_init, stale_scale, tx_cost
 from repro.sharding.constraint import constrain_params
 from repro.utils.tree import tree_add_scaled
 
 METRIC_KEYS = ("loss", "comm_rate", "any_tx", "num_tx", "mean_gain",
                "grad_norm", "wire_bytes")
+
+# extra scalar metrics emitted ONLY by net_state-carrying (lossy-channel)
+# steps — the attempted/delivered wire-byte split repro.net introduces.
+# Channel-free programs keep exactly METRIC_KEYS (the launch-layer jit
+# out_shardings are keyed on the metric dict, so the key set is part of
+# the compiled program's signature).
+NET_METRIC_KEYS = ("wire_bytes_attempted", "num_delivered",
+                   "delivered_rate", "mean_staleness")
 
 # the heterogeneous-network execution paths, fastest first (the default
 # is DISPATCH_MODES[0]); benchmarks/run.py --dispatch validates against
@@ -126,6 +135,22 @@ def _warn_ctrl_state_missing():
     )
 
 
+def _warn_net_state_missing():
+    """Trace-time notice: the policy names a lossy channel but the
+    TrainState carries no per-agent channel-state slot (it was
+    initialized with a different policy), so the channel is OFF —
+    the step runs the exact lossless program."""
+    import warnings
+
+    warnings.warn(
+        "policy attaches a lossy channel (@ ...) but state.net_state is "
+        "None — pass the same policy to init_train_state to allocate "
+        "it; running over an IDEAL wire (no losses simulated)",
+        UserWarning,
+        stacklevel=2,
+    )
+
+
 class TrainState(NamedTuple):
     step: jax.Array
     params: Any
@@ -134,13 +159,19 @@ class TrainState(NamedTuple):
     # per-agent controller rows (A, CTRL_WIDTH) for adaptive budget
     # triggers; None (plain policies) threads through with zero extra ops
     ctrl_state: Optional[Any] = None
+    # per-agent channel rows (A, NET_WIDTH) = [staleness, aux, uid] for
+    # lossy-channel policies (repro.net); None (channel-free and
+    # @ ideal) threads through with zero extra ops
+    net_state: Optional[Any] = None
 
 
 def init_train_state(params, optimizer, cfg: TrainConfig,
                      policy=None) -> TrainState:
     """Build the initial state; EF memory is allocated iff the resolved
-    policy (or any per-agent policy) carries error feedback, and the
-    controller slot iff any trigger is adaptive (budget_dual/_window)."""
+    policy (or any per-agent policy) carries error feedback, the
+    controller slot iff any trigger is adaptive (budget_dual/_window),
+    and the channel slot iff any policy attaches a non-trivial lossy
+    channel (``@ bernoulli(...)`` etc. — ``@ ideal`` allocates none)."""
     resolved = normalize_policy(resolve_policy(cfg, policy), cfg.num_agents)
     policies = resolved if isinstance(resolved, tuple) else (resolved,)
     ef = ef_init(params, cfg.num_agents) if any(p.needs_ef for p in policies) else None
@@ -150,6 +181,7 @@ def init_train_state(params, optimizer, cfg: TrainConfig,
         opt_state=optimizer.init(params),
         ef_memory=ef,
         ctrl_state=ctrl_init(resolved, cfg.num_agents),
+        net_state=net_init(resolved, cfg.num_agents),
     )
 
 
@@ -166,7 +198,8 @@ def make_triggered_train_step(
     barriers: bool = True,
     agent_metrics: bool = False,
 ):
-    """Build ``train_step(state, batch, scale=None) -> (state, metrics)``.
+    """Build ``train_step(state, batch, scale=None, chan_scale=None)
+    -> (state, metrics)``.
 
     ``loss_fn(params, batch) -> scalar`` is the local empirical loss; the
     batch pytree's leaves must carry a leading agent axis of size
@@ -211,6 +244,22 @@ def make_triggered_train_step(
     open-loop at its ``lam0`` (with a ``UserWarning``), bit-identical
     to ``gain_lookahead(lam=lam0)``.
 
+    Policies may attach a lossy-channel model with an ``@ channel``
+    spec suffix (repro.net): the step then draws per-agent delivery
+    inside the compiled program (traced counter-based randomness — no
+    Python event loop), aggregates eq. (10) over DELIVERED messages,
+    folds dropped payloads back into EF memory whole, carries per-agent
+    staleness in ``state.net_state`` (escalating starved agents'
+    effective thresholds), and splits the wire metrics into attempted
+    vs delivered bytes (adaptive controllers price delivered).  The
+    optional traced ``chan_scale`` scales the channel's severity (loss
+    probability up, rate capacity down) — the second frontier-grid
+    coordinate, vmapped by ``repro.core.frontier`` into loss-rate ×
+    budget-scale surfaces.  Channel-free policies and ``@ ideal``
+    compile to the exact pre-channel program (``net_state`` is None —
+    the same static slot discipline as EF memory and the controllers);
+    a lossy policy stepped without the slot warns and runs ideal.
+
     ``barriers=False`` drops the ``optimization_barrier`` ULP pins that
     keep the two hetero dispatch paths bit-identical — required when
     the step runs under ``vmap`` (the barrier primitive has no batching
@@ -238,18 +287,23 @@ def make_triggered_train_step(
 
     def build_stages(pol: CommPolicy):
         trig = pol.build_trigger(loss_fn=loss_fn, probe_eps=cfg.lr, oracle=oracle)
-        return trig, pol.chain(), pol.needs_ef, pol.is_adaptive
+        # trivial (@ ideal) channels collapse to None at build time, so
+        # the traced program is exactly the channel-free one
+        chan = pol.channel_model() if pol.needs_net else None
+        return trig, pol.chain(), pol.needs_ef, pol.is_adaptive, chan
 
     if hetero is None:
-        trigger, chain, needs_ef, adaptive = build_stages(resolved)
+        trigger, chain, needs_ef, adaptive, channel = build_stages(resolved)
         chains = (chain,)
         needs_ctrl = adaptive
+        needs_net = channel is not None
     elif hetero_dispatch in ("hybrid", "switch"):
         bank = build_stage_bank(
             hetero, loss_fn=loss_fn, probe_eps=cfg.lr, oracle=oracle
         )
         needs_ef = bank.needs_ef
         needs_ctrl = bank.needs_ctrl
+        needs_net = bank.needs_net
         chains = bank.agent_chains()
         # the bank's deduped phase-1 gain precursors (probe forward
         # pass / HVP / ‖g‖²) — the hybrid path evaluates them inside
@@ -261,9 +315,10 @@ def make_triggered_train_step(
         scan_batch_free = bank.epilogue_batch_free
     else:
         stages = [build_stages(p) for p in hetero]
-        needs_ef = any(ef for _, _, ef, _ in stages)
-        needs_ctrl = any(ad for _, _, _, ad in stages)
-        chains = tuple(c for _, c, _, _ in stages)
+        needs_ef = any(ef for _, _, ef, _, _ in stages)
+        needs_ctrl = any(ad for _, _, _, ad, _ in stages)
+        needs_net = any(ch is not None for _, _, _, _, ch in stages)
+        chains = tuple(c for _, c, _, _, _ in stages)
 
     def objective(params, batch):
         main = loss_fn(params, batch)
@@ -296,39 +351,81 @@ def make_triggered_train_step(
         return main, g
 
     def trigger_call(trig, is_adaptive, use_ctrl, params, g, agent_batch,
-                     main, step, ctrl_row, scale):
+                     main, step, ctrl_row, scale, delivered=None):
         """One trigger evaluation under either protocol.
 
         Returns ``(alpha, gain, new_ctrl_row)`` where the row is
         ``None`` whenever the state carries no controller slot — the
         zero-extra-ops contract: plain policies (and adaptive policies
-        stepped open-loop) emit exactly the pre-controller program."""
+        stepped open-loop) emit exactly the pre-controller program.
+
+        ``delivered`` is the channel's {0,1} draw for this round (drawn
+        BEFORE the trigger, so it is independent of alpha); adaptive
+        triggers price ``alpha × delivered`` — delivered bytes — so the
+        controllers re-gate under loss.  Fixed triggers never see it
+        (their threshold is staleness-scaled upstream instead), and the
+        channel-free default (``None``) adds no kwarg — the trigger
+        traces its pre-channel ops."""
         if is_adaptive:
             row = ctrl_row if use_ctrl else trig.ctrl0
+            kw = {} if delivered is None else {"delivered": delivered}
             (alpha, gain), new_row = trig(
-                params, g, agent_batch, main, step, row, scale
+                params, g, agent_batch, main, step, row, scale, **kw
             )
             return alpha, gain, (new_row if use_ctrl else None)
         alpha, gain = trig(params, g, agent_batch, main, step, scale)
         return alpha, gain, (ctrl_row if use_ctrl else None)
 
-    def train_step(state: TrainState, batch, scale=None):
+    def train_step(state: TrainState, batch, scale=None, chan_scale=None):
+        # the channel engages only when the state actually carries the
+        # per-agent channel rows — same static slot discipline as EF and
+        # the controllers: a None slot traces the exact lossless program
+        use_net = needs_net and state.net_state is not None
+        if needs_net and not use_net:
+            _warn_net_state_missing()
         if hetero is None:
             use_ctrl = needs_ctrl and state.ctrl_state is not None
             if needs_ctrl and not use_ctrl:
                 _warn_ctrl_state_missing()
 
-            def per_agent(agent_batch, ctrl_row):
+            def per_agent(agent_batch, ctrl_row, net_row):
                 main, g = grad_prologue(state.params, agent_batch, False)
+                if use_net:
+                    # channel draw FIRST (delivery independent of this
+                    # round's alpha); the staleness factor escalates a
+                    # starved agent's effective threshold/target
+                    cost = tx_cost(g, chain)
+                    d, stale, finalize = channel_round(
+                        channel, net_row, state.step, chan_scale, cost
+                    )
+                    eff_scale = stale_scale(
+                        scale, channel.boost, stale, adaptive
+                    )
+                else:
+                    d, eff_scale = None, scale
                 alpha, gain, new_row = trigger_call(
                     trigger, adaptive, use_ctrl, state.params, g,
-                    agent_batch, main, state.step, ctrl_row, scale,
+                    agent_batch, main, state.step, ctrl_row, eff_scale,
+                    delivered=d if adaptive else None,
                 )
+                if use_net:
+                    delivered = alpha * d
+                    return (main, g, alpha, gain, new_row, d, delivered,
+                            finalize(delivered))
                 return main, g, alpha, gain, new_row
 
-            losses, grads, alphas, gains, new_ctrl = jax.vmap(
-                per_agent, in_axes=(0, 0 if use_ctrl else None)
-            )(batch, state.ctrl_state if use_ctrl else None)
+            in_axes = (0, 0 if use_ctrl else None, 0 if use_net else None)
+            outs = jax.vmap(per_agent, in_axes=in_axes)(
+                batch,
+                state.ctrl_state if use_ctrl else None,
+                state.net_state if use_net else None,
+            )
+            if use_net:
+                (losses, grads, alphas, gains, new_ctrl, ds, delivereds,
+                 new_net) = outs
+            else:
+                losses, grads, alphas, gains, new_ctrl = outs
+                ds, delivereds, new_net = None, alphas, state.net_state
             new_ctrl = new_ctrl if use_ctrl else state.ctrl_state
             if chain:
                 # EF engages only when the state actually carries memory
@@ -342,7 +439,8 @@ def make_triggered_train_step(
                     lambda g: jax.vmap(chain.compress)(g), g_eff
                 )
                 new_ef = (
-                    ef_residual(g_eff, sent, alphas)
+                    ef_residual(g_eff, sent, alphas,
+                                delivered=ds if use_net else None)
                     if use_ef else state.ef_memory
                 )
             else:
@@ -368,9 +466,10 @@ def make_triggered_train_step(
             use_ctrl = needs_ctrl and state.ctrl_state is not None
             if needs_ctrl and not use_ctrl:
                 _warn_ctrl_state_missing()
-            branches = bank.epilogues(has_mem, use_ctrl)
+            branches = bank.epilogues(has_mem, use_ctrl, use_net)
             mem = state.ef_memory if has_mem else None
             ctrl = state.ctrl_state if use_ctrl else None
+            net = state.net_state if use_net else None
 
             if hybrid:
                 use_pre = bool(prologue_fns)
@@ -428,6 +527,27 @@ def make_triggered_train_step(
                     )
 
                     def branch():
+                        # statically 5- vs 7-output (use_net) so the
+                        # channel-free trace is the exact old program;
+                        # chan_scale is an unbatched scalar the branch
+                        # closes over (the frontier vmap batches it one
+                        # level up)
+                        if use_net:
+                            def per_agent(main, g, pre_i, ab, mem_i,
+                                          ctrl_i, net_i):
+                                return epilogue(
+                                    state.params, g, ab, main, state.step,
+                                    mem_i, ctrl_i, scale, pre_i, net_i,
+                                    chan_scale,
+                                )
+
+                            return jax.vmap(per_agent)(
+                                losses[rows], take(grads),
+                                take(pres) if use_pre else None,
+                                None if scan_batch_free else take(batch),
+                                take(mem), take(ctrl), take(net),
+                            )
+
                         def per_agent(main, g, pre_i, ab, mem_i, ctrl_i):
                             return epilogue(
                                 state.params, g, ab, main, state.step,
@@ -463,40 +583,67 @@ def make_triggered_train_step(
                 merge = lambda tree: jax.tree_util.tree_map(
                     lambda x: x[sp, spos], tree
                 )
-                alphas, gains, sent, new_mem, new_ctrl = (
-                    merge(o) for o in outs
-                )
+                if use_net:
+                    (alphas, gains, sent, new_mem, new_ctrl, delivereds,
+                     new_net) = (merge(o) for o in outs)
+                else:
+                    alphas, gains, sent, new_mem, new_ctrl = (
+                        merge(o) for o in outs
+                    )
             else:
                 agent_idx = jnp.asarray(bank.agent_index, jnp.int32)
 
                 def agent_body(carry, inp):
-                    idx, agent_batch, mem_i, ctrl_i = inp
+                    if use_net:
+                        idx, agent_batch, mem_i, ctrl_i, net_i = inp
+                    else:
+                        idx, agent_batch, mem_i, ctrl_i = inp
                     main, g = grad_prologue(state.params, agent_batch, True)
                     operands = (
                         state.params, g, agent_batch, main, state.step,
                         mem_i,
                     )
-                    if use_ctrl or scale is not None:
+                    if use_ctrl or scale is not None or use_net:
                         # the epilogue's optional ctrl operand precedes
                         # scale, so it must be passed (possibly as the
                         # leafless None pytree) whenever scale is
                         operands = operands + (ctrl_i,)
-                    if scale is not None:
+                    if scale is not None or use_net:
                         # trailing operand feeds the epilogues' optional
                         # threshold scale (the frontier grid
                         # coordinate); arity stays uniform across the
                         # branch list either way because the epilogue
                         # declares it with a default
                         operands = operands + (scale,)
+                    if use_net:
+                        # fill the remaining defaults positionally up to
+                        # the channel tail: pre (unused on this path),
+                        # this agent's net row, and the channel-grid
+                        # coordinate (a scan-invariant scalar)
+                        operands = operands + (None, net_i, chan_scale)
+                        (alpha, gain, sent_i, new_mem_i, new_ctrl_i,
+                         delivered_i, new_net_i) = jax.lax.switch(
+                            idx, branches, *operands
+                        )
+                        return carry, (main, alpha, gain, sent_i,
+                                       new_mem_i, new_ctrl_i,
+                                       delivered_i, new_net_i)
                     alpha, gain, sent_i, new_mem_i, new_ctrl_i = \
                         jax.lax.switch(idx, branches, *operands)
                     return carry, (main, alpha, gain, sent_i, new_mem_i,
                                    new_ctrl_i)
 
-                _, (losses, alphas, gains, sent, new_mem, new_ctrl) = \
-                    jax.lax.scan(
-                        agent_body, 0.0, (agent_idx, batch, mem, ctrl)
-                    )
+                if use_net:
+                    _, (losses, alphas, gains, sent, new_mem, new_ctrl,
+                        delivereds, new_net) = jax.lax.scan(
+                            agent_body, 0.0,
+                            (agent_idx, batch, mem, ctrl, net),
+                        )
+                else:
+                    _, (losses, alphas, gains, sent, new_mem, new_ctrl) = \
+                        jax.lax.scan(
+                            agent_body, 0.0, (agent_idx, batch, mem, ctrl)
+                        )
             if barriers:
                 # same barrier as the unroll path below: pin the
                 # per-agent scalar stacks so both programs reduce a
@@ -508,6 +655,10 @@ def make_triggered_train_step(
                 )
             new_ef = new_mem if has_mem else state.ef_memory
             new_ctrl = new_ctrl if use_ctrl else state.ctrl_state
+            if not use_net:
+                # lossless: the delivery vector IS the decision vector
+                # (the same traced value — aggregation compiles unchanged)
+                delivereds, new_net = alphas, state.net_state
         else:
             # Heterogeneous "unroll": the PR-1 Python loop over agents —
             # compile cost O(m), kept as the bit-identical reference.
@@ -516,13 +667,25 @@ def make_triggered_train_step(
                 _warn_ctrl_state_missing()
             per = []
             ctrl_rows = []
-            for i, (trig_i, chain_i, ef_i, ad_i) in enumerate(stages):
+            net_rows = []
+            for i, (trig_i, chain_i, ef_i, ad_i, chan_i) in enumerate(stages):
                 agent_batch = jax.tree_util.tree_map(lambda x: x[i], batch)
                 main, g = grad_prologue(state.params, agent_batch, True)
+                use_chan = use_net and chan_i is not None
+                if use_chan:
+                    cost = tx_cost(g, chain_i)
+                    d, stale, finalize = channel_round(
+                        chan_i, state.net_state[i], state.step,
+                        chan_scale, cost,
+                    )
+                    eff_scale = stale_scale(scale, chan_i.boost, stale, ad_i)
+                else:
+                    d, eff_scale = None, scale
                 alpha, gain, new_row = trigger_call(
                     trig_i, ad_i, use_ctrl, state.params, g, agent_batch,
                     main, state.step,
-                    state.ctrl_state[i] if use_ctrl else None, scale,
+                    state.ctrl_state[i] if use_ctrl else None, eff_scale,
+                    delivered=d if (use_chan and ad_i) else None,
                 )
                 ctrl_rows.append(new_row)
                 use_ef = ef_i and state.ef_memory is not None
@@ -533,8 +696,19 @@ def make_triggered_train_step(
                 ) if use_ef else None
                 g_eff = ef_add(g, mem_i)
                 s = chain_i.compress_tree(g_eff) if chain_i else g_eff
-                resid = ef_residual(g_eff, s, alpha) if use_ef else None
-                per.append((main, alpha, gain, s, resid))
+                resid = ef_residual(
+                    g_eff, s, alpha, delivered=d if use_chan else None
+                ) if use_ef else None
+                if use_chan:
+                    delivered = alpha * d
+                    net_rows.append(finalize(delivered))
+                else:
+                    # channel-free agent (inside a lossy network or not):
+                    # delivery IS the decision and the row is untouched
+                    delivered = alpha
+                    if use_net:
+                        net_rows.append(state.net_state[i])
+                per.append((main, alpha, gain, s, resid, delivered))
 
             # materialize the stacked per-agent scalars: without the
             # barrier XLA re-associates mean(stack(scalars)) into a
@@ -549,6 +723,8 @@ def make_triggered_train_step(
             losses = stack([p[0] for p in per])
             alphas = stack([p[1] for p in per])
             gains = stack([p[2] for p in per])
+            delivereds = stack([p[5] for p in per]) if use_net else alphas
+            new_net = jnp.stack(net_rows) if use_net else state.net_state
             sent = jax.tree_util.tree_map(
                 lambda *leaves: jnp.stack(leaves), *[p[3] for p in per]
             )
@@ -569,7 +745,11 @@ def make_triggered_train_step(
                 jnp.stack(ctrl_rows) if use_ctrl else state.ctrl_state
             )
 
-        agg = masked_mean(sent, alphas)
+        # eq. (10) over DELIVERED messages: under a lossy channel the
+        # server can only average what arrived.  Channel-free paths bind
+        # ``delivereds`` to the same traced value as ``alphas``, so this
+        # line compiles exactly as the pre-channel ``masked_mean``.
+        agg = masked_mean(sent, delivereds)
         updates, opt_state = optimizer.update(
             agg, state.opt_state, state.params, state.step
         )
@@ -599,19 +779,41 @@ def make_triggered_train_step(
             ),
             "wire_bytes": stats.wire_bytes,
         }
+        if use_net:
+            # the attempted/delivered split: comm_rate/any_tx/num_tx and
+            # wire_bytes_attempted price the DECISIONS (what agents put
+            # on the wire); wire_bytes is redefined to what ARRIVED —
+            # the bytes the budget controllers are accountable for.
+            # Emitted only on net_state-carrying traces so channel-free
+            # programs keep the exact METRIC_KEYS signature.
+            dstats = comm_stats(delivereds, gains, structural=sb,
+                                ratios=ratios)
+            metrics["wire_bytes"] = dstats.wire_bytes
+            metrics["wire_bytes_attempted"] = stats.wire_bytes
+            metrics["num_delivered"] = dstats.num_tx
+            metrics["delivered_rate"] = dstats.comm_rate
+            metrics["mean_staleness"] = (
+                fold_sum(new_net[:, 0]) / new_net.shape[0]
+            )
         if agent_metrics:
             # per-agent vectors for tier-level accounting (a (1,)-long
-            # ratio tuple is the homogeneous case and broadcasts)
+            # ratio tuple is the homogeneous case and broadcasts);
+            # agent_bytes prices DELIVERED bytes under a channel —
+            # identical tracer to the decision vector without one
             metrics["agent_tx"] = alphas
             metrics["agent_bytes"] = per_agent_wire_bytes(
-                alphas, structural=sb, ratios=ratios
+                delivereds, structural=sb, ratios=ratios
             )
+            if use_net:
+                metrics["agent_delivered"] = delivereds
+                metrics["agent_staleness"] = new_net[..., 0]
             if needs_ctrl and new_ctrl is not None:
                 # the controllers' per-agent thresholds — the λ
                 # trajectories the adaptive benchmarks plot
                 metrics["agent_lam"] = new_ctrl[..., 0]
         return (
-            TrainState(state.step + 1, params, opt_state, new_ef, new_ctrl),
+            TrainState(state.step + 1, params, opt_state, new_ef,
+                       new_ctrl, new_net),
             metrics,
         )
 

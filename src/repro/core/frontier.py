@@ -34,6 +34,18 @@ keys.  The step is built with ``barriers=False`` (the ULP-pinning
 agent: ``agent_bytes`` lets tiered scenarios check per-tier wire
 budgets after the fact).
 
+A second, optional grid coordinate — ``chan_scales`` — sweeps channel
+severity for lossy-channel policies (repro.net): it multiplies each
+lane's loss probability (divides its rate capacity), so flattening a
+loss-rate × budget-scale meshgrid into two aligned ``(G,)`` vectors
+compiles the whole 2-D surface as the SAME single ``scan(vmap(step))``
+program (``in_axes=(0, None, 0, 0)``).  Channel state (the
+``net_state`` staleness/aux rows) stacks per lane like every other
+slot; the counter-based per-round randomness is keyed on (seed, step,
+agent), so lanes share one delivery stream — common random numbers
+across the grid.  ``chan_scales=None`` (the default) is the exact
+pre-channel three-argument engine.
+
 One compile per frontier: ``run_frontier`` traces a single
 ``scan(vmap(step))`` program regardless of ``len(scales)``; the
 heterogeneous ``lax.switch`` dispatch keeps its O(#distinct policies)
@@ -65,12 +77,16 @@ class FrontierResult(NamedTuple):
     ``state`` is the stacked final TrainState (leading ``(G,)`` axis on
     every leaf); ``metrics`` maps each train-step metric to its
     ``(G, K)`` trajectory (``(G, K, m)`` for the per-agent vectors);
-    ``scales`` is the ``(G,)`` operating-point grid.
+    ``scales`` is the ``(G,)`` operating-point grid.  ``chan_scales``
+    is the per-lane channel-severity grid, or ``None`` for frontiers
+    without a channel axis (the default — identical program to the
+    pre-channel engine).
     """
 
     state: TrainState
     metrics: Dict[str, jnp.ndarray]
     scales: jnp.ndarray
+    chan_scales: Optional[jnp.ndarray] = None
 
 
 def stack_states(state: TrainState, grid_size: int) -> TrainState:
@@ -104,12 +120,18 @@ def make_frontier_step(
     aux_loss_fn: Optional[Callable] = None,
     oracle: Optional[tuple] = None,
     hetero_dispatch: str = "hybrid",
+    channel_axis: bool = False,
 ):
     """Build ``batched_step(states, batch, scales) -> (states, metrics)``.
 
     The vmapped, barrier-free train step: lane ``i`` advances its own
     TrainState under threshold scale ``scales[i]`` on the shared
-    ``batch``.  Use :func:`run_frontier` for the whole-run loop.
+    ``batch``.  With ``channel_axis=True`` the returned function takes a
+    fourth ``chan_scales`` argument — the per-lane channel-severity
+    coordinate (loss-probability multiplier / capacity divisor) vmapped
+    alongside ``scales``, so loss-rate × budget-scale surfaces compile
+    as the same single program.  Use :func:`run_frontier` for the
+    whole-run loop.
     """
     step = make_triggered_train_step(
         loss_fn,
@@ -122,6 +144,8 @@ def make_frontier_step(
         barriers=False,
         agent_metrics=True,
     )
+    if channel_axis:
+        return jax.vmap(step, in_axes=(0, None, 0, 0))
     return jax.vmap(step, in_axes=(0, None, 0))
 
 
@@ -139,6 +163,7 @@ def run_frontier(
     aux_loss_fn: Optional[Callable] = None,
     oracle: Optional[tuple] = None,
     hetero_dispatch: str = "hybrid",
+    chan_scales=None,
 ) -> FrontierResult:
     """Run a whole loss-vs-communication frontier as ONE jitted program.
 
@@ -152,11 +177,27 @@ def run_frontier(
     round's per-agent batch inside the scan; every lane consumes the
     same batch.  ``steps`` rounds are scanned with keys split from
     ``key``.
+
+    ``chan_scales`` adds the channel-parameter grid axis: a ``(G,)``
+    per-lane channel-severity coordinate (must match ``scales`` in
+    length — flatten a loss-rate × budget-scale meshgrid into the two
+    aligned vectors), multiplying each lane's channel loss probability
+    (dividing its rate capacity).  Lanes share the per-round PRNG
+    stream (common random numbers: a delivery lost at severity s is
+    lost at every severity ≥ s), so surfaces are comparable point to
+    point.  ``None`` (the default) runs the exact pre-channel engine.
     """
     scales = jnp.asarray(scales, jnp.float32)
     if scales.ndim != 1:
         raise ValueError(f"scales must be a 1-D grid, got shape {scales.shape}")
     grid = int(scales.shape[0])
+    if chan_scales is not None:
+        chan_scales = jnp.asarray(chan_scales, jnp.float32)
+        if chan_scales.shape != scales.shape:
+            raise ValueError(
+                f"chan_scales must align with scales lane-for-lane: got "
+                f"{chan_scales.shape} vs {scales.shape}"
+            )
     batched_step = make_frontier_step(
         loss_fn,
         optimizer,
@@ -165,23 +206,41 @@ def run_frontier(
         aux_loss_fn=aux_loss_fn,
         oracle=oracle,
         hetero_dispatch=hetero_dispatch,
+        channel_axis=chan_scales is not None,
     )
 
-    def _run(params, scales, key):
-        state0 = init_train_state(params, optimizer, cfg, policy=policy)
-        states = stack_states(state0, grid)
-        keys = jax.random.split(key, steps)
+    if chan_scales is None:
+        def _run(params, scales, key):
+            state0 = init_train_state(params, optimizer, cfg, policy=policy)
+            states = stack_states(state0, grid)
+            keys = jax.random.split(key, steps)
 
-        def body(states, k):
-            states, metrics = batched_step(states, batch_fn(k), scales)
-            return states, metrics
+            def body(states, k):
+                states, metrics = batched_step(states, batch_fn(k), scales)
+                return states, metrics
 
-        return jax.lax.scan(body, states, keys)
+            return jax.lax.scan(body, states, keys)
 
-    states, metrics = jax.jit(_run)(params, scales, key)
+        states, metrics = jax.jit(_run)(params, scales, key)
+    else:
+        def _run(params, scales, chan_scales, key):
+            state0 = init_train_state(params, optimizer, cfg, policy=policy)
+            states = stack_states(state0, grid)
+            keys = jax.random.split(key, steps)
+
+            def body(states, k):
+                states, metrics = batched_step(
+                    states, batch_fn(k), scales, chan_scales
+                )
+                return states, metrics
+
+            return jax.lax.scan(body, states, keys)
+
+        states, metrics = jax.jit(_run)(params, scales, chan_scales, key)
     # scan stacks metrics (K, G, ...) — present them grid-major (G, K, ...)
     metrics = {k: jnp.moveaxis(v, 0, 1) for k, v in metrics.items()}
-    return FrontierResult(state=states, metrics=metrics, scales=scales)
+    return FrontierResult(state=states, metrics=metrics, scales=scales,
+                          chan_scales=chan_scales)
 
 
 def frontier_curve(result: FrontierResult) -> Dict[str, jnp.ndarray]:
@@ -205,4 +264,14 @@ def frontier_curve(result: FrontierResult) -> Dict[str, jnp.ndarray]:
     if "agent_lam" in m:
         # final per-agent controller thresholds (adaptive policies)
         curve["agent_lam"] = m["agent_lam"][:, -1]
+    if result.chan_scales is not None:
+        curve["chan_scale"] = result.chan_scales
+    if "wire_bytes_attempted" in m:
+        # lossy-channel frontiers: wire_bytes above is DELIVERED bytes;
+        # expose the attempted total and mean delivery alongside
+        curve["wire_bytes_attempted"] = jnp.sum(
+            m["wire_bytes_attempted"], axis=1
+        )
+        curve["delivered_rate"] = jnp.mean(m["delivered_rate"], axis=1)
+        curve["mean_staleness"] = m["mean_staleness"][:, -1]
     return curve

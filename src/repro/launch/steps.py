@@ -29,6 +29,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import InputShape, ModelConfig, TrainConfig, TriggerConfig
 from repro.core.api import (
     METRIC_KEYS,
+    NET_METRIC_KEYS,
     TrainState,
     make_triggered_train_step,
 )
@@ -201,16 +202,30 @@ def build_train_step(mesh, plan: RunPlan, *, compute_dtype="bfloat16", param_dty
     else:
         ctrl_abs = ctrl_specs = None
 
+    # lossy-channel policies (@ bernoulli etc.) carry a (m, NET_WIDTH)
+    # per-agent channel slot; same discipline as the controller slot
+    from repro.net import NET_WIDTH
+
+    use_net = any(p.needs_net for p in policies)
+    if use_net:
+        net_abs = jax.ShapeDtypeStruct(
+            (plan.train_cfg.num_agents, NET_WIDTH), jnp.float32
+        )
+        net_specs = P()
+    else:
+        net_abs = net_specs = None
+
     state_abs = TrainState(
         step=jax.ShapeDtypeStruct((), jnp.int32),
         params=params_abs,
         opt_state=opt_abs,
         ef_memory=None,
         ctrl_state=ctrl_abs,
+        net_state=net_abs,
     )
     state_specs = TrainState(
         step=P(), params=param_specs, opt_state=opt_specs, ef_memory=None,
-        ctrl_state=ctrl_specs,
+        ctrl_state=ctrl_specs, net_state=net_specs,
     )
 
     batch_abs = input_specs(cfg, plan.shape, num_agents=plan.num_agents)
@@ -219,6 +234,9 @@ def build_train_step(mesh, plan: RunPlan, *, compute_dtype="bfloat16", param_dty
 
     step_fn = make_triggered_train_step(model.loss_fn, optimizer, plan.train_cfg)
     metric_specs = {k: P() for k in METRIC_KEYS}
+    if use_net:
+        # net_state-carrying steps emit the attempted/delivered split
+        metric_specs.update({k: P() for k in NET_METRIC_KEYS})
     jitted = jax.jit(
         step_fn,
         in_shardings=_ns(mesh, (state_specs, batch_specs)),

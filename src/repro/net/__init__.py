@@ -1,0 +1,32 @@
+"""repro.net — lossy-channel network simulation.
+
+Channel models (``ideal`` / ``bernoulli`` / ``gilbert_elliott`` /
+``rate``) attach to CommPolicies with the ``@`` spec suffix and run as
+traced per-round randomness inside the single-compile train step; the
+per-agent ``[staleness, aux, uid]`` state lives in the TrainState's
+``net_state`` slot.  See repro.net.channels for the full model and
+DESIGN.md §7 for the layering.
+"""
+from repro.net.channels import (
+    CHANNELS,
+    NET_WIDTH,
+    ChannelModel,
+    build_channel,
+    channel_round,
+    net_init,
+    spec_is_trivial,
+    stale_scale,
+    tx_cost,
+)
+
+__all__ = [
+    "CHANNELS",
+    "NET_WIDTH",
+    "ChannelModel",
+    "build_channel",
+    "channel_round",
+    "net_init",
+    "spec_is_trivial",
+    "stale_scale",
+    "tx_cost",
+]

@@ -1,0 +1,307 @@
+"""Channel models — the lossy wire under every transmit decision.
+
+The paper studies learning *over networks*; this module gives the wire
+an actual failure model.  A :class:`ChannelModel` decides, per agent per
+round, whether an attempted transmission is DELIVERED — as traced
+per-round randomness inside the single-compile train step, not a
+Python-level event loop.  Channels attach to a CommPolicy with the
+``@`` spec suffix::
+
+    gain_lookahead(lam=0.1)|topk(0.05)|int8+ef @ bernoulli(p=0.2)
+
+Registered channels (``repro.net.CHANNELS``):
+
+* ``ideal`` — lossless.  TRIVIAL: a policy carrying it compiles to the
+  exact no-channel program (``needs_net`` stays False — the hard
+  bit-identity invariant of the subsystem).
+* ``bernoulli(p,boost,seed)`` — i.i.d. packet loss with probability
+  ``p`` per attempted transmission.
+* ``gilbert_elliott(p_gb,p_bg,p_loss_good,p_loss_bad,boost,seed)`` —
+  the classic two-state burst-loss Markov channel: good↔bad transitions
+  (``p_gb`` good→bad, ``p_bg`` bad→good) with state-dependent loss
+  probabilities.  The per-agent channel state is carried in the
+  TrainState's ``net_state`` slot (the ``aux`` column).
+* ``rate(bytes_per_round,burst,boost)`` — a deterministic token-bucket
+  capacity model: each round credits ``bytes_per_round`` (capped at
+  ``burst`` rounds' worth); a transmission is delivered iff the bucket
+  covers its static per-transmission wire cost, which is then debited.
+
+**State-slot layout.**  ``net_state`` is an ``(A, NET_WIDTH)`` f32
+array; per agent the row is ``[staleness, aux, uid]``:
+
+* ``staleness`` — rounds since this agent last *delivered* (silence
+  counts: the counter resets only on ``alpha × d = 1``),
+* ``aux`` — the channel's own scalar state (Gilbert-Elliott bad flag,
+  token-bucket credit; unused by bernoulli),
+* ``uid`` — the agent's index, folded into the per-round PRNG key so
+  every agent draws independent channel randomness from one seed.
+
+**Per-round randomness.**  The key for agent ``i`` at step ``k`` is
+``fold_in(fold_in(PRNGKey(seed), k), i)`` — fully determined by the
+channel's ``seed`` spec argument, so runs are reproducible, and shared
+across frontier lanes (common random numbers: every lane sees the same
+loss realization, the same convention as the shared per-round batch).
+
+**The grid coordinate.**  The train step's ``chan_scale`` operand (the
+frontier's channel-parameter axis) multiplies a stochastic channel's
+loss probability and DIVIDES the rate channel's capacity — ``0`` is
+lossless, ``1`` nominal, ``>1`` harsher.  ``chan_scale=None`` (the
+default) adds no ops.
+
+**Staleness escalation.**  Every non-trivial channel takes a ``boost``
+argument (default 0, statically skipped): with ``boost > 0`` an agent
+starved for ``s`` rounds has its trigger knob scaled by
+``f = 1 + boost·s`` — threshold ÷ f for fixed triggers (gate opens),
+target × f for adaptive ones (controller pushes harder) — so
+long-starved agents escalate instead of silently falling behind.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.registry import Registry, StageSpec
+
+CHANNELS = Registry("channel")
+
+# per-agent net-state row: [staleness, aux, uid] — one width for every
+# channel so heterogeneous banks keep a uniform (A, NET_WIDTH) slot
+NET_WIDTH = 3
+
+
+class ChannelModel(NamedTuple):
+    """One built channel: delivery draw + state update.
+
+    ``draw(key, aux, chan_scale, cost) -> (d, aux_mid)`` decides this
+    round's delivery ``d ∈ {0., 1.}`` BEFORE the trigger runs (so
+    controllers can price delivered transmissions) — ``d`` must not
+    depend on this round's transmit decision.  ``update(aux_mid,
+    delivered, cost) -> new_aux`` folds the realized ``delivered =
+    alpha × d`` back into the channel state (token-bucket debit).
+    ``cost`` is the static per-transmission wire bytes (a Python
+    float); stochastic channels ignore it.  Trivial channels (ideal)
+    carry no functions — policies holding one compile channel-free.
+    """
+
+    spec: StageSpec
+    trivial: bool = False
+    init_aux: float = 0.0
+    boost: float = 0.0
+    seed: int = 0
+    draw: Optional[Callable[..., Tuple[jax.Array, jax.Array]]] = None
+    update: Optional[Callable[..., jax.Array]] = None
+
+
+def build_channel(spec: StageSpec) -> ChannelModel:
+    """Resolve a channel StageSpec against the registry."""
+    entry = CHANNELS.get(spec.name)
+    return entry.builder(entry.full_args(spec), spec)
+
+
+def spec_is_trivial(spec: StageSpec) -> bool:
+    """Does this channel spec name a lossless (no-op) channel?"""
+    return build_channel(spec).trivial
+
+
+def _check_prob(name: str, value: float) -> jnp.ndarray:
+    if not 0.0 <= float(value) <= 1.0:
+        raise ValueError(f"{name} must be in [0, 1], got {value!r}")
+    return jnp.float32(value)
+
+
+def _scaled_loss(p, chan_scale):
+    """Loss probability × grid coordinate (no extra ops when None)."""
+    if chan_scale is None:
+        return p
+    return p * jnp.asarray(chan_scale, jnp.float32)
+
+
+@CHANNELS.register("ideal", doc="lossless wire (compiles channel-free)")
+def _ideal(args, spec):
+    return ChannelModel(spec, trivial=True)
+
+
+@CHANNELS.register(
+    "bernoulli",
+    params=(("p", 0.1), ("boost", 0.0), ("seed", 0)),
+    doc="i.i.d. packet loss: each attempt dropped with prob p",
+)
+def _bernoulli(args, spec):
+    p = _check_prob("bernoulli p", args["p"])
+
+    def draw(key, aux, chan_scale, cost):
+        del cost
+        u = jax.random.uniform(key)
+        d = (u >= _scaled_loss(p, chan_scale)).astype(jnp.float32)
+        return d, aux
+
+    def update(aux_mid, delivered, cost):
+        del delivered, cost
+        return aux_mid
+
+    return ChannelModel(spec, boost=float(args["boost"]),
+                        seed=int(args["seed"]), draw=draw, update=update)
+
+
+@CHANNELS.register(
+    "gilbert_elliott",
+    params=(("p_gb", 0.1), ("p_bg", 0.3), ("p_loss_good", 0.05),
+            ("p_loss_bad", 0.7), ("boost", 0.0), ("seed", 0)),
+    doc="two-state Markov burst loss (good/bad channel state per agent)",
+)
+def _gilbert_elliott(args, spec):
+    p_gb = _check_prob("gilbert_elliott p_gb", args["p_gb"])
+    p_bg = _check_prob("gilbert_elliott p_bg", args["p_bg"])
+    p_lg = _check_prob("gilbert_elliott p_loss_good", args["p_loss_good"])
+    p_lb = _check_prob("gilbert_elliott p_loss_bad", args["p_loss_bad"])
+
+    def draw(key, aux, chan_scale, cost):
+        del cost
+        k_state, k_loss = jax.random.split(key)
+        # transition FIRST (aux is last round's state), then draw the
+        # loss in the new state — aux ∈ {0.=good, 1.=bad}
+        p_to_bad = jnp.where(aux > 0.5, 1.0 - p_bg, p_gb)
+        bad = (jax.random.uniform(k_state) < p_to_bad).astype(jnp.float32)
+        p_loss = jnp.where(bad > 0.5, p_lb, p_lg)
+        u = jax.random.uniform(k_loss)
+        d = (u >= _scaled_loss(p_loss, chan_scale)).astype(jnp.float32)
+        return d, bad
+
+    def update(aux_mid, delivered, cost):
+        del delivered, cost
+        return aux_mid
+
+    return ChannelModel(spec, boost=float(args["boost"]),
+                        seed=int(args["seed"]), draw=draw, update=update)
+
+
+@CHANNELS.register(
+    "rate",
+    params=(("bytes_per_round", 128.0), ("burst", 4.0), ("boost", 0.0)),
+    doc="deterministic token bucket: bytes/round capacity with burst cap",
+)
+def _rate(args, spec):
+    bpr = float(args["bytes_per_round"])
+    burst = float(args["burst"])
+    if bpr <= 0.0:
+        raise ValueError(f"rate bytes_per_round must be positive, got {bpr!r}")
+    if burst < 1.0:
+        raise ValueError(f"rate burst must be >= 1, got {burst!r}")
+
+    def draw(key, aux, chan_scale, cost):
+        del key
+        # chan_scale DIVIDES capacity (harsher grid points carry less);
+        # 0 → infinite capacity (lossless), matching bernoulli's 0
+        cap = jnp.float32(bpr)
+        if chan_scale is not None:
+            cap = cap / jnp.asarray(chan_scale, jnp.float32)
+        credit = jnp.minimum(aux + cap, burst * cap)
+        d = (credit >= jnp.float32(cost)).astype(jnp.float32)
+        return d, credit
+
+    def update(aux_mid, delivered, cost):
+        return aux_mid - delivered * jnp.float32(cost)
+
+    # the bucket starts full at nominal capacity (a static float — the
+    # traced chan_scale cannot reach allocation time)
+    return ChannelModel(spec, init_aux=burst * bpr,
+                        boost=float(args["boost"]), draw=draw, update=update)
+
+
+# ----------------------------------------------------------------------
+# TrainState slot + per-round helpers (consumed by repro.comm.bank and
+# repro.core.api — the three dispatch paths share this logic)
+# ----------------------------------------------------------------------
+
+def net_init(policy, num_agents: int):
+    """The initial ``(num_agents, NET_WIDTH)`` net-state slot for a
+    (normalized) policy, or ``None`` when no agent's channel is
+    non-trivial — the ``None`` that keeps channel-free (and
+    ``@ ideal``) TrainStates byte-for-byte what they were."""
+    policies = policy if isinstance(policy, tuple) else (policy,)
+    if not any(p.needs_net for p in policies):
+        return None
+
+    def aux0(p) -> float:
+        model = p.channel_model()
+        return model.init_aux if (model is not None and not model.trivial) \
+            else 0.0
+
+    if len(policies) == 1:
+        auxes = [aux0(policies[0])] * num_agents
+    else:
+        auxes = [aux0(p) for p in policies]
+    rows = [[0.0, a, float(i)] for i, a in enumerate(auxes)]
+    return jnp.asarray(rows, jnp.float32)
+
+
+def tx_cost(grad, chain) -> float:
+    """One transmission's wire bytes: ONE agent's dense payload × the
+    policy's compression ratio — shapes/dtypes only, so a Python float,
+    static at trace time (the same pricing ``budget_window`` uses)."""
+    from repro.comm.stats import dense_bits, dense_entries, structural_bytes
+
+    cost = float(structural_bytes(grad, per_agent=False))
+    if chain:
+        cost *= chain.ratio_for(
+            dense_bits(grad), entries=dense_entries(grad, per_agent=False)
+        )
+    return cost
+
+
+def channel_round(model: ChannelModel, net_row, step, chan_scale,
+                  cost: float):
+    """One agent's channel draw for this round.
+
+    Returns ``(d, stale, finalize)``: the delivery indicator (drawn
+    BEFORE the trigger — independent of this round's alpha), the
+    current staleness (for :func:`stale_scale`), and
+    ``finalize(delivered) -> new_net_row`` which advances the staleness
+    counter (reset on delivery, +1 otherwise) and the channel state.
+    """
+    stale, aux, uid = net_row[0], net_row[1], net_row[2]
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(model.seed), step),
+        uid.astype(jnp.int32),
+    )
+    d, aux_mid = model.draw(key, aux, chan_scale, cost)
+
+    def finalize(delivered):
+        new_stale = (stale + 1.0) * (1.0 - delivered)
+        new_aux = model.update(aux_mid, delivered, cost)
+        return jnp.stack([new_stale, new_aux, uid])
+
+    return d, stale, finalize
+
+
+def stale_scale(scale, boost: float, stale, adaptive: bool):
+    """The staleness-escalated trigger knob scale.
+
+    ``f = 1 + boost·staleness``: fixed triggers see their threshold
+    DIVIDED by ``f`` (the gate opens as starvation grows), adaptive
+    triggers see their target MULTIPLIED by ``f`` (the controller asks
+    for more).  ``boost == 0`` (the default) is statically skipped —
+    zero extra ops.
+    """
+    if not boost:
+        return scale
+    f = 1.0 + jnp.float32(boost) * stale
+    if adaptive:
+        return f if scale is None else jnp.asarray(scale, jnp.float32) * f
+    inv = 1.0 / f
+    return inv if scale is None else jnp.asarray(scale, jnp.float32) * inv
+
+
+__all__ = [
+    "CHANNELS",
+    "NET_WIDTH",
+    "ChannelModel",
+    "build_channel",
+    "channel_round",
+    "net_init",
+    "spec_is_trivial",
+    "stale_scale",
+    "tx_cost",
+]

@@ -99,6 +99,28 @@ def test_describe_surfaces_help_lines():
     assert "[adaptive" in text
 
 
+def test_describe_covers_every_registry_with_help_and_signature():
+    """The no-drift promise of the catalogue: EVERY registered trigger,
+    compressor and channel carries a non-empty one-line help and a
+    renderable signature, and describe() surfaces all three registries
+    (a registration without doc would ship an undocumented spec
+    surface)."""
+    from repro.comm import COMPRESSORS
+    from repro.net import CHANNELS
+
+    text = describe()
+    assert "channels (repro.net.CHANNELS):" in text
+    for registry in (TRIGGERS, COMPRESSORS, CHANNELS):
+        names = registry.names()
+        assert names, f"empty registry {registry!r}"
+        for name in names:
+            entry = registry.get(name)
+            assert entry.help.strip(), f"{name}: empty help"
+            sig = entry.signature()
+            assert sig.startswith(name), f"{name}: bad signature {sig!r}"
+            assert entry.signature() in text, f"{name}: not in describe()"
+
+
 def test_simulator_rejects_adaptive_policies():
     with pytest.raises(ValueError, match="controller"):
         R.grid_from_specs(["budget_dual(rate=0.3)"])

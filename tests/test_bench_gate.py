@@ -216,17 +216,27 @@ def test_baseline_matches_the_ci_smoke_invocation():
             raw += toks
             collecting = line.rstrip().endswith("\\")
     # sequential parse: a "--dispatch MODE" flag puts the names that
-    # follow it (within the same invocation) under that lane
+    # follow it (within the same invocation) under that lane; a
+    # "--seed N" pair is a value flag, not a benchmark name (CI places
+    # it before --smoke, but the parser must not break if it moves)
     names, lanes, pending_lane, lane = [], {}, False, None
+    pending_seed = False
     for tok in raw:
         if tok == "<invocation>":
             lane, pending_lane = None, False
+            pending_seed = False
             continue
         if pending_lane:
             lane, pending_lane = tok, False
             continue
+        if pending_seed:
+            pending_seed = False
+            continue
         if tok == "--dispatch":
             pending_lane = True
+            continue
+        if tok == "--seed":
+            pending_seed = True
             continue
         names.append(tok)
         if lane:

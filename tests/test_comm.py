@@ -329,6 +329,41 @@ def test_sketch_wire_accounting_is_size_dependent():
         CommPolicy.parse("always|sketch(rows=0)").chain()
 
 
+def test_sketch_wire_accounting_edge_cases():
+    """The clamp boundary of the fixed-size payload model is EXACT: a
+    sketch(3,8) carries abs_entries=24 f32 counters, so entries=24 is
+    the break-even point (ratio 1.0, not clamped), 23 clamps, 25 is the
+    first fractional ratio — and a non-positive entry count is a loud
+    error, not a divide-by-zero or a silent clamp."""
+    chain = CommPolicy.parse("always|sketch(rows=3,cols=8)").chain()
+    fmt = chain.wire_format(32.0)
+    assert fmt.abs_entries == 24.0
+    # the ratio property refuses fixed-size payloads outright
+    with pytest.raises(ValueError, match="fixed-size"):
+        fmt.ratio
+    # entries == abs_entries: break-even, exactly 1.0 without clamping
+    assert fmt.ratio_at(24) == 1.0
+    # one below: kept falls back to the dense count — clamp engages
+    assert fmt.ratio_at(23) == 1.0
+    # one above: first genuinely fractional point, exact arithmetic
+    assert fmt.ratio_at(25) == pytest.approx(24 / 25)
+    assert chain.ratio_for(32.0, entries=25) == pytest.approx(24 / 25)
+    # entries=0 (and negatives) raise — both on the format and through
+    # the chain, so a benchmark passing an empty gradient fails loudly
+    for bad in (0, -1, 0.0):
+        with pytest.raises(ValueError, match="positive"):
+            fmt.ratio_at(bad)
+        with pytest.raises(ValueError, match="positive"):
+            chain.ratio_for(32.0, entries=bad)
+    # quantized counters: below the grid size the kept count falls back
+    # to the dense count, so the price floors at the int8 dense rate
+    # (8/32) instead of clamping to 1.0, and thins past the grid
+    q = CommPolicy.parse("always|sketch(rows=3,cols=8)|int8").chain()
+    assert q.ratio_for(32.0, entries=6) == pytest.approx(8 / 32)
+    assert q.ratio_for(32.0, entries=24) == pytest.approx(8 / 32)
+    assert q.ratio_for(32.0, entries=25) == pytest.approx(24 * 8 / (25 * 32))
+
+
 def test_sketch_spec_round_trips_and_trains():
     pol = CommPolicy.parse("gain_lookahead(lam=0.1)|sketch(rows=3,cols=8)+ef")
     assert CommPolicy.parse(str(pol)) == pol

@@ -1,0 +1,387 @@
+"""ISSUE-6 acceptance surface: the repro.net lossy-channel subsystem —
+``@ channel`` spec grammar, the ``net_state`` TrainState slot and its
+None-is-free contract (ideal / channel-free bit-identity, including
+under the frontier grid vmap), per-channel semantics (bernoulli,
+gilbert_elliott, rate), whole-gradient EF fold-back on drop, staleness
+escalation, delivered-byte controller pricing, and the frontier's
+``chan_scales`` severity axis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommPolicy
+from repro.configs.base import TrainConfig
+from repro.configs.paper_linreg import HETERO_M8, HETERO_M8_NET, LinRegConfig
+from repro.core import regression as R
+from repro.core.api import init_train_state, make_triggered_train_step
+from repro.core.frontier import frontier_curve, run_frontier
+from repro.net import (
+    NET_WIDTH,
+    build_channel,
+    net_init,
+    spec_is_trivial,
+    stale_scale,
+    tx_cost,
+)
+from repro.optim import optimizers as opt_lib
+
+TOY = LinRegConfig(name="toy", n=6, num_agents=4, samples_per_agent=8,
+                   stepsize=0.1, steps=6)
+
+# the four-policy mix of tests/test_frontier.py with a lossy wire on
+# the metered agents — backbone stays ideal (the _lossy convention)
+LOSSY_M4 = ("always",
+            "gain_lookahead(lam=1.0)|fp16 @ bernoulli(p=0.3,seed=3)",
+            "gain_lookahead(lam=2.0)|int8+ef @ bernoulli(p=0.3,seed=3)",
+            "gain_lookahead(lam=4.0)|topk(0.5)|int8+ef @ bernoulli(p=0.3,seed=3)")
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return R.make_problem(TOY, jax.random.key(0))
+
+
+def linreg_loss(params, batch):
+    xs, ys = batch
+    r = xs @ params["w"] - ys
+    return 0.5 * jnp.mean(r * r)
+
+
+def _params():
+    return {"w": jnp.zeros(TOY.n)}
+
+
+def _cfg(comm, num_agents=TOY.num_agents):
+    return TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                       num_agents=num_agents, comm=comm)
+
+
+def _run(cfg, problem, steps, state=None, **step_kw):
+    opt = opt_lib.from_config(cfg)
+    step = jax.jit(make_triggered_train_step(linreg_loss, opt, cfg,
+                                             **step_kw))
+    if state is None:
+        state = init_train_state(_params(), opt, cfg)
+    hist = []
+    for i in range(steps):
+        state, m = step(state, R.agent_batches(
+            problem, jax.random.fold_in(jax.random.key(7), i)))
+        hist.append({k: np.asarray(v) for k, v in m.items()})
+    return state, hist
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb)
+    )
+
+
+def _hist_equal(ha, hb):
+    return all(
+        set(ma) == set(mb)
+        and all(np.array_equal(ma[k], mb[k]) for k in ma)
+        for ma, mb in zip(ha, hb)
+    )
+
+
+# ----------------------------------------------------------------------
+# spec surface
+# ----------------------------------------------------------------------
+
+def test_channel_spec_round_trips():
+    pol = CommPolicy.parse(
+        "gain_lookahead(lam=0.1)|topk(0.05)|int8+ef @ bernoulli(p=0.2)")
+    assert pol.channel is not None and pol.channel.name == "bernoulli"
+    assert " @ bernoulli(p=0.2)" in str(pol)
+    assert CommPolicy.parse(str(pol)) == pol
+    # defaults render away; non-defaults survive the round trip
+    ge = CommPolicy.parse(
+        "always @ gilbert_elliott(p_gb=0.2,p_loss_bad=0.9,seed=4)")
+    assert CommPolicy.parse(str(ge)) == ge
+    # hetero: per-agent channels via ';'
+    specs = ("always", "always @ bernoulli(p=0.5)")
+    pols = tuple(CommPolicy.parse(s) for s in specs)
+    assert [p.needs_net for p in pols] == [False, True]
+
+
+def test_bad_channel_specs_error():
+    with pytest.raises(ValueError, match="unknown channel"):
+        CommPolicy.parse("always @ nope").channel_model()
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        CommPolicy.parse("always @ bernoulli(p=1.5)").channel_model()
+    with pytest.raises(ValueError, match="positive"):
+        CommPolicy.parse("always @ rate(bytes_per_round=0)").channel_model()
+    with pytest.raises(ValueError, match="burst"):
+        CommPolicy.parse("always @ rate(burst=0.5)").channel_model()
+
+
+def test_ideal_channel_is_statically_free():
+    """``@ ideal`` is the trivial channel: needs_net stays False, no
+    net_state is allocated, and the whole training run — params, every
+    metric — is byte-for-byte the channel-free program."""
+    assert spec_is_trivial(CommPolicy.parse("always @ ideal").channel)
+    for spec in ("always", "always @ ideal"):
+        pol = CommPolicy.parse(spec)
+        assert not pol.needs_net
+        assert net_init(pol, 4) is None
+    assert CommPolicy.parse("always @ bernoulli(p=0.2)").needs_net
+
+
+def test_ideal_and_channel_free_runs_are_bitwise_equal(problem):
+    base = "gain_lookahead(lam=0.5)|int8+ef"
+    s_plain, h_plain = _run(_cfg(base), problem, steps=5)
+    s_ideal, h_ideal = _run(_cfg(f"{base} @ ideal"), problem, steps=5)
+    assert s_ideal.net_state is None
+    assert _tree_equal(s_plain, s_ideal)
+    assert _hist_equal(h_plain, h_ideal)
+
+
+# ----------------------------------------------------------------------
+# net_state slot
+# ----------------------------------------------------------------------
+
+def test_net_state_layout_and_init():
+    pol = CommPolicy.parse("always|int8 @ rate(bytes_per_round=8,burst=2)")
+    ns = net_init(pol, 3)
+    assert ns.shape == (3, NET_WIDTH) and ns.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(ns[:, 0]), 0.0)  # staleness
+    # rate channel starts with a full bucket: burst × bytes_per_round
+    np.testing.assert_array_equal(np.asarray(ns[:, 1]), 16.0)
+    np.testing.assert_array_equal(np.asarray(ns[:, 2]), [0.0, 1.0, 2.0])
+    # hetero: per-agent aux follows each agent's own channel
+    pols = tuple(CommPolicy.parse(s) for s in (
+        "always", "always @ bernoulli(p=0.5)"))
+    ns2 = net_init(pols, 2)
+    np.testing.assert_array_equal(np.asarray(ns2[:, 1]), 0.0)
+
+
+def test_missing_net_state_warns_and_runs_lossless(problem):
+    """A lossy policy stepped with ``net_state=None`` (a TrainState from
+    another policy) warns and runs the exact lossless program."""
+    cfg = _cfg("always @ bernoulli(p=1.0)")
+    opt = opt_lib.from_config(cfg)
+    state = init_train_state(_params(), opt, cfg)._replace(net_state=None)
+    with pytest.warns(UserWarning, match="net_state"):
+        state2, hist = _run(cfg, problem, steps=3, state=state)
+    s_ideal, h_ideal = _run(_cfg("always"), problem, steps=3)
+    assert _tree_equal(state2.params, s_ideal.params)
+    assert _hist_equal(hist, h_ideal)
+
+
+# ----------------------------------------------------------------------
+# channel semantics
+# ----------------------------------------------------------------------
+
+def test_bernoulli_p0_matches_ideal_and_p1_freezes(problem):
+    s_ideal, _ = _run(_cfg("always"), problem, steps=4)
+    s_p0, h_p0 = _run(_cfg("always @ bernoulli(p=0.0)"), problem, steps=4)
+    np.testing.assert_array_equal(np.asarray(s_p0.params["w"]),
+                                  np.asarray(s_ideal.params["w"]))
+    # everything delivered: counters at zero, bytes attempted == billed
+    assert float(h_p0[-1]["mean_staleness"]) == 0.0
+    assert float(h_p0[-1]["delivered_rate"]) == 1.0
+    assert float(h_p0[-1]["wire_bytes"]) == float(
+        h_p0[-1]["wire_bytes_attempted"])
+    # p=1: nothing ever lands — SGD sees a zero aggregate every round
+    s_p1, h_p1 = _run(_cfg("always @ bernoulli(p=1.0)"), problem, steps=4)
+    np.testing.assert_array_equal(np.asarray(s_p1.params["w"]), 0.0)
+    assert float(h_p1[-1]["delivered_rate"]) == 0.0
+    assert float(h_p1[-1]["wire_bytes"]) == 0.0
+    assert float(h_p1[-1]["wire_bytes_attempted"]) > 0.0
+    # staleness counts every starved round
+    np.testing.assert_array_equal(np.asarray(s_p1.net_state[:, 0]), 4.0)
+
+
+def test_ef_folds_whole_gradient_back_on_drop(problem):
+    """A dropped transmission loses nothing: the FULL effective gradient
+    (compressed or not) folds into EF memory, so after K all-dropped
+    rounds the memory is exactly the sum of the raw per-agent gradients
+    (params never move — the aggregate is empty)."""
+    cfg = _cfg("always|int8+ef @ bernoulli(p=1.0)")
+    state, _ = _run(cfg, problem, steps=3)
+    grad_fn = jax.grad(linreg_loss)
+    expect = np.zeros((TOY.num_agents, TOY.n), np.float32)
+    for i in range(3):
+        batches = R.agent_batches(problem, jax.random.fold_in(
+            jax.random.key(7), i))
+        for a in range(TOY.num_agents):
+            b = jax.tree_util.tree_map(lambda x: x[a], batches)
+            expect[a] += np.asarray(grad_fn(_params(), b)["w"])
+    np.testing.assert_allclose(np.asarray(state.ef_memory["w"]), expect,
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(state.params["w"]), 0.0)
+
+
+def test_gilbert_elliott_state_machine():
+    model = build_channel(CommPolicy.parse(
+        "always @ gilbert_elliott(p_gb=0.0,p_bg=0.0,"
+        "p_loss_good=0.0,p_loss_bad=1.0)").channel)
+    key = jax.random.key(0)
+    # pinned good (p_gb=0): stays good, never loses
+    d, aux = model.draw(key, jnp.float32(0.0), None, 0.0)
+    assert float(d) == 1.0 and float(aux) == 0.0
+    # pinned bad (p_bg=0): stays bad, always loses
+    d, aux = model.draw(key, jnp.float32(1.0), None, 0.0)
+    assert float(d) == 0.0 and float(aux) == 1.0
+    # chan_scale=0 silences even the bad state (lossless grid point)
+    d, _ = model.draw(key, jnp.float32(1.0), jnp.float32(0.0), 0.0)
+    assert float(d) == 1.0
+
+
+def test_rate_token_bucket_is_deterministic():
+    """bytes_per_round=4 against a cost-8 payload with burst=2: the
+    bucket (cap 8) covers a transmission exactly every other round —
+    and with burst=1 (cap 4) the payload NEVER fits."""
+    model = build_channel(CommPolicy.parse(
+        "always @ rate(bytes_per_round=4,burst=2)").channel)
+    aux = jnp.float32(model.init_aux)  # starts full: 8 bytes
+    got = []
+    for _ in range(6):
+        d, aux_mid = model.draw(jax.random.key(0), aux, None, 8.0)
+        got.append(float(d))
+        aux = model.update(aux_mid, d, 8.0)
+    assert got == [1.0, 0.0, 1.0, 0.0, 1.0, 0.0]
+    narrow = build_channel(CommPolicy.parse(
+        "always @ rate(bytes_per_round=4,burst=1)").channel)
+    aux = jnp.float32(narrow.init_aux)
+    for _ in range(3):
+        d, aux_mid = narrow.draw(jax.random.key(0), aux, None, 8.0)
+        assert float(d) == 0.0
+        aux = narrow.update(aux_mid, d, 8.0)
+
+
+def test_tx_cost_prices_one_agent_dense_times_ratio():
+    # tx_cost sees ONE agent's gradient (inside the per-agent vmap)
+    g = {"w": jnp.zeros(10)}  # 10 features, fp32 → 40 dense bytes
+    assert tx_cost(g, None) == 40.0
+    chain = CommPolicy.parse("always|int8").chain()
+    assert tx_cost(g, chain) == 10.0
+    sk = CommPolicy.parse("always|sketch(rows=3,cols=8)").chain()
+    # fixed-size sketch: 24 f32 counters > 10 entries → clamped at dense
+    assert tx_cost(g, sk) == 40.0
+
+
+def test_stale_scale_escalates_fixed_down_adaptive_up():
+    s = jnp.float32(2.0)
+    # boost=0 is a static no-op — the very object passes through
+    assert stale_scale(s, 0.0, jnp.float32(5.0), adaptive=False) is s
+    assert stale_scale(None, 0.0, jnp.float32(5.0), adaptive=True) is None
+    f = 1.0 + 0.5 * 4.0  # boost=0.5, staleness=4
+    np.testing.assert_allclose(
+        float(stale_scale(s, 0.5, jnp.float32(4.0), adaptive=False)),
+        2.0 / f)
+    np.testing.assert_allclose(
+        float(stale_scale(s, 0.5, jnp.float32(4.0), adaptive=True)),
+        2.0 * f)
+    np.testing.assert_allclose(
+        float(stale_scale(None, 0.5, jnp.float32(4.0), adaptive=True)), f)
+
+
+def test_controller_prices_delivered_not_attempted(problem):
+    """budget_dual under a p=1 channel observes ZERO delivered rate, so
+    its dual variable λ falls (gate opens) relative to the same
+    controller on an ideal wire — the delivered-byte pricing loop."""
+    base = "budget_dual(rate=0.3,lam0=0.5)|int8"
+    _, h_ideal = _run(_cfg(base), problem, steps=8, agent_metrics=True)
+    _, h_lossy = _run(_cfg(f"{base} @ bernoulli(p=1.0)"), problem,
+                      steps=8, agent_metrics=True)
+    lam_ideal = float(h_ideal[-1]["agent_lam"].mean())
+    lam_lossy = float(h_lossy[-1]["agent_lam"].mean())
+    assert lam_lossy < lam_ideal
+
+
+# ----------------------------------------------------------------------
+# dispatch paths under loss
+# ----------------------------------------------------------------------
+
+def test_lossy_cross_dispatch_agrees(problem):
+    """hybrid/switch/unroll under a lossy mix: parameters agree to
+    float tolerance (the α·d chain fuses differently per path) while
+    the delivery indicators and staleness counters — the integer-valued
+    channel realization — stay EXACT across all three."""
+    runs = {}
+    for mode in ("hybrid", "switch", "unroll"):
+        runs[mode] = _run(_cfg(LOSSY_M4), problem, steps=5,
+                          hetero_dispatch=mode, agent_metrics=True)
+    s_ref, h_ref = runs["hybrid"]
+    for mode in ("switch", "unroll"):
+        s, h = runs[mode]
+        np.testing.assert_allclose(np.asarray(s.params["w"]),
+                                   np.asarray(s_ref.params["w"]),
+                                   rtol=1e-5, atol=1e-6)
+        for m_ref, m in zip(h_ref, h):
+            np.testing.assert_array_equal(m["agent_delivered"],
+                                          m_ref["agent_delivered"])
+            np.testing.assert_array_equal(m["agent_staleness"],
+                                          m_ref["agent_staleness"])
+
+
+# ----------------------------------------------------------------------
+# frontier: the chan_scales severity axis
+# ----------------------------------------------------------------------
+
+def _frontier(cfg, problem, scales, steps=4, chan_scales=None, **kw):
+    opt = opt_lib.from_config(cfg)
+    return run_frontier(
+        linreg_loss, opt, cfg, _params(), scales=scales, steps=steps,
+        batch_fn=lambda k: R.agent_batches(problem, k),
+        key=jax.random.key(11), chan_scales=chan_scales, **kw)
+
+
+def test_chan_scales_validation(problem):
+    cfg = _cfg("always @ bernoulli(p=0.5)")
+    with pytest.raises(ValueError, match="align"):
+        _frontier(cfg, problem, scales=[1.0, 1.0], chan_scales=[1.0])
+
+
+def test_chan_scale_zero_lane_is_lossless(problem):
+    """severity 0 multiplies the loss probability to nothing: that lane
+    delivers every attempted byte, inside the same compiled grid as a
+    lossy lane.  (It is the channel-carrying PROGRAM with d=1 — only
+    ``@ ideal`` promises the bitwise channel-free trace, so parameters
+    match the no-channel frontier to float tolerance, not bit-for-bit.)"""
+    cfg = _cfg("gain_lookahead(lam=0.5)|int8+ef @ bernoulli(p=0.4)")
+    res = _frontier(cfg, problem, scales=[1.0, 1.0], chan_scales=[0.0, 1.0])
+    curve = frontier_curve(res)
+    assert set(curve) >= {"chan_scale", "wire_bytes_attempted",
+                          "delivered_rate", "mean_staleness"}
+    np.testing.assert_array_equal(np.asarray(res.chan_scales), [0.0, 1.0])
+    assert float(curve["delivered_rate"][0]) == 1.0
+    assert float(curve["wire_bytes"][0]) == float(
+        curve["wire_bytes_attempted"][0])
+    base = _frontier(_cfg("gain_lookahead(lam=0.5)|int8+ef"), problem,
+                     scales=[1.0])
+    np.testing.assert_allclose(
+        np.asarray(res.state.params["w"][0]),
+        np.asarray(base.state.params["w"][0]), rtol=1e-6)
+    assert base.chan_scales is None
+    assert "delivered_rate" not in frontier_curve(base)
+
+
+def test_ideal_bitwise_under_frontier_grid_vmap():
+    """The m=8 tier mix, plain vs ``@ ideal`` on every tier, under the
+    frontier grid vmap: final states and every metric trajectory are
+    bitwise equal (the benchmark's gated claim repeats this for every
+    TIER_MIXES fleet at m=64)."""
+    problem = R.make_problem(HETERO_M8, jax.random.key(30))
+
+    def run_with(policies):
+        cfg = TrainConfig(lr=HETERO_M8.stepsize, optimizer="sgd",
+                          num_agents=HETERO_M8.num_agents, comm=policies)
+        opt = opt_lib.from_config(cfg)
+        return run_frontier(
+            linreg_loss, opt, cfg, {"w": jnp.zeros(HETERO_M8.n)},
+            scales=[0.7, 1.0], steps=4,
+            batch_fn=lambda k: R.agent_batches(problem, k),
+            key=jax.random.key(31))
+
+    plain = HETERO_M8_NET.policies(lam_base=1.0)
+    rp = run_with(plain)
+    ri = run_with(tuple(f"{p} @ ideal" for p in plain))
+    assert ri.state.net_state is None
+    assert _tree_equal(rp.state, ri.state)
+    assert set(rp.metrics) == set(ri.metrics)
+    assert all(_tree_equal(rp.metrics[k], ri.metrics[k]) for k in rp.metrics)

@@ -21,6 +21,12 @@ green artifacts.  The baseline pins, per benchmark:
 * ``wire_ratio``     — ``{"dense_key", "bytes_key", "bounds"}``: every
                        ``bytes_key`` value divided by the payload's
                        ``dense_key`` must land in ``bounds``
+* ``floors``         — a list of ``{"key", "min"}`` specs: every
+                       numeric value (recursively collected) under
+                       ``key`` must be >= ``min`` — the throughput
+                       gate (e.g. a rounds/sec collapse in the sharded
+                       train step reddens CI even though the smoke
+                       payload is structurally clean)
 * ``lanes``          — a list of dispatch-mode lanes (e.g. ``["switch",
                        "hybrid"]``): the CI job runs the benchmark once
                        per lane via ``benchmarks.run --dispatch MODE``,
@@ -110,6 +116,16 @@ def check_one(name: str, payload: dict, spec: dict) -> list:
         bad = [v for v in vals if not math.isfinite(v)]
         if bad:
             errs.append(f"non-finite value(s) under {k!r}: {bad[:3]}")
+    for fl in spec.get("floors", []):
+        vals = numbers_under(payload, fl["key"])
+        if not vals:
+            errs.append(f"no numeric values found under {fl['key']!r}")
+        bad = [v for v in vals if v < fl["min"]]
+        if bad:
+            errs.append(
+                f"value(s) under {fl['key']!r} below floor {fl['min']}: "
+                f"{[round(v, 4) for v in bad[:3]]}"
+            )
     wr = spec.get("wire_ratio")
     if wr:
         dense = payload.get(wr["dense_key"])

@@ -17,15 +17,42 @@ the benchmarks that take one — their artifacts gain a ``_MODE`` name
 suffix so CI can gate each lane separately; benchmarks without the knob
 are skipped loudly, mirroring ``--smoke``.  ``--seed N`` re-keys the
 benchmarks whose randomness takes a seed (the lossy-channel delivery
-stream) and skips the rest loudly, same contract.  Dry-run-derived tables
-(roofline) read cached JSONs from ``experiments/dryrun`` — run ``python
--m repro.launch.dryrun --all`` first if missing."""
+stream) and skips the rest loudly, same contract.  ``--devices N``
+forces an N-device host platform (``--xla_force_host_platform_device_
+count``) for the fleet-sharding benchmarks — it MUST take effect before
+jax is imported, so it is parsed at module top, below; benchmarks that
+do not take a ``devices`` knob are skipped loudly under it.  Dry-run-
+derived tables (roofline) read cached JSONs from ``experiments/dryrun``
+— run ``python -m repro.launch.dryrun --all`` first if missing."""
 from __future__ import annotations
 
 import inspect
+import os
 import sys
 import time
 import traceback
+
+# --devices must be applied BEFORE the benchmark imports below pull in
+# jax (the host platform device count is fixed at backend init).  Same
+# loud-typo contract as --dispatch/--seed: a missing or non-positive-
+# integer value fails on stderr with rc 2 before anything runs.
+DEVICES = None
+if "--devices" in sys.argv:
+    _at = sys.argv.index("--devices")
+    _val = sys.argv[_at + 1] if _at + 1 < len(sys.argv) else None
+    try:
+        DEVICES = int(_val)
+        if DEVICES < 1:
+            raise ValueError
+    except (TypeError, ValueError):
+        print(f"--devices expects a positive integer, got {_val!r}",
+              file=sys.stderr)
+        sys.exit(2)
+    del sys.argv[_at:_at + 2]
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={DEVICES}"
+    ).strip()
 
 from benchmarks import (
     adaptive_budget,
@@ -38,6 +65,7 @@ from benchmarks import (
     lambda_decay,
     lossy_channels,
     roofline_table,
+    shard_scale,
     theory_bounds,
     tiered_m64,
     triggered_lm,
@@ -55,6 +83,7 @@ ALL = {
     "adaptive_budget": adaptive_budget.run,  # beyond-paper: closed-loop λ
     "lossy_channels": lossy_channels.run,  # beyond-paper: lossy wires (repro.net)
     "dispatch_bench": dispatch_bench.run,  # unroll/switch/hybrid step+compile
+    "shard_scale": shard_scale.run,    # fleet sharding vs single-device vmap
     "triggered_lm": triggered_lm.run,  # beyond-paper: trigger on real arch
     "kernel_bench": kernel_bench.run,  # kernel traffic model
     "roofline_table": roofline_table.run,  # §Roofline from dry-run cache
@@ -96,6 +125,10 @@ def main() -> int:
     args = sys.argv[1:]
     if "--list" in args:
         stray = [a for a in args if a != "--list"]
+        if DEVICES is not None:
+            # --devices was consumed at module top; keep the --list
+            # contract honest anyway
+            stray.append(f"--devices {DEVICES}")
         if stray:
             # same loud-typo contract as the run path: --list takes no
             # other arguments, so reject them instead of silently
@@ -175,6 +208,14 @@ def main() -> int:
             print(f"\n===== {name} =====\n[{name}] SKIPPED: no seed knob",
                   flush=True)
             continue
+        if DEVICES is not None and (
+                "devices" not in inspect.signature(fn).parameters):
+            # and for --devices: an unsharded benchmark timed on a
+            # carved-up host platform would report numbers nobody asked
+            # for — skip it loudly instead
+            print(f"\n===== {name} =====\n[{name}] SKIPPED: no devices "
+                  f"knob", flush=True)
+            continue
         print(f"\n===== {name} =====", flush=True)
         t0 = time.time()
         ran += 1
@@ -184,6 +225,8 @@ def main() -> int:
                 kw["dispatch"] = dispatch
             if seed is not None:
                 kw["seed"] = seed
+            if DEVICES is not None:
+                kw["devices"] = DEVICES
             fn(verbose=True, **kw)
             print(f"[{name}] OK in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:
@@ -192,7 +235,7 @@ def main() -> int:
             traceback.print_exc()
     skipped = len(names) - ran
     print(f"\n{ran - len(failures)}/{ran} benchmarks passed"
-          + (f" ({skipped} skipped: no smoke mode / no dispatch knob)"
+          + (f" ({skipped} skipped: no smoke/dispatch/seed/devices knob)"
              if skipped else ""))
     # a run that executed nothing (every name skipped) must not go green
     return 1 if failures or ran == 0 else 0

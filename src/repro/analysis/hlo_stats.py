@@ -94,6 +94,33 @@ def total_wire_bytes(stats: Dict[str, dict]) -> int:
     return sum(s["wire_bytes"] for s in stats.values())
 
 
+_HLO_RESULT_RE = re.compile(r"%?[\w.\-]+\s*=\s*(\w+)\[([\d,]*)\]")
+_MLIR_TENSOR_RE = re.compile(r"tensor<(\d+(?:x\d+)*)x[a-z]\w*>")
+
+
+def shape_census(ir_text: str) -> Dict[tuple, int]:
+    """Count array-buffer shapes (dim tuples) appearing in an IR dump.
+
+    Accepts both HLO text (``%x = f32[4,58] op(...)`` — result shapes
+    only) and StableHLO/MLIR (every ``tensor<4x58xf32>`` mention).  The
+    census is a trace-level materialization check: a padded epilogue
+    layout shows up as ``(P, s_max, ...)`` buffers that a
+    correctly-sized blocked layout never creates, so tests can assert a
+    shape's absence without running the program.
+    """
+    counts: Dict[tuple, int] = defaultdict(int)
+    for line in ir_text.splitlines():
+        m = _HLO_RESULT_RE.match(line.strip())
+        if m:
+            dtype, dims = m.groups()
+            if dtype in _DTYPE_BYTES and dims:
+                counts[tuple(int(d) for d in dims.split(","))] += 1
+            continue
+        for dims in _MLIR_TENSOR_RE.findall(line):
+            counts[tuple(int(d) for d in dims.split("x"))] += 1
+    return dict(counts)
+
+
 def scan_flops_note(hlo_text: str) -> Dict[str, int]:
     """Aux diagnostics: count ops that hint at remat/layout waste."""
     counts = {"transpose": 0, "reshape": 0, "while": 0, "fusion": 0}

@@ -28,6 +28,9 @@ from repro.comm.compressors import (
     WireFormat,
     build_compressor,
     chain_from_specs,
+    sketch_decode,
+    sketch_encode,
+    sketch_params,
 )
 from repro.comm.error_feedback import ef_add, ef_init, ef_residual
 from repro.comm.policy import (
@@ -95,6 +98,9 @@ __all__ = [
     "normalize_policy",
     "per_agent_wire_bytes",
     "resolve_policy",
+    "sketch_decode",
+    "sketch_encode",
+    "sketch_params",
     "spec_is_adaptive",
     "structural_bytes",
     "trigger_spec_from_config",

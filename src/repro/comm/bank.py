@@ -49,10 +49,11 @@ sees the same operand count, which is what ``lax.switch`` requires.
 has no controller state simply passes ``ctrl=None`` through.)
 
 The train step consumes the branch list two ways.  The hybrid default
-scans ``lax.switch`` over the DISTINCT POLICIES — branch ``p`` vmaps
-its epilogue over its own agents' rows (:meth:`StageBank.policy_groups`
-supplies the static gather/merge layout, padded to the largest group) —
-so comm work is agent-parallel and only the policy axis is sequential.
+loops over the DISTINCT POLICIES — branch ``p`` vmaps its epilogue
+over its own agents' contiguous sorted-by-policy block
+(:meth:`StageBank.policy_blocks` supplies the static gather/merge
+layout: correctly-sized blocks, never padded) — so comm work is
+agent-parallel and only the policy axis is sequential.
 The pre-hybrid ``"switch"`` path instead runs ``lax.switch(idx,
 epilogues, ...)`` inside a ``lax.scan`` over the AGENT axis.  Either
 way trace/compile cost is O(#distinct policies), not O(m), and because
@@ -177,35 +178,33 @@ class StageBank:
             for t in self.triggers
         )
 
-    def policy_groups(self) -> Tuple[Tuple[Tuple[int, ...], ...],
-                                     Tuple[int, ...], Tuple[int, ...]]:
-        """Static agent-group layout for the policy-axis epilogue scan.
+    def policy_blocks(self) -> Tuple[Tuple[Tuple[int, ...], ...],
+                                     Tuple[int, ...]]:
+        """Static sort-by-policy layout for the blocked epilogue dispatch.
 
-        The hybrid dispatch scans the DISTINCT-POLICY axis (P
-        iterations), each ``lax.switch`` branch running its policy's
-        epilogue vmapped over the agents that actually carry that
-        policy.  Branch operand/result shapes must be uniform for
-        ``lax.switch``, so every group is padded to the largest group
-        size by repeating its first agent (the duplicate rows compute
-        identical, discarded values).  Returns ``(padded_rows, sel_p,
-        sel_pos)``: ``padded_rows[p]`` are branch ``p``'s agent rows
-        (padded, length ``max group size``), and agent ``i``'s true
-        result lives at ``[sel_p[i], sel_pos[i]]`` of the scan-stacked
-        ``(P, s_max, ...)`` outputs — a static gather, so the merge is
-        exact (no arithmetic touches the selected values).
+        The hybrid dispatch runs each bank policy's epilogue vmapped
+        over exactly the agents that carry it — a contiguous,
+        correctly-sized block per policy.  Returns ``(block_rows,
+        inv)``: ``block_rows[p]`` are branch ``p``'s agent indices
+        (agent order within the block, never padded), and ``inv[i]`` is
+        agent ``i``'s position in the concatenation of the blocks, so
+        ``concat(outs)[inv]`` restores agent order.  Both gathers are
+        static and arithmetic-free, so the merge is exact.
+
+        This replaced the earlier padded-group layout (every group
+        padded to the largest by repeating its first agent): padding is
+        harmless at balanced m=64 but pathological for one-big-tier
+        fleets, where a 90%-owner policy forces every other branch to
+        materialize and compute ~0.9·m discarded duplicate rows.
         """
         rows: list = [[] for _ in self.policies]
         for i, p in enumerate(self.agent_index):
             rows[p].append(i)
-        s_max = max(len(r) for r in rows)
-        pos = {}
-        padded = []
-        for r in rows:
-            for j, i in enumerate(r):
-                pos[i] = j
-            padded.append(tuple(r + [r[0]] * (s_max - len(r))))
-        sel_pos = tuple(pos[i] for i in range(len(self.agent_index)))
-        return tuple(padded), self.agent_index, sel_pos
+        perm = [i for r in rows for i in r]
+        inv = [0] * len(perm)
+        for pos, i in enumerate(perm):
+            inv[i] = pos
+        return tuple(tuple(r) for r in rows), tuple(inv)
 
     def prologues(self) -> Tuple[Tuple[Callable, ...], Tuple[int, ...]]:
         """The bank's deduped trigger prologues (phase-1 gain precursors).

@@ -293,25 +293,50 @@ def _sketch_tables(rows: int, cols: int, seed: int, size: int):
     return idx, sign
 
 
-def count_sketch(x: jax.Array, rows: int, cols: int, seed: int) -> jax.Array:
-    """Count-sketch round trip: sketch ``x`` into ``rows × cols`` f32
-    counters, then reconstruct by the median-of-rows estimator
-    (Charikar et al. 2002) — the tensor the receiver would decode.
+def sketch_encode(x: jax.Array, rows: int, cols: int, seed: int) -> jax.Array:
+    """The LINEAR half of count-sketch: scatter ``x`` into a
+    ``(rows, cols)`` f32 counter grid.
 
-    Each row ``r`` scatters ``s_r(i)·x_i`` into bucket ``h_r(i)``; the
-    estimate of ``x_i`` is ``median_r(s_r(i)·S[r, h_r(i)])``.  Heavy
-    hitters survive; collision noise averages out across rows.  Shapes
-    and dtype are preserved (fake-compress contract).
+    Each row ``r`` scatters ``s_r(i)·x_i`` into bucket ``h_r(i)``.
+    Encoding is linear in ``x`` — ``encode(Σ αᵢ xᵢ) = Σ αᵢ encode(xᵢ)``
+    — which is what makes sketches MERGEABLE: a gateway can sum its
+    agents' encoded grids and the center decodes once, without ever
+    densifying intermediate payloads (the FetchSGD aggregation family).
     """
     flat = x.reshape(-1).astype(jnp.float32)
     idx_h, sign_h = _sketch_tables(rows, cols, seed, int(flat.size))
     idx, sign = jnp.asarray(idx_h), jnp.asarray(sign_h)
     contrib = sign * flat[None, :]
-    sketch = jax.vmap(
+    return jax.vmap(
         lambda c, i: jnp.zeros((cols,), jnp.float32).at[i].add(c)
     )(contrib, idx)
+
+
+def sketch_decode(sketch: jax.Array, shape, dtype, rows: int, cols: int,
+                  seed: int) -> jax.Array:
+    """Median-of-rows count-sketch estimator (Charikar et al. 2002).
+
+    The estimate of ``x_i`` is ``median_r(s_r(i)·S[r, h_r(i)])`` —
+    heavy hitters survive, collision noise averages out across rows.
+    The median is NON-linear, so decoding happens exactly once (at the
+    center), after all linear merging of encoded grids.
+    """
+    size = 1
+    for d in shape:
+        size *= int(d)
+    idx_h, sign_h = _sketch_tables(rows, cols, seed, size)
+    idx, sign = jnp.asarray(idx_h), jnp.asarray(sign_h)
     est = jnp.median(sign * jnp.take_along_axis(sketch, idx, axis=1), axis=0)
-    return est.reshape(x.shape).astype(x.dtype)
+    return est.reshape(shape).astype(dtype)
+
+
+def count_sketch(x: jax.Array, rows: int, cols: int, seed: int) -> jax.Array:
+    """Count-sketch round trip: :func:`sketch_encode` then
+    :func:`sketch_decode` — the tensor the receiver would reconstruct.
+    Shapes and dtype are preserved (fake-compress contract).
+    """
+    return sketch_decode(sketch_encode(x, rows, cols, seed), x.shape,
+                         x.dtype, rows, cols, seed)
 
 
 @COMPRESSORS.register("sketch", params=(("rows", 5), ("cols", 64), ("seed", 0)),
@@ -402,3 +427,22 @@ class CompressorChain:
 
 def chain_from_specs(specs: Sequence[StageSpec]) -> CompressorChain:
     return CompressorChain([build_compressor(s) for s in specs])
+
+
+def sketch_params(chain: CompressorChain | None):
+    """``(rows, cols, seed)`` of a chain's TERMINAL sketch stage, else None.
+
+    A chain *ending* in ``sketch`` is sketch-native eligible: its wire
+    payload IS the linear counter grid of whatever the earlier stages
+    produced, so gateways may merge encoded updates by summation
+    (:func:`sketch_encode` is linear) and only the center decodes.  A
+    sketch followed by further stages — or no sketch at all — returns
+    None: those wires are not linear in the payload.
+    """
+    if not chain or not chain.stages:
+        return None
+    last = chain.stages[-1]
+    if last.spec.name != "sketch":
+        return None
+    args = COMPRESSORS.get("sketch").full_args(last.spec)
+    return int(args["rows"]), int(args["cols"]), int(args["seed"])

@@ -160,9 +160,18 @@ TIERED_M64_EDGE_HEAVY = TieredNetwork(
 TIERED_M64_BACKBONE_HEAVY = TieredNetwork(
     "tiered_m64_backbone_heavy", _tiers(24, 24, 12, 4)
 )
+# the ragged stress mix: ONE policy owns ~90% of the fleet (58/64
+# sensors).  A padded per-branch epilogue layout would force the three
+# small branches to materialize 58-row buffers of duplicated agents;
+# the sort-by-policy blocked dispatch keeps every branch exactly sized
+# (tests/test_shard_fleet.py asserts this at the HLO level).
+TIERED_M64_ONE_BIG = TieredNetwork(
+    "tiered_m64_one_big", _tiers(2, 2, 2, 58)
+)
 
 TIER_MIXES: Tuple[TieredNetwork, ...] = (
-    TIERED_M64, TIERED_M64_EDGE_HEAVY, TIERED_M64_BACKBONE_HEAVY
+    TIERED_M64, TIERED_M64_EDGE_HEAVY, TIERED_M64_BACKBONE_HEAVY,
+    TIERED_M64_ONE_BIG,
 )
 
 # The linreg problem the m=64 frontiers run on (same data model as

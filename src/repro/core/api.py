@@ -450,10 +450,10 @@ def make_triggered_train_step(
             # bank.  "hybrid" runs phase 1 — the policy-independent
             # gradient prologue plus the bank's deduped trigger gain
             # precursors — batched over the agent axis in ONE vmap
-            # (agent-parallel gradient work), then scans the comm
-            # epilogue over the DISTINCT-POLICY axis: P iterations,
-            # each lax.switch branch vmapping its policy's epilogue
-            # over that policy's own agents.  "switch" carries the
+            # (agent-parallel gradient work), then dispatches the comm
+            # epilogue blocked over the DISTINCT-POLICY axis: P
+            # branches, each vmapping its policy's epilogue over that
+            # policy's own contiguous agent block.  "switch" carries the
             # prologue along a scan over the AGENT axis (the pre-hybrid
             # path: same O(#distinct policies) compile cost, but both
             # gradient and comm work serialized per agent).  Either way
@@ -509,87 +509,82 @@ def make_triggered_train_step(
                             (losses, grads, pres)
                         )
 
-                # phase 2: lax.scan + lax.switch over the DISTINCT
-                # POLICIES.  Branch p gathers its own agents' rows
-                # (static indices, padded to the largest group so every
-                # branch has uniform shapes) and vmaps the epilogue
-                # over them — the comm work is agent-parallel within
-                # each policy, and only the policy axis (P entries, not
-                # m agents) is sequential.  With every trigger's batch
-                # use hoisted into the prologue, the branches skip
-                # gathering the data arrays entirely.
-                padded_rows, sel_p, sel_pos = bank.policy_groups()
+                # phase 2: sort-by-policy blocked dispatch over the
+                # DISTINCT POLICIES.  Branch p gathers exactly its own
+                # agents' rows (a static, correctly-sized contiguous
+                # block — no padding) and vmaps the epilogue over them:
+                # comm work is agent-parallel within each policy and
+                # only the policy axis (P entries, not m agents) is
+                # sequential.  The earlier scan+switch layout padded
+                # every group to the largest — pathological for
+                # one-big-tier fleets, where each small branch would
+                # materialize ~0.9·m duplicate rows.  Results merge
+                # back to agent order by one inverse static gather
+                # (arithmetic-free, so per-agent values stay exact).
+                # With every trigger's batch use hoisted into the
+                # prologue, the branches skip gathering the data arrays
+                # entirely.
+                block_rows, inv_order = bank.policy_blocks()
 
-                def make_branch(rows, epilogue):
+                def run_block(rows, epilogue):
                     rows = jnp.asarray(rows, jnp.int32)
                     take = lambda tree: jax.tree_util.tree_map(
                         lambda x: x[rows], tree
                     )
-
-                    def branch():
-                        # statically 5- vs 7-output (use_net) so the
-                        # channel-free trace is the exact old program;
-                        # chan_scale is an unbatched scalar the branch
-                        # closes over (the frontier vmap batches it one
-                        # level up)
-                        if use_net:
-                            def per_agent(main, g, pre_i, ab, mem_i,
-                                          ctrl_i, net_i):
-                                return epilogue(
-                                    state.params, g, ab, main, state.step,
-                                    mem_i, ctrl_i, scale, pre_i, net_i,
-                                    chan_scale,
-                                )
-
-                            return jax.vmap(per_agent)(
-                                losses[rows], take(grads),
-                                take(pres) if use_pre else None,
-                                None if scan_batch_free else take(batch),
-                                take(mem), take(ctrl), take(net),
-                            )
-
-                        def per_agent(main, g, pre_i, ab, mem_i, ctrl_i):
+                    # statically 5- vs 7-output (use_net) so the
+                    # channel-free trace is the exact old program;
+                    # chan_scale is an unbatched scalar the block
+                    # closes over (the frontier vmap batches it one
+                    # level up)
+                    if use_net:
+                        def per_agent(main, g, pre_i, ab, mem_i,
+                                      ctrl_i, net_i):
                             return epilogue(
                                 state.params, g, ab, main, state.step,
-                                mem_i, ctrl_i, scale, pre_i,
+                                mem_i, ctrl_i, scale, pre_i, net_i,
+                                chan_scale,
                             )
 
                         return jax.vmap(per_agent)(
                             losses[rows], take(grads),
                             take(pres) if use_pre else None,
                             None if scan_batch_free else take(batch),
-                            take(mem), take(ctrl),
+                            take(mem), take(ctrl), take(net),
                         )
 
-                    return branch
+                    def per_agent(main, g, pre_i, ab, mem_i, ctrl_i):
+                        return epilogue(
+                            state.params, g, ab, main, state.step,
+                            mem_i, ctrl_i, scale, pre_i,
+                        )
 
-                vbranches = [
-                    make_branch(rows, epi)
-                    for rows, epi in zip(padded_rows, branches)
+                    return jax.vmap(per_agent)(
+                        losses[rows], take(grads),
+                        take(pres) if use_pre else None,
+                        None if scan_batch_free else take(batch),
+                        take(mem), take(ctrl),
+                    )
+
+                outs = [
+                    run_block(rows, epi)
+                    for rows, epi in zip(block_rows, branches)
                 ]
-
-                def policy_body(carry, p):
-                    return carry, jax.lax.switch(p, vbranches)
-
-                _, outs = jax.lax.scan(
-                    policy_body, 0.0,
-                    jnp.arange(len(vbranches), dtype=jnp.int32),
+                # agent i's result sits at position inv_order[i] of the
+                # block concatenation — a static gather, so the merge
+                # is exact
+                inv_ix = jnp.asarray(inv_order, jnp.int32)
+                merge = lambda parts: jax.tree_util.tree_map(
+                    lambda *xs: jnp.concatenate(xs)[inv_ix], *parts
                 )
-                # agent i's true result sits at [sel_p[i], sel_pos[i]]
-                # of the (P, s_max, ...) stacks — a static gather, so
-                # the merge is exact (padding duplicates are discarded)
-                sp = jnp.asarray(sel_p, jnp.int32)
-                spos = jnp.asarray(sel_pos, jnp.int32)
-                merge = lambda tree: jax.tree_util.tree_map(
-                    lambda x: x[sp, spos], tree
+                n_out = 7 if use_net else 5
+                merged = tuple(
+                    merge([o[k] for o in outs]) for k in range(n_out)
                 )
                 if use_net:
                     (alphas, gains, sent, new_mem, new_ctrl, delivereds,
-                     new_net) = (merge(o) for o in outs)
+                     new_net) = merged
                 else:
-                    alphas, gains, sent, new_mem, new_ctrl = (
-                        merge(o) for o in outs
-                    )
+                    alphas, gains, sent, new_mem, new_ctrl = merged
             else:
                 agent_idx = jnp.asarray(bank.agent_index, jnp.int32)
 
@@ -818,6 +813,86 @@ def make_triggered_train_step(
         )
 
     return train_step
+
+
+class HybridMachinery(NamedTuple):
+    """The resolved policy machinery behind the hybrid dispatch path.
+
+    ``make_triggered_train_step`` assembles this inline; the fleet-
+    sharded step (:mod:`repro.sharding.agent_shard`) builds the same
+    pieces through :func:`build_hybrid_machinery` so the shard_map'd
+    program runs exactly the per-agent ops the single-device hybrid
+    step runs — just partitioned over the mesh's agent axes.
+    """
+
+    bank: Any                        # deduped StageBank over the agents
+    grad_prologue: Callable          # (params, agent_batch) -> (loss, grad)
+    prologue_fns: Tuple[Callable, ...]
+    scan_batch_free: bool            # epilogues never touch the batch
+    chains: Tuple[Any, ...]          # per-agent chain (wire pricing)
+    needs_ef: bool
+    needs_ctrl: bool
+    needs_net: bool
+
+
+def build_hybrid_machinery(
+    loss_fn: Callable,
+    cfg: TrainConfig,
+    *,
+    policy=None,
+    aux_loss_fn: Optional[Callable] = None,
+    use_kernel: bool = False,
+    oracle: Optional[tuple] = None,
+) -> HybridMachinery:
+    """Resolve a policy into the hybrid dispatch's stage-bank machinery.
+
+    Homogeneous policies are widened to a per-agent tuple so the result
+    is ALWAYS a (deduped, so P=1 in that case) :class:`StageBank` — the
+    uniform substrate the sharded train step dispatches into.  The
+    returned ``grad_prologue`` is the barrier-free per-agent
+    ``value_and_grad`` (the only variant that composes under
+    vmap/shard_map).
+    """
+    if cfg.microbatches > 1:
+        loss_fn = _microbatched(loss_fn, cfg.microbatches)
+        if aux_loss_fn is not None:
+            aux_loss_fn = _microbatched(aux_loss_fn, cfg.microbatches)
+    resolved = normalize_policy(
+        resolve_policy(cfg, policy, use_kernel=use_kernel), cfg.num_agents
+    )
+    hetero = (
+        resolved
+        if isinstance(resolved, tuple)
+        else (resolved,) * cfg.num_agents
+    )
+    bank = build_stage_bank(
+        hetero, loss_fn=loss_fn, probe_eps=cfg.lr, oracle=oracle
+    )
+
+    def objective(params, batch):
+        main = loss_fn(params, batch)
+        if aux_loss_fn is not None:
+            return main + aux_loss_fn(params, batch), main
+        return main, main
+
+    def grad_prologue(params, agent_batch):
+        (obj, main), g = jax.value_and_grad(objective, has_aux=True)(
+            params, agent_batch
+        )
+        g = constrain_params(g, "")
+        return main, g
+
+    prologue_fns, _ = bank.prologues()
+    return HybridMachinery(
+        bank=bank,
+        grad_prologue=grad_prologue,
+        prologue_fns=tuple(prologue_fns),
+        scan_batch_free=bank.epilogue_batch_free,
+        chains=bank.agent_chains(),
+        needs_ef=bank.needs_ef,
+        needs_ctrl=bank.needs_ctrl,
+        needs_net=bank.needs_net,
+    )
 
 
 def make_plain_train_step(loss_fn, optimizer, cfg: TrainConfig, **kw):

@@ -121,6 +121,8 @@ def make_frontier_step(
     oracle: Optional[tuple] = None,
     hetero_dispatch: str = "hybrid",
     channel_axis: bool = False,
+    mesh=None,
+    rules=None,
 ):
     """Build ``batched_step(states, batch, scales) -> (states, metrics)``.
 
@@ -132,18 +134,41 @@ def make_frontier_step(
     alongside ``scales``, so loss-rate × budget-scale surfaces compile
     as the same single program.  Use :func:`run_frontier` for the
     whole-run loop.
+
+    ``mesh`` swaps in the fleet-sharded step
+    (:func:`repro.sharding.agent_shard.make_sharded_train_step`): the
+    agent axis partitions over the mesh's agent axes and the grid vmap
+    batches the shard_map'd program — same single trace, no per-lane
+    retrace (``hetero_dispatch`` is ignored; the sharded step is the
+    hybrid dispatch partitioned).  ``rules`` optionally overrides the
+    mesh's default sharding rules.
     """
-    step = make_triggered_train_step(
-        loss_fn,
-        optimizer,
-        cfg,
-        policy=policy,
-        aux_loss_fn=aux_loss_fn,
-        oracle=oracle,
-        hetero_dispatch=hetero_dispatch,
-        barriers=False,
-        agent_metrics=True,
-    )
+    if mesh is not None:
+        from repro.sharding.agent_shard import make_sharded_train_step
+
+        step = make_sharded_train_step(
+            loss_fn,
+            optimizer,
+            cfg,
+            mesh,
+            policy=policy,
+            aux_loss_fn=aux_loss_fn,
+            oracle=oracle,
+            rules=rules,
+            agent_metrics=True,
+        )
+    else:
+        step = make_triggered_train_step(
+            loss_fn,
+            optimizer,
+            cfg,
+            policy=policy,
+            aux_loss_fn=aux_loss_fn,
+            oracle=oracle,
+            hetero_dispatch=hetero_dispatch,
+            barriers=False,
+            agent_metrics=True,
+        )
     if channel_axis:
         return jax.vmap(step, in_axes=(0, None, 0, 0))
     return jax.vmap(step, in_axes=(0, None, 0))
@@ -164,6 +189,8 @@ def run_frontier(
     oracle: Optional[tuple] = None,
     hetero_dispatch: str = "hybrid",
     chan_scales=None,
+    mesh=None,
+    rules=None,
 ) -> FrontierResult:
     """Run a whole loss-vs-communication frontier as ONE jitted program.
 
@@ -186,6 +213,10 @@ def run_frontier(
     stream (common random numbers: a delivery lost at severity s is
     lost at every severity ≥ s), so surfaces are comparable point to
     point.  ``None`` (the default) runs the exact pre-channel engine.
+
+    ``mesh``/``rules`` select the fleet-sharded step (see
+    :func:`make_frontier_step`) — the same ``scan(vmap(step))`` program
+    with the agent axis partitioned over the mesh.
     """
     scales = jnp.asarray(scales, jnp.float32)
     if scales.ndim != 1:
@@ -207,6 +238,8 @@ def run_frontier(
         oracle=oracle,
         hetero_dispatch=hetero_dispatch,
         channel_axis=chan_scales is not None,
+        mesh=mesh,
+        rules=rules,
     )
 
     if chan_scales is None:

@@ -22,3 +22,20 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     assert n % model == 0, (n, model)
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_fleet_mesh(shards: int | None = None):
+    """1-D agent/data mesh for fleet-sharded train steps.
+
+    ``shards`` gateways over the first ``shards`` local devices (all of
+    them by default) — the mesh the shard-scale benchmarks and tests
+    run under ``--xla_force_host_platform_device_count=N``.  The single
+    axis is named "data" so the default sharding rules put the agent
+    logical axis on it.
+    """
+    n = len(jax.devices()) if shards is None else int(shards)
+    avail = len(jax.devices())
+    if n > avail:
+        raise ValueError(f"asked for {n} fleet shards but only {avail} "
+                         f"devices are visible")
+    return jax.make_mesh((n,), ("data",), devices=jax.devices()[:n])

@@ -35,7 +35,7 @@ from repro.core.api import (
 )
 from repro.models import build, input_axes, input_specs, long_context_variant
 from repro.optim import optimizers as opt_lib
-from repro.sharding.rules import resolve_rules, tree_pspecs
+from repro.sharding.rules import agent_pspec, resolve_rules, tree_pspecs
 
 FSDP_PARAM_THRESHOLD = 20e9
 
@@ -172,8 +172,17 @@ def _install_gather_hook(mesh, plan: RunPlan, axes, *, train: bool = True):
     set_act_hook(make_act_hook(mesh, plan.rules) if not train else None)
 
 
-def build_train_step(mesh, plan: RunPlan, *, compute_dtype="bfloat16", param_dtype=None):
-    """Returns (jitted_step, state_abs, batch_abs, state_specs, batch_specs)."""
+def build_train_step(mesh, plan: RunPlan, *, compute_dtype="bfloat16",
+                     param_dtype=None, fleet_shard: bool = False):
+    """Returns (jitted_step, state_abs, batch_abs, state_specs, batch_specs).
+
+    ``fleet_shard=True`` swaps in the fleet-sharded step
+    (:func:`repro.sharding.agent_shard.make_sharded_train_step`): the
+    per-agent work runs under ``shard_map`` over the plan's agent axes
+    with the two-level gateway reduce instead of the flat center sum.
+    On a mesh that cannot shard the fleet it falls back to the plain
+    hybrid step (``agent_pspec`` warns), so the knob is always safe.
+    """
     cfg = plan.cfg.replace(compute_dtype=compute_dtype)
     model = build(cfg)
     pdt = jnp.dtype(param_dtype or compute_dtype)
@@ -194,11 +203,16 @@ def build_train_step(mesh, plan: RunPlan, *, compute_dtype="bfloat16", param_dty
         resolve_policy(plan.train_cfg, None), plan.train_cfg.num_agents
     )
     policies = resolved if isinstance(resolved, tuple) else (resolved,)
+    # per-agent rows shard over the fleet (agent) axes — each data
+    # slice owns its own agents' controller rows, same layout the
+    # sharded train step's shard_map expects; a mesh that cannot shard
+    # the fleet resolves to P() (replicated) exactly as before
+    aspec = agent_pspec(mesh, plan.train_cfg.num_agents, plan.rules)
     if any(p.is_adaptive for p in policies):
         ctrl_abs = jax.ShapeDtypeStruct(
             (plan.train_cfg.num_agents, CTRL_WIDTH), jnp.float32
         )
-        ctrl_specs = P()  # replicated, like the scalar step counter
+        ctrl_specs = aspec
     else:
         ctrl_abs = ctrl_specs = None
 
@@ -211,7 +225,7 @@ def build_train_step(mesh, plan: RunPlan, *, compute_dtype="bfloat16", param_dty
         net_abs = jax.ShapeDtypeStruct(
             (plan.train_cfg.num_agents, NET_WIDTH), jnp.float32
         )
-        net_specs = P()
+        net_specs = aspec
     else:
         net_abs = net_specs = None
 
@@ -232,7 +246,17 @@ def build_train_step(mesh, plan: RunPlan, *, compute_dtype="bfloat16", param_dty
     batch_ax = input_axes(cfg, plan.shape, num_agents=plan.num_agents)
     batch_specs = tree_pspecs(batch_ax, batch_abs, plan.rules, mesh)
 
-    step_fn = make_triggered_train_step(model.loss_fn, optimizer, plan.train_cfg)
+    if fleet_shard:
+        from repro.sharding.agent_shard import make_sharded_train_step
+
+        step_fn = make_sharded_train_step(
+            model.loss_fn, optimizer, plan.train_cfg, mesh,
+            rules=plan.rules,
+        )
+    else:
+        step_fn = make_triggered_train_step(
+            model.loss_fn, optimizer, plan.train_cfg
+        )
     metric_specs = {k: P() for k in METRIC_KEYS}
     if use_net:
         # net_state-carrying steps emit the attempted/delivered split

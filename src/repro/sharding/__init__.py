@@ -1,6 +1,22 @@
 from repro.sharding.rules import (  # noqa: F401
+    agent_axis_names,
+    agent_pspec,
+    agent_shard_count,
     resolve_pspec,
     resolve_rules,
     tree_pspecs,
     tree_shardings,
 )
+
+_LAZY = ("make_sharded_train_step", "sketch_native_params")
+
+
+def __getattr__(name):
+    # agent_shard imports repro.core.api, which itself imports
+    # repro.sharding.constraint (triggering this __init__) — resolve the
+    # step builder lazily so neither import order deadlocks the cycle
+    if name in _LAZY:
+        from repro.sharding import agent_shard
+
+        return getattr(agent_shard, name)
+    raise AttributeError(name)

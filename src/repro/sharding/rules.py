@@ -26,6 +26,7 @@ replicated).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -130,6 +131,55 @@ def resolve_pspec(
     while spec and spec[-1] is None:
         spec.pop()
     return PartitionSpec(*spec)
+
+
+def agent_axis_names(mesh: Mesh, rules: Optional[Dict[str, MeshAxes]] = None
+                     ) -> Tuple[str, ...]:
+    """The mesh axis names backing the ``agent`` logical axis.
+
+    Filters the rule entry down to axes the mesh actually has (a
+    single-axis host mesh under multipod rules keeps ``("data",)``).
+    These are the names the sharded train step's gateway reduce psums
+    over — an empty tuple means the fleet axis cannot shard here.
+    """
+    rules = rules if rules is not None else resolve_rules(mesh)
+    axes = rules.get("agent")
+    if axes is None:
+        return ()
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    return tuple(a for a in axes_t if a in mesh.axis_names)
+
+
+def agent_shard_count(mesh: Mesh,
+                      rules: Optional[Dict[str, MeshAxes]] = None) -> int:
+    """Number of agent shards (= gateways) the mesh provides."""
+    return _axis_size(mesh, agent_axis_names(mesh, rules) or None)
+
+
+def agent_pspec(mesh: Mesh, num_agents: int,
+                rules: Optional[Dict[str, MeshAxes]] = None,
+                ) -> PartitionSpec:
+    """PartitionSpec for the leading axis of an ``(m, ...)`` per-agent
+    array, with the standard safeguards — and a LOUD fallback.
+
+    When ``num_agents`` is not divisible by the agent mesh-axis product
+    the array must replicate, and unlike a model-zoo parameter this is
+    a whole-fleet perf cliff (every device recomputes every agent), so
+    the fallback warns instead of silently shrugging.
+    """
+    rules = rules if rules is not None else resolve_rules(mesh)
+    spec = resolve_pspec((num_agents,), ("agent",), rules, mesh)
+    shards = agent_shard_count(mesh, rules)
+    if shards > 1 and spec == PartitionSpec():
+        warnings.warn(
+            f"agent axis of size {num_agents} is not divisible by the "
+            f"{shards}-way agent mesh axes "
+            f"{agent_axis_names(mesh, rules)}: falling back to "
+            f"REPLICATION — the fleet will not shard",
+            UserWarning,
+            stacklevel=2,
+        )
+    return spec
 
 
 def tree_pspecs(axes_tree, shapes_tree, rules, mesh):

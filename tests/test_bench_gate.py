@@ -63,6 +63,17 @@ def _synth_payload(spec):
     for fk in spec.get("finite_keys", []):
         if fk not in row_keys_seen:
             payload[fk] = 1.0
+    # a floors spec pins a minimum: the synthetic rows (all 1.0) must
+    # clear it, so lift every floored key to its floor
+    for fl in spec.get("floors", []):
+        floor_val = max(1.0, fl["min"])
+        for rows in payload.values():
+            if isinstance(rows, list):
+                for row in rows:
+                    if isinstance(row, dict) and fl["key"] in row:
+                        row[fl["key"]] = floor_val
+        if fl["key"] in payload:
+            payload[fl["key"]] = floor_val
     payload["claims"] = {c: True for c in spec.get("claims", [])}
     for k in spec.get("required_keys", []):
         payload.setdefault(k, "synthetic")
@@ -112,6 +123,18 @@ def test_gate_fails_on_nan_loss(smoke_dir):
     r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
     assert r.returncode == 1
     assert "non-finite" in r.stderr
+
+
+def test_gate_fails_on_floor_violation(smoke_dir):
+    """The throughput floor: a rounds/sec collapse in the sharded step
+    reddens the gate even though the payload is structurally clean."""
+    path = smoke_dir / "shard_scale_hybrid_smoke.json"
+    payload = json.loads(path.read_text())
+    payload["rows"][0]["rounds_per_sec"] = 0.01
+    path.write_text(json.dumps(payload))
+    r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
+    assert r.returncode == 1
+    assert "below floor" in r.stderr
 
 
 def test_gate_fails_on_wire_ratio_out_of_bounds(smoke_dir):
@@ -216,27 +239,27 @@ def test_baseline_matches_the_ci_smoke_invocation():
             raw += toks
             collecting = line.rstrip().endswith("\\")
     # sequential parse: a "--dispatch MODE" flag puts the names that
-    # follow it (within the same invocation) under that lane; a
-    # "--seed N" pair is a value flag, not a benchmark name (CI places
-    # it before --smoke, but the parser must not break if it moves)
+    # follow it (within the same invocation) under that lane; "--seed N"
+    # and "--devices N" are value flags, not benchmark names (CI places
+    # them before --smoke, but the parser must not break if they move)
     names, lanes, pending_lane, lane = [], {}, False, None
-    pending_seed = False
+    pending_value = False
     for tok in raw:
         if tok == "<invocation>":
             lane, pending_lane = None, False
-            pending_seed = False
+            pending_value = False
             continue
         if pending_lane:
             lane, pending_lane = tok, False
             continue
-        if pending_seed:
-            pending_seed = False
+        if pending_value:
+            pending_value = False
             continue
         if tok == "--dispatch":
             pending_lane = True
             continue
-        if tok == "--seed":
-            pending_seed = True
+        if tok in ("--seed", "--devices"):
+            pending_value = True
             continue
         names.append(tok)
         if lane:

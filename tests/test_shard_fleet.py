@@ -1,0 +1,395 @@
+"""Fleet-scale agent sharding (repro.sharding.agent_shard).
+
+Two test tiers:
+
+* In-process (1 device, like every other module): the ragged-epilogue
+  trace guarantee for one-big-tier fleets, the count-sketch
+  encode/decode split, and the sketch-native eligibility contract.
+* Subprocess (``--xla_force_host_platform_device_count=8``): the
+  conftest pins the main process to ONE device, so everything that
+  needs a real 8-gateway mesh — sharded-vs-unsharded equivalence for
+  every ``TIER_MIXES`` fleet, the O(#gateways) collective evidence,
+  frontier-engine composition, sketch-native gateway merge — runs in a
+  forked interpreter via :func:`run_fleet`.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+FLEET_PRELUDE = """
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs.base import TrainConfig
+from repro.core.api import init_train_state, make_triggered_train_step
+from repro.optim import optimizers as opt_lib
+from repro.sharding.agent_shard import make_sharded_train_step
+
+N, M = 6, 64
+mesh = jax.make_mesh((8,), ("data",))
+assert len(jax.devices()) == 8, jax.devices()
+
+
+def loss_fn(params, batch):
+    return 0.5 * jnp.mean((batch["xs"] @ params["w"] - batch["ys"]) ** 2)
+
+
+def make_batch(key, m=M):
+    kx, ky = jax.random.split(key)
+    return {"xs": jax.random.normal(kx, (m, 8, N)),
+            "ys": jax.random.normal(ky, (m, 8))}
+
+
+def make_params():
+    return {"w": jax.random.normal(jax.random.key(0), (N,))}
+"""
+
+
+def run_fleet(code: str, devices: int = 8) -> str:
+    """Run a snippet under a forced multi-device host topology."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={devices}"
+    ).strip()
+    env["PYTHONPATH"] = (
+        str(ROOT / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", FLEET_PRELUDE + code],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=900,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# ----------------------------------------------------------------------
+# in-process: ragged-epilogue trace guarantee (one-big-tier fleets)
+# ----------------------------------------------------------------------
+
+
+def test_one_big_tier_epilogue_materializes_no_padded_copies():
+    """The sort-by-policy blocked dispatch must not materialize padded
+    per-branch copies: for the 2+2+2+58 one-big fleet the old layout
+    stacked every branch to the largest group — (4, 58, ...) buffers
+    and flattened 232-row gathers, ~0.9·m duplicate rows per small
+    branch.  The lowered step may only carry correctly-sized blocks."""
+    from repro.analysis.hlo_stats import shape_census
+    from repro.configs.base import TrainConfig
+    from repro.configs.paper_linreg import TIERED_M64_ONE_BIG
+    from repro.core.api import init_train_state, make_triggered_train_step
+    from repro.optim import optimizers as opt_lib
+
+    n, m = 6, 64
+    assert TIERED_M64_ONE_BIG.num_agents == m
+    sizes = sorted(t.count for t in TIERED_M64_ONE_BIG.tiers)
+    assert sizes == [2, 2, 2, 58], sizes
+
+    def loss_fn(params, batch):
+        return 0.5 * jnp.mean(
+            (batch["xs"] @ params["w"] - batch["ys"]) ** 2
+        )
+
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=m,
+                      comm=TIERED_M64_ONE_BIG.policies(lam_base=1.0))
+    opt = opt_lib.from_config(cfg)
+    step = make_triggered_train_step(loss_fn, opt, cfg,
+                                     hetero_dispatch="hybrid")
+    params = {"w": jnp.zeros((n,))}
+    state = init_train_state(params, opt, cfg)
+    batch = {"xs": jnp.zeros((m, 8, n)), "ys": jnp.zeros((m, 8))}
+    ir = jax.jit(step).lower(state, batch).as_text()
+    census = shape_census(ir)
+    assert census, "shape census parsed nothing — IR format changed?"
+    padded = {
+        dims for dims in census
+        if dims[:2] == (4, 58) or (dims and dims[0] == 4 * 58)
+    }
+    assert not padded, (
+        f"padded per-branch buffers materialized: {sorted(padded)}"
+    )
+    # the big tier's correctly-sized contiguous block must exist
+    assert any(dims and dims[0] == 58 for dims in census), sorted(census)
+
+
+# ----------------------------------------------------------------------
+# in-process: count-sketch split + sketch-native eligibility
+# ----------------------------------------------------------------------
+
+
+def test_sketch_split_roundtrip_linearity_and_params():
+    from repro.comm import (
+        CommPolicy,
+        sketch_decode,
+        sketch_encode,
+        sketch_params,
+    )
+    from repro.comm.compressors import count_sketch
+
+    rows, cols, seed = 5, 32, 7
+    x = jax.random.normal(jax.random.key(1), (11, 3))
+    enc = sketch_encode(x, rows, cols, seed)
+    assert enc.shape == (rows, cols)
+    dec = sketch_decode(enc, x.shape, x.dtype, rows, cols, seed)
+    # decode∘encode IS the fused fake compressor, bitwise
+    np.testing.assert_array_equal(
+        np.asarray(dec), np.asarray(count_sketch(x, rows, cols, seed))
+    )
+    # linearity: encode(Σ αᵢxᵢ) == Σ αᵢ encode(xᵢ) — the whole reason
+    # gateway merge is a sum in sketch space
+    vs = jax.random.normal(jax.random.key(2), (16, 11, 3))
+    al = (jax.random.uniform(jax.random.key(3), (16,)) > 0.4).astype(
+        jnp.float32
+    )
+    lhs = jnp.sum(
+        jax.vmap(lambda v: sketch_encode(v, rows, cols, seed))(vs)
+        * al[:, None, None],
+        axis=0,
+    )
+    rhs = sketch_encode(
+        jnp.sum(vs * al[:, None, None], axis=0), rows, cols, seed
+    )
+    np.testing.assert_allclose(
+        np.asarray(lhs), np.asarray(rhs), atol=5e-5
+    )
+    # terminal-stage introspection: sketch-terminal chains report their
+    # table params, everything else is ineligible
+    p = CommPolicy.parse("gain_lookahead(lam=1.0)|sketch(rows=5,cols=64)")
+    assert sketch_params(p.chain()) == (5, 64, 0)
+    assert sketch_params(CommPolicy.parse("always|int8").chain()) is None
+    assert sketch_params(CommPolicy.parse("always").chain()) is None
+
+
+def test_sketch_native_requires_uniform_terminal_sketch():
+    from repro.configs.base import TrainConfig
+    from repro.optim import optimizers as opt_lib
+    from repro.sharding.agent_shard import make_sharded_train_step
+
+    mesh = jax.make_mesh((1,), ("data",))
+    loss = lambda params, batch: jnp.float32(0.0)
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=4,
+                      comm="always|int8")
+    opt = opt_lib.from_config(cfg)
+    with pytest.raises(ValueError, match="sketch"):
+        make_sharded_train_step(loss, opt, cfg, mesh, sketch_native=True)
+    # mixed tables are just as ineligible as non-sketch chains
+    cfg2 = TrainConfig(lr=0.1, optimizer="sgd", num_agents=4, comm=(
+        "always|sketch(rows=5,cols=64)", "always|sketch(rows=5,cols=32)",
+        "always|sketch(rows=5,cols=64)", "always|sketch(rows=5,cols=32)",
+    ))
+    with pytest.raises(ValueError, match="identical"):
+        make_sharded_train_step(loss, opt, cfg2, mesh, sketch_native=True)
+
+
+def test_unshardable_mesh_falls_back_to_plain_hybrid():
+    """1-gateway meshes (and non-divisible fleets, which agent_pspec
+    already warns about) must return the plain hybrid step — the
+    sharded path is a perf transform, never a semantic fork."""
+    from repro.configs.base import TrainConfig
+    from repro.core.api import init_train_state
+    from repro.optim import optimizers as opt_lib
+    from repro.sharding.agent_shard import make_sharded_train_step
+
+    n, m = 4, 8
+    mesh = jax.make_mesh((1,), ("data",))
+
+    def loss_fn(params, batch):
+        return 0.5 * jnp.mean(
+            (batch["xs"] @ params["w"] - batch["ys"]) ** 2
+        )
+
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=m,
+                      comm="gain_lookahead(lam=0.5)|int8+ef")
+    opt = opt_lib.from_config(cfg)
+    step = make_sharded_train_step(loss_fn, opt, cfg, mesh)
+    params = {"w": jnp.zeros((n,))}
+    state = init_train_state(params, opt, cfg)
+    batch = {"xs": jnp.ones((m, 8, n)), "ys": jnp.ones((m, 8))}
+    state2, metrics = jax.jit(step)(state, batch)
+    assert int(state2.step) == 1
+    assert np.isfinite(float(metrics["loss"]))
+
+
+# ----------------------------------------------------------------------
+# subprocess (8 forced host devices): the fleet-mesh guarantees
+# ----------------------------------------------------------------------
+
+
+def test_sharded_step_matches_hybrid_every_tier_mix():
+    """Numeric equivalence vs the single-device hybrid step at m=64 for
+    every TIER_MIXES fleet (plus the adaptive+lossy mix): params, opt
+    state, EF memory, controller and channel rows, and every metric
+    agree within a few ULP over multi-step runs."""
+    out = run_fleet("""
+from repro.configs.paper_linreg import TIER_MIXES, TIERED_M64_ADAPTIVE_LOSSY
+
+for net in TIER_MIXES + (TIERED_M64_ADAPTIVE_LOSSY,):
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=M,
+                      comm=net.policies(lam_base=1.0))
+    opt = opt_lib.from_config(cfg)
+    step_ref = jax.jit(make_triggered_train_step(
+        loss_fn, opt, cfg, hetero_dispatch="hybrid", barriers=False,
+        agent_metrics=True))
+    step_sh = jax.jit(make_sharded_train_step(
+        loss_fn, opt, cfg, mesh, agent_metrics=True))
+    s_ref = init_train_state(make_params(), opt, cfg)
+    s_sh = init_train_state(make_params(), opt, cfg)
+    for i in range(3):
+        b = make_batch(jax.random.fold_in(jax.random.key(13), i))
+        s_ref, m_ref = step_ref(s_ref, b)
+        s_sh, m_sh = step_sh(s_sh, b)
+    ref_leaves = jax.tree_util.tree_leaves((s_ref, m_ref))
+    sh_leaves = jax.tree_util.tree_leaves((s_sh, m_sh))
+    assert len(ref_leaves) == len(sh_leaves)
+    for x, y in zip(ref_leaves, sh_leaves):
+        a = np.asarray(x, np.float64)
+        b_ = np.asarray(y, np.float64)
+        d = float(np.max(np.abs(a - b_))) if a.size else 0.0
+        rel = d / max(1.0, float(np.max(np.abs(a))) if a.size else 1.0)
+        assert rel < 5e-6, (net.name, d, rel)
+    print(net.name, "MATCH")
+print("EQUIVALENCE-OK")
+""")
+    assert "EQUIVALENCE-OK" in out
+    assert out.count("MATCH") == 5
+
+
+def test_gateway_reduce_collective_is_O_gateways():
+    """The center-side collective's per-device operand is ONE payload:
+    its bytes must be identical at m=256 and m=1024 on the same 8-way
+    mesh — O(#gateways), independent of the fleet size."""
+    out = run_fleet("""
+from repro.analysis.hlo_cost import analyze
+
+stats = {}
+for m in (256, 1024):
+    pol = (("gain_lookahead(lam=1.0)|fp16",) * (m // 2)
+           + ("always",) * (m // 2))
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=m, comm=pol)
+    opt = opt_lib.from_config(cfg)
+    step = make_sharded_train_step(loss_fn, opt, cfg, mesh)
+    state = init_train_state(make_params(), opt, cfg)
+    batch = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        make_batch(jax.random.key(0), m=m))
+    state = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
+        state)
+    hlo = jax.jit(step).lower(state, batch).compile().as_text()
+    ar = analyze(hlo).collectives.get("all-reduce")
+    assert ar is not None and ar["count"] > 0, analyze(hlo).collectives
+    stats[m] = (ar["count"], ar["operand_bytes"])
+    print(m, stats[m])
+assert stats[256] == stats[1024], stats
+print("OPERAND-BYTES-FLAT")
+""")
+    assert "OPERAND-BYTES-FLAT" in out
+
+
+def test_frontier_engine_accepts_sharded_step_without_retracing():
+    """The scan(vmap(step)) frontier engine drives the shard_map'd step
+    as ONE program: the loss is traced the same number of times for a
+    2-lane and an 8-lane grid (no per-lane retrace), and the lane-0
+    curve matches the unsharded engine's."""
+    out = run_fleet("""
+from repro.configs.paper_linreg import TIERED_M64
+from repro.core.frontier import run_frontier
+
+traces = [0]
+
+
+def counting_loss(params, batch):
+    traces[0] += 1
+    return loss_fn(params, batch)
+
+
+cfg_comm = TIERED_M64.policies(lam_base=1.0)
+counts = {}
+results = {}
+for G in (2, 8):
+    traces[0] = 0
+    scales = jnp.linspace(0.5, 2.0, G)
+    res = run_frontier(
+        counting_loss, opt_lib.from_config(
+            TrainConfig(lr=0.1, optimizer="sgd", num_agents=M,
+                        comm=cfg_comm)),
+        TrainConfig(lr=0.1, optimizer="sgd", num_agents=M, comm=cfg_comm),
+        make_params(), scales=scales, steps=3,
+        batch_fn=lambda k: make_batch(k), key=jax.random.key(5),
+        mesh=mesh)
+    counts[G] = traces[0]
+    results[G] = res
+    assert res.metrics["loss"].shape == (G, 3), res.metrics["loss"].shape
+    assert bool(np.all(np.isfinite(np.asarray(res.metrics["loss"]))))
+assert counts[2] == counts[8], counts
+res_ref = run_frontier(
+    loss_fn, opt_lib.from_config(
+        TrainConfig(lr=0.1, optimizer="sgd", num_agents=M, comm=cfg_comm)),
+    TrainConfig(lr=0.1, optimizer="sgd", num_agents=M, comm=cfg_comm),
+    make_params(), scales=jnp.linspace(0.5, 2.0, 8), steps=3,
+    batch_fn=lambda k: make_batch(k), key=jax.random.key(5))
+d = float(np.max(np.abs(np.asarray(res_ref.metrics["loss"])
+                        - np.asarray(results[8].metrics["loss"]))))
+assert d < 5e-6, d
+print("FRONTIER-OK", counts)
+""")
+    assert "FRONTIER-OK" in out
+
+
+def test_sketch_native_gateway_merge_no_densify():
+    """sketch_native=True merges in sketch space: the compiled program's
+    all-reduce operands stay grid-sized as the model grows past the
+    grid, and the decode-once estimate matches the dense-gateway path
+    on a collision-light sketch."""
+    out = run_fleet("""
+from repro.analysis.hlo_cost import analyze
+
+pol = "gain_lookahead(lam=0.5)|sketch(rows=5,cols=16,seed=3)+ef"
+cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=M, comm=pol)
+opt = opt_lib.from_config(cfg)
+dense_step = jax.jit(make_sharded_train_step(loss_fn, opt, cfg, mesh))
+native_step = jax.jit(make_sharded_train_step(
+    loss_fn, opt, cfg, mesh, sketch_native=True))
+s_d = init_train_state(make_params(), opt, cfg)
+s_n = init_train_state(make_params(), opt, cfg)
+for i in range(3):
+    b = make_batch(jax.random.fold_in(jax.random.key(13), i))
+    s_d, md = dense_step(s_d, b)
+    s_n, mn = native_step(s_n, b)
+assert float(md["num_tx"]) == float(mn["num_tx"])
+assert float(md["wire_bytes"]) == float(mn["wire_bytes"])
+d = float(np.max(np.abs(np.asarray(s_d.params["w"])
+                        - np.asarray(s_n.params["w"]))))
+assert d < 1e-5, d  # rows=5/cols=16 resolves N=6 entries collision-free
+
+# the wire-side evidence: with a BIG model (n >> rows*cols) the
+# sketch-native all-reduce moves fewer bytes than the dense gateway sum
+def big_loss(params, batch):
+    return 0.5 * jnp.mean((batch["xs"] @ params["w"] - batch["ys"]) ** 2)
+
+NBIG = 4096
+cfgb = TrainConfig(lr=0.1, optimizer="sgd", num_agents=M,
+                   comm="always|sketch(rows=5,cols=64,seed=3)")
+optb = opt_lib.from_config(cfgb)
+paramsb = {"w": jnp.zeros((NBIG,))}
+batchb = {"xs": jnp.zeros((M, 8, NBIG)), "ys": jnp.zeros((M, 8))}
+ops = {}
+for native in (False, True):
+    stepb = make_sharded_train_step(big_loss, optb, cfgb, mesh,
+                                    sketch_native=native)
+    stateb = init_train_state(paramsb, optb, cfgb)
+    hlo = jax.jit(stepb).lower(stateb, batchb).compile().as_text()
+    ar = analyze(hlo).collectives["all-reduce"]
+    ops[native] = ar["operand_bytes"]
+print("all-reduce operand bytes dense vs sketch-native:", ops)
+assert ops[True] < ops[False], ops
+print("SKETCH-NATIVE-OK")
+""")
+    assert "SKETCH-NATIVE-OK" in out

@@ -6,7 +6,14 @@ import pytest
 from _hypothesis_compat import given, settings, st
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.sharding.rules import resolve_pspec, resolve_rules, tree_pspecs
+from repro.sharding.rules import (
+    agent_axis_names,
+    agent_pspec,
+    agent_shard_count,
+    resolve_pspec,
+    resolve_rules,
+    tree_pspecs,
+)
 
 
 @pytest.fixture(scope="module")
@@ -90,6 +97,56 @@ def test_tree_pspecs_structure(mesh1):
     specs = tree_pspecs(axes, shapes, rules, mesh)
     assert specs["a"] == P("model")
     assert specs["nested"]["b"] == P(None, None, "model")
+
+
+def test_agent_axes_resolve_over_pod_and_data():
+    """The fleet axis spans BOTH multipod data axes: an (m,) per-agent
+    array shards ("pod", "data") when m divides the 2×16 product, and
+    the helper reports the matching gateway count."""
+    mesh = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    rules = resolve_rules(mesh, agent_axes=("pod", "data"))
+    assert agent_axis_names(mesh, rules) == ("pod", "data")
+    assert agent_shard_count(mesh, rules) == 32
+    assert agent_pspec(mesh, 64, rules) == P(("pod", "data"))
+    spec = resolve_pspec((64, 7), ("agent", None), rules, mesh)
+    assert spec == P(("pod", "data"))
+    # axes the mesh does not have are filtered, not fatal
+    mesh1d = fake_mesh((8,), ("data",))
+    rules1d = resolve_rules(mesh1d, agent_axes=("pod", "data"))
+    assert agent_axis_names(mesh1d, rules1d) == ("data",)
+    assert agent_shard_count(mesh1d, rules1d) == 8
+
+
+def test_agent_pspec_non_divisible_warns_and_replicates():
+    """m not divisible by the agent mesh product must fall back to
+    replication — LOUDLY: silently replicating the fleet axis is a
+    whole-run perf cliff, not a per-parameter detail."""
+    import warnings
+
+    mesh = fake_mesh((8, 2), ("data", "model"))
+    rules = resolve_rules(mesh)
+    with pytest.warns(UserWarning, match="REPLICATION"):
+        assert agent_pspec(mesh, 63, rules) == P()
+    # divisible: sharded, and NO warning may fire
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert agent_pspec(mesh, 64, rules) == P("data")
+
+
+def test_agent_axes_never_reused_within_one_pspec():
+    """A mesh axis claimed by the agent dim cannot be claimed again by
+    a later dim of the same tensor (the batch rule also wants "data")."""
+    mesh = fake_mesh((8, 2), ("data", "model"))
+    rules = resolve_rules(mesh)
+    spec = resolve_pspec((64, 32), ("agent", "batch"), rules, mesh)
+    assert spec == P("data")  # batch dim replicated, not double-claimed
+    for s in (spec, resolve_pspec((64, 16, 32), ("agent", "batch", "ff"),
+                                  rules, mesh)):
+        seen = []
+        for entry in s:
+            for ax in ((entry,) if isinstance(entry, str) else entry or ()):
+                assert ax not in seen, f"mesh axis {ax} appears twice in {s}"
+                seen.append(ax)
 
 
 def test_plan_run_agent_selection():

@@ -27,6 +27,14 @@ green artifacts.  The baseline pins, per benchmark:
                        gate (e.g. a rounds/sec collapse in the sharded
                        train step reddens CI even though the smoke
                        payload is structurally clean)
+* ``ref_floors``     — a list of ``{"key", "ref_file", "ref_key",
+                       "frac"}`` specs: like ``floors`` but the floor
+                       is ``frac`` x the smallest ``ref_key`` value in
+                       the committed repo-relative ``ref_file`` (e.g.
+                       ``benchmarks/BENCH_serve.json``) — smoke
+                       throughput gated against the committed full-run
+                       baseline instead of a hand-picked constant, with
+                       ``frac`` absorbing CI-machine variance
 * ``lanes``          — a list of dispatch-mode lanes (e.g. ``["switch",
                        "hybrid"]``): the CI job runs the benchmark once
                        per lane via ``benchmarks.run --dispatch MODE``,
@@ -125,6 +133,33 @@ def check_one(name: str, payload: dict, spec: dict) -> list:
             errs.append(
                 f"value(s) under {fl['key']!r} below floor {fl['min']}: "
                 f"{[round(v, 4) for v in bad[:3]]}"
+            )
+    for rf in spec.get("ref_floors", []):
+        ref_path = REPO / rf["ref_file"]
+        if not ref_path.exists():
+            errs.append(
+                f"ref_floors reference file {rf['ref_file']!r} missing — "
+                f"run the full benchmark to commit it"
+            )
+            continue
+        ref_vals = numbers_under(
+            json.loads(ref_path.read_text()), rf["ref_key"])
+        if not ref_vals:
+            errs.append(
+                f"no numeric values under {rf['ref_key']!r} in "
+                f"{rf['ref_file']!r}"
+            )
+            continue
+        floor = rf["frac"] * min(ref_vals)
+        vals = numbers_under(payload, rf["key"])
+        if not vals:
+            errs.append(f"no numeric values found under {rf['key']!r}")
+        bad = [v for v in vals if v < floor]
+        if bad:
+            errs.append(
+                f"value(s) under {rf['key']!r} below "
+                f"{rf['frac']} x committed {rf['ref_key']!r} "
+                f"(= {round(floor, 4)}): {[round(v, 4) for v in bad[:3]]}"
             )
     wr = spec.get("wire_ratio")
     if wr:

@@ -45,7 +45,12 @@ from repro.configs.paper_linreg import (
     TIERED_M64_CFG,
 )
 from repro.core import regression as R
-from repro.core.api import DISPATCH_MODES, init_train_state, make_triggered_train_step
+from repro.core.api import (
+    DISPATCH_MODES,
+    StepOptions,
+    init_train_state,
+    make_triggered_train_step,
+)
 from repro.optim import optimizers as opt_lib
 
 COMMITTED = Path(__file__).resolve().parent / "BENCH_dispatch.json"
@@ -75,7 +80,8 @@ def _bench_scenario(name, cfg_lr, net, *, blocks: int, iters: int):
     compiled = {}
     for mode in DISPATCH_MODES:
         step = jax.jit(make_triggered_train_step(
-            _loss_fn, opt, cfg, hetero_dispatch=mode))
+            _loss_fn, opt, cfg,
+            options=StepOptions(hetero_dispatch=mode)))
         t0 = time.perf_counter()
         lowered = step.lower(state0, batch)
         t1 = time.perf_counter()

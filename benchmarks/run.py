@@ -11,50 +11,145 @@
 Prints each benchmark's CSV and a final summary line per benchmark.
 ``--list`` descriptions come straight from each module's docstring, so
 the catalogue cannot drift from the code (see benchmarks/README.md for
-the full table).  ``--dispatch MODE`` (one of repro.core.api's
-``DISPATCH_MODES``) pins the heterogeneous train-step dispatch path for
-the benchmarks that take one — their artifacts gain a ``_MODE`` name
-suffix so CI can gate each lane separately; benchmarks without the knob
-are skipped loudly, mirroring ``--smoke``.  ``--seed N`` re-keys the
-benchmarks whose randomness takes a seed (the lossy-channel delivery
-stream) and skips the rest loudly, same contract.  ``--devices N``
-forces an N-device host platform (``--xla_force_host_platform_device_
-count``) for the fleet-sharding benchmarks — it MUST take effect before
-jax is imported, so it is parsed at module top, below; benchmarks that
-do not take a ``devices`` knob are skipped loudly under it.  Dry-run-
-derived tables (roofline) read cached JSONs from ``experiments/dryrun``
-— run ``python -m repro.launch.dryrun --all`` first if missing."""
+the full table).
+
+Valued flags are driven by the ``KNOBS`` registry below — one
+declaration per knob carries its flag, its parser (the loud-typo
+contract: an invalid value fails on stderr with rc 2 before anything
+runs), and its skip reason.  A benchmark opts into a knob simply by
+taking the keyword in its ``run()`` signature; under a knob it does not
+take, it is skipped loudly instead of silently running on defaults —
+the same contract ``--smoke`` has always had.  Current knobs:
+
+* ``--dispatch MODE`` — pin the heterogeneous train-step dispatch path
+  (one of repro.core.api's ``DISPATCH_MODES``); artifacts gain a
+  ``_MODE`` name suffix so CI can gate each lane separately.
+* ``--seed N`` — re-key the benchmarks whose randomness takes a seed
+  (the lossy-channel delivery stream).
+* ``--devices N`` — force an N-device host platform (``--xla_force_
+  host_platform_device_count``) for the fleet-sharding benchmarks; it
+  MUST take effect before jax is imported, so the registry marks it
+  ``pre_import`` and it is consumed at module top, before the
+  benchmark imports.
+
+Dry-run-derived tables (roofline) read cached JSONs from
+``experiments/dryrun`` — run ``python -m repro.launch.dryrun --all``
+first if missing."""
 from __future__ import annotations
 
+import dataclasses
 import inspect
 import os
 import sys
 import time
 import traceback
+from typing import Callable, Optional
 
-# --devices must be applied BEFORE the benchmark imports below pull in
-# jax (the host platform device count is fixed at backend init).  Same
-# loud-typo contract as --dispatch/--seed: a missing or non-positive-
-# integer value fails on stderr with rc 2 before anything runs.
-DEVICES = None
-if "--devices" in sys.argv:
-    _at = sys.argv.index("--devices")
-    _val = sys.argv[_at + 1] if _at + 1 < len(sys.argv) else None
+
+class KnobError(ValueError):
+    """Invalid value for a registry knob (printed to stderr, rc 2)."""
+
+
+# ----------------------------------------------------------------------
+# the knob registry: one declaration per valued flag
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Knob:
+    """One valued CLI flag the driver forwards to benchmark ``run()``s.
+
+    ``parse`` validates the raw token (raising :class:`KnobError` with
+    the user-facing message); ``apply`` runs once after a successful
+    parse for environment side effects; ``pre_import`` knobs are
+    consumed at module top, before anything imports jax.
+    """
+
+    flag: str                       # "--dispatch"
+    param: str                      # run() keyword ("dispatch")
+    parse: Callable[[Optional[str]], object]
+    skip_reason: str                # "no dispatch knob"
+    pre_import: bool = False
+    apply: Optional[Callable[[object], None]] = None
+
+
+def _parse_dispatch(value):
+    # deferred import: DISPATCH_MODES lives behind jax, which must not
+    # load before the pre_import knobs have been applied
+    from repro.core.api import DISPATCH_MODES
+
+    # same loud-typo contract as unknown benchmark names, mirroring
+    # core.api's own validation
+    if value is None or value not in DISPATCH_MODES:
+        raise KnobError(
+            f"unknown dispatch mode {value!r}: expected one of "
+            f"{', '.join(DISPATCH_MODES)}"
+        )
+    return value
+
+
+def _parse_seed(value):
     try:
-        DEVICES = int(_val)
-        if DEVICES < 1:
+        return int(value)
+    except (TypeError, ValueError):
+        raise KnobError(f"--seed expects an integer, got {value!r}")
+
+
+def _parse_devices(value):
+    try:
+        devices = int(value)
+        if devices < 1:
             raise ValueError
     except (TypeError, ValueError):
-        print(f"--devices expects a positive integer, got {_val!r}",
-              file=sys.stderr)
-        sys.exit(2)
-    del sys.argv[_at:_at + 2]
+        raise KnobError(
+            f"--devices expects a positive integer, got {value!r}")
+    return devices
+
+
+def _apply_devices(devices):
+    # the host platform device count is fixed at backend init — this
+    # must run before the first jax import anywhere in the process
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={DEVICES}"
+        + f" --xla_force_host_platform_device_count={devices}"
     ).strip()
 
-from benchmarks import (
+
+KNOBS = (
+    Knob("--dispatch", "dispatch", _parse_dispatch, "no dispatch knob"),
+    Knob("--seed", "seed", _parse_seed, "no seed knob"),
+    Knob("--devices", "devices", _parse_devices, "no devices knob",
+         pre_import=True, apply=_apply_devices),
+)
+
+
+def consume_knob(args: list, knob: Knob):
+    """Pop ``knob.flag VALUE`` from ``args``; ``(value, rest)`` or
+    ``(None, args)`` when the flag is absent.  Raises :class:`KnobError`
+    on an invalid (or missing) value."""
+    if knob.flag not in args:
+        return None, args
+    at = args.index(knob.flag)
+    raw = args[at + 1] if at + 1 < len(args) else None
+    return knob.parse(raw), args[:at] + args[at + 2:]
+
+
+# pre_import knobs take effect NOW, before the benchmark imports below
+# pull in jax
+PRE_VALUES = {}
+for _knob in (k for k in KNOBS if k.pre_import):
+    try:
+        _val, _rest = consume_knob(sys.argv[1:], _knob)
+    except KnobError as e:
+        print(e, file=sys.stderr)
+        sys.exit(2)
+    if _val is not None:
+        sys.argv = sys.argv[:1] + _rest
+        PRE_VALUES[_knob.param] = _val
+        if _knob.apply is not None:
+            _knob.apply(_val)
+
+from benchmarks import (  # noqa: E402  (after the pre_import phase)
     adaptive_budget,
     dispatch_bench,
     fig1_right,
@@ -65,12 +160,12 @@ from benchmarks import (
     lambda_decay,
     lossy_channels,
     roofline_table,
+    serve_stream,
     shard_scale,
     theory_bounds,
     tiered_m64,
     triggered_lm,
 )
-from repro.core.api import DISPATCH_MODES
 
 ALL = {
     "fig2_left": fig2_left.run,        # paper Fig 2 (Left)
@@ -84,6 +179,7 @@ ALL = {
     "lossy_channels": lossy_channels.run,  # beyond-paper: lossy wires (repro.net)
     "dispatch_bench": dispatch_bench.run,  # unroll/switch/hybrid step+compile
     "shard_scale": shard_scale.run,    # fleet sharding vs single-device vmap
+    "serve_stream": serve_stream.run,  # FleetSession serving throughput
     "triggered_lm": triggered_lm.run,  # beyond-paper: trigger on real arch
     "kernel_bench": kernel_bench.run,  # kernel traffic model
     "roofline_table": roofline_table.run,  # §Roofline from dry-run cache
@@ -125,10 +221,10 @@ def main() -> int:
     args = sys.argv[1:]
     if "--list" in args:
         stray = [a for a in args if a != "--list"]
-        if DEVICES is not None:
-            # --devices was consumed at module top; keep the --list
-            # contract honest anyway
-            stray.append(f"--devices {DEVICES}")
+        for param, value in PRE_VALUES.items():
+            # pre_import knobs were consumed at module top; keep the
+            # --list contract honest anyway
+            stray.append(f"--{param} {value}")
         if stray:
             # same loud-typo contract as the run path: --list takes no
             # other arguments, so reject them instead of silently
@@ -141,38 +237,17 @@ def main() -> int:
             return 2
         return list_benchmarks()
     smoke = "--smoke" in args
-    dispatch = None
-    if "--dispatch" in args:
-        at = args.index("--dispatch")
-        value = args[at + 1] if at + 1 < len(args) else None
-        # same loud-typo contract as unknown benchmark names: an
-        # invalid dispatch mode fails up front on stderr (rc 2),
-        # before anything runs — mirroring core.api's own validation
-        if value is None or value not in DISPATCH_MODES:
-            print(
-                f"unknown dispatch mode {value!r}: expected one of "
-                f"{', '.join(DISPATCH_MODES)}",
-                file=sys.stderr,
-            )
-            return 2
-        dispatch = value
-        args = args[:at] + args[at + 2:]
-    seed = None
-    if "--seed" in args:
-        at = args.index("--seed")
-        value = args[at + 1] if at + 1 < len(args) else None
-        # same loud-typo contract as --dispatch: a non-integer (or
-        # missing) seed fails up front on stderr (rc 2) before anything
-        # runs, instead of landing in the benchmark-name list
+    values = dict(PRE_VALUES)
+    for knob in KNOBS:
+        if knob.pre_import:
+            continue
         try:
-            seed = int(value)
-        except (TypeError, ValueError):
-            print(
-                f"--seed expects an integer, got {value!r}",
-                file=sys.stderr,
-            )
+            val, args = consume_knob(args, knob)
+        except KnobError as e:
+            print(e, file=sys.stderr)
             return 2
-        args = args[:at] + args[at + 2:]
+        if val is not None:
+            values[knob.param] = val
     names = [a for a in args if a != "--smoke"] or list(ALL)
     # reject unknown names (and stray flags, which land here too) UP
     # FRONT, on stderr, before anything runs: a typo'd CI invocation
@@ -190,43 +265,30 @@ def main() -> int:
     ran = 0
     for name in names:
         fn = ALL[name]
-        if smoke and "smoke" not in inspect.signature(fn).parameters:
+        params = inspect.signature(fn).parameters
+        if smoke and "smoke" not in params:
             # never silently fall back to a full-size, claim-asserting
             # run under --smoke
             print(f"\n===== {name} =====\n[{name}] SKIPPED: no smoke mode",
                   flush=True)
             continue
-        if dispatch and "dispatch" not in inspect.signature(fn).parameters:
-            # same contract for --dispatch: a benchmark that cannot pin
-            # the dispatch path must not silently run on the default
-            print(f"\n===== {name} =====\n[{name}] SKIPPED: no dispatch "
-                  f"knob", flush=True)
-            continue
-        if seed is not None and "seed" not in inspect.signature(fn).parameters:
-            # and for --seed: a benchmark whose randomness cannot be
-            # re-keyed must not silently run on its baked-in stream
-            print(f"\n===== {name} =====\n[{name}] SKIPPED: no seed knob",
-                  flush=True)
-            continue
-        if DEVICES is not None and (
-                "devices" not in inspect.signature(fn).parameters):
-            # and for --devices: an unsharded benchmark timed on a
-            # carved-up host platform would report numbers nobody asked
-            # for — skip it loudly instead
-            print(f"\n===== {name} =====\n[{name}] SKIPPED: no devices "
-                  f"knob", flush=True)
+        # generated from the registry: a benchmark that does not take an
+        # active knob must not silently run on its defaults (an
+        # unsharded benchmark timed on a carved-up host platform, a
+        # baked-in random stream under --seed, ... ) — skip it loudly
+        missing = [k for k in KNOBS
+                   if k.param in values and k.param not in params]
+        if missing:
+            for k in missing:
+                print(f"\n===== {name} =====\n[{name}] SKIPPED: "
+                      f"{k.skip_reason}", flush=True)
             continue
         print(f"\n===== {name} =====", flush=True)
         t0 = time.time()
         ran += 1
         try:
             kw = dict(smoke=True) if smoke else {}
-            if dispatch:
-                kw["dispatch"] = dispatch
-            if seed is not None:
-                kw["seed"] = seed
-            if DEVICES is not None:
-                kw["devices"] = DEVICES
+            kw.update({p: v for p, v in values.items() if p in params})
             fn(verbose=True, **kw)
             print(f"[{name}] OK in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:
@@ -234,9 +296,9 @@ def main() -> int:
             print(f"[{name}] FAILED: {type(e).__name__}: {e}", flush=True)
             traceback.print_exc()
     skipped = len(names) - ran
+    reasons = "/".join(["smoke"] + [k.param for k in KNOBS])
     print(f"\n{ran - len(failures)}/{ran} benchmarks passed"
-          + (f" ({skipped} skipped: no smoke/dispatch/seed/devices knob)"
-             if skipped else ""))
+          + (f" ({skipped} skipped: no {reasons} knob)" if skipped else ""))
     # a run that executed nothing (every name skipped) must not go green
     return 1 if failures or ran == 0 else 0
 

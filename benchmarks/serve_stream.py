@@ -1,0 +1,126 @@
+"""Streaming fleet serving throughput: rounds/sec of the m=64 tiered
+``FleetSession`` (train-on-arrival loop + live CommRollup telemetry).
+
+The batch benchmarks time the jitted step in isolation;
+``repro.launch.serve --fleet`` runs the step inside the serving loop —
+host-side observation sampling, double-buffered dispatch, per-round
+``device_get`` and rollup ingestion all ride along.  This benchmark
+times THAT loop for the fixed and the budget-adaptive m=64 tier mixes
+and reports the rollup's own throughput estimate (``rounds_per_sec``
+excludes the first round's compile by construction: the clock starts at
+the first completed update).
+
+The full run commits its payload as ``benchmarks/BENCH_serve.json`` —
+the reference the CI smoke gate's ``ref_floors`` spec reads: smoke-lane
+throughput must stay above a small fraction of the committed full-run
+number, so a serving-loop slowdown (a sync point sneaking into the
+double buffer, rollup lock contention) reddens CI even though the
+payload stays structurally clean.
+
+Claims (full mode): every mix sustains positive throughput, the rollup
+counts every round exactly once, every session's loss drops, gating
+keeps wire traffic under the all-dense equivalent, and the adaptive
+mix's rollup carries per-tier λ trajectories.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import fmt_row, save_result
+from repro.configs.paper_linreg import (
+    TIERED_M64,
+    TIERED_M64_ADAPTIVE,
+    TIERED_M64_CFG,
+)
+from repro.launch.session import build_linreg_fleet_session
+
+COMMITTED = Path(__file__).resolve().parent / "BENCH_serve.json"
+
+MIXES = (TIERED_M64, TIERED_M64_ADAPTIVE)
+SMOKE_ROUNDS = 60
+FULL_ROUNDS = 600
+
+
+def run(verbose: bool = True, smoke: bool = False) -> dict:
+    rounds = SMOKE_ROUNDS if smoke else FULL_ROUNDS
+    cfg_lr = TIERED_M64_CFG
+    dense_per_round = cfg_lr.num_agents * cfg_lr.n * 4.0
+    rows = []
+    for net in MIXES:
+        first = {}
+
+        def on_round(k, m, _first=first):
+            if k == 0:
+                _first["loss"] = float(m["loss"])
+
+        session = build_linreg_fleet_session(
+            net=net, seed=0, on_round=on_round)
+        n = session.run(rounds=rounds)
+        snap = session.rollup.snapshot()
+        tiers = {
+            name: {k: t[k] for k in
+                   ("tx_rate", "bytes_per_agent_round", "violations",
+                    "lam_ewma") if k in t}
+            for name, t in snap["tiers"].items()
+        }
+        rows.append({
+            "mix": net.name,
+            "m": net.num_agents,
+            "rounds": n,
+            "rounds_per_sec": snap["rounds_per_sec"],
+            "rounds_per_sec_window": snap["rounds_per_sec_window"],
+            "loss_first": first["loss"],
+            "loss_last": snap["gauges"]["loss"],
+            "num_tx": snap["counters"]["num_tx"],
+            "wire_bytes": snap["counters"]["wire_bytes"],
+            "budget_violation_rounds": snap["budget_violation_rounds"],
+            "tiers": tiers,
+        })
+    by_mix = {r["mix"]: r for r in rows}
+    adaptive = by_mix["tiered_m64_adaptive"]
+    claims = {
+        "throughput_positive": all(r["rounds_per_sec"] > 0 for r in rows),
+        "rollup_counted_every_round": all(r["rounds"] == rounds
+                                          for r in rows),
+        "every_mix_learns": all(r["loss_last"] < 0.5 * r["loss_first"]
+                                for r in rows),
+        # triggering + compression must beat the all-dense wire
+        # equivalent for the SAME round count
+        "gating_saves_bytes": all(
+            r["wire_bytes"] < rounds * dense_per_round for r in rows),
+        # the adaptive mix's controllers must surface λ trajectories in
+        # the rollup (the fixed mix has none — lam_ewma only appears
+        # under adaptive policies)
+        "adaptive_lam_tracked": any(
+            "lam_ewma" in t for t in adaptive["tiers"].values()),
+    }
+    payload = {
+        "config": (f"serve_stream (n={cfg_lr.n}, m={cfg_lr.num_agents}, "
+                   f"N={cfg_lr.samples_per_agent}, rounds={rounds}, "
+                   f"mixes={len(MIXES)})"),
+        "rounds": rounds,
+        "dense_bytes_per_round": dense_per_round,
+        "rows": rows,
+        "claims": claims,
+    }
+    if verbose:
+        print("mix,rounds,rounds_per_sec,loss_last,wire_bytes,violations")
+        for r in rows:
+            print(fmt_row(r["mix"], r["rounds"],
+                          f"{r['rounds_per_sec']:.1f}",
+                          f"{r['loss_last']:.4f}",
+                          f"{r['wire_bytes']:.0f}",
+                          r["budget_violation_rounds"]))
+        print("claims:", claims)
+    save_result("serve_stream_smoke" if smoke else "serve_stream", payload)
+    if not smoke:
+        # assert BEFORE touching the committed artifact: a red run must
+        # not clobber the claims-green throughput baseline
+        assert all(claims.values()), claims
+        COMMITTED.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -54,7 +54,12 @@ from benchmarks.common import fmt_row, save_result
 from repro.analysis import hlo_cost
 from repro.configs.base import TrainConfig
 from repro.configs.paper_linreg import TIER_MIXES, TIERED_M64
-from repro.core.api import DISPATCH_MODES, init_train_state, make_triggered_train_step
+from repro.core.api import (
+    DISPATCH_MODES,
+    StepOptions,
+    init_train_state,
+    make_triggered_train_step,
+)
 from repro.launch.mesh import make_fleet_mesh
 from repro.optim import optimizers as opt_lib
 from repro.sharding.agent_shard import make_sharded_train_step
@@ -120,7 +125,8 @@ def _scaling_rows(m, devices, dispatch, *, blocks, iters):
                       "compile_s": round(t2 - t1, 4)}
 
     compile_path("single_vmap", make_triggered_train_step(
-        _loss_fn, opt, cfg, hetero_dispatch=dispatch), 1)
+        _loss_fn, opt, cfg,
+        options=StepOptions(hetero_dispatch=dispatch)), 1)
     for s in shard_counts:
         compile_path(f"shard{s}", make_sharded_train_step(
             _loss_fn, opt, cfg, make_fleet_mesh(s)), s)
@@ -162,8 +168,9 @@ def _equiv_rows(devices, dispatch, *, steps):
                           comm=net.policies(lam_base=1.0))
         opt = opt_lib.from_config(cfg)
         step_ref = jax.jit(make_triggered_train_step(
-            _loss_fn, opt, cfg, hetero_dispatch=dispatch,
-            agent_metrics=True))
+            _loss_fn, opt, cfg,
+            options=StepOptions(hetero_dispatch=dispatch,
+                                agent_metrics=True)))
         step_sh = jax.jit(make_sharded_train_step(
             _loss_fn, opt, cfg, mesh, agent_metrics=True))
         params = {"w": jax.random.normal(jax.random.key(1), (N,))}

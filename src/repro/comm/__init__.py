@@ -43,6 +43,7 @@ from repro.comm.policy import (
     with_kernel,
 )
 from repro.comm.registry import Registry, StageSpec
+from repro.comm.rollup import CommRollup
 from repro.comm.spec import describe
 from repro.comm.stats import (
     CommStats,
@@ -68,6 +69,7 @@ __all__ = [
     "COMPRESSORS",
     "CTRL_WIDTH",
     "CommPolicy",
+    "CommRollup",
     "CommStats",
     "Compressor",
     "CompressorChain",

@@ -24,7 +24,6 @@ dense ``always``.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Sequence, Tuple, Union
 
@@ -265,12 +264,13 @@ def resolve_policy(cfg, policy: Optional[PoliciesLike] = None, *,
         parsed = CommPolicy.parse(comm)
         return with_kernel(parsed) if use_kernel else parsed
     if cfg.quantize_grads or cfg.topk_frac > 0 or cfg.error_feedback:
-        warnings.warn(
-            "TrainConfig.quantize_grads/topk_frac/error_feedback are "
-            "deprecated; use a CommPolicy spec, e.g. "
-            'TrainConfig(comm="gain_lookahead(lam=0.1)|topk(0.05)|int8+ef")',
-            DeprecationWarning,
-            stacklevel=3,
+        raise ValueError(
+            "TrainConfig.quantize_grads/topk_frac/error_feedback were "
+            "removed from the implicit resolution path; pass a CommPolicy "
+            "spec instead, e.g. "
+            'TrainConfig(comm="gain_lookahead(lam=0.1)|topk(0.05)|int8+ef") '
+            "(str(repro.comm.from_train_config(cfg)) converts an old "
+            "flag set to its spec string)."
         )
     return from_train_config(cfg, use_kernel=use_kernel)
 

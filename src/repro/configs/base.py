@@ -204,8 +204,11 @@ class TrainConfig:
     # tuple of specs for per-agent heterogeneous networks.  When set it
     # supersedes `trigger` and the legacy compression flags below.
     comm: Optional[Union[str, Tuple[str, ...]]] = None
-    # DEPRECATED flag spellings (mapped onto a CommPolicy by
-    # repro.comm.resolve_policy; `quantize_grads` wins over `topk_frac`):
+    # RETIRED flag spellings: setting any of these makes
+    # repro.comm.resolve_policy fail fast with a migration pointer.
+    # Convert an old flag set explicitly with
+    # str(repro.comm.from_train_config(cfg)) (quantize_grads wins over
+    # topk_frac there, as in the seed's if/elif).
     quantize_grads: bool = False   # legacy: int8 transmitted updates
     topk_frac: float = 0.0         # legacy: top-k sparsified wire (>0 on)
     error_feedback: bool = False   # legacy: EF memory for compression

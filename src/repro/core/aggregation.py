@@ -27,12 +27,11 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.comm.compressors import (  # noqa: F401  (compat re-exports; the
-    dequantize_int8,                  # kernels migrated to repro.comm)
-    fake_quantize,
-    quantize_int8,
-    topk_sparsify,
-)
+# the compression kernels live in repro.comm.compressors (import them
+# from there); these module-private aliases serve the legacy whole-tree
+# masked_mean_* paths below only
+from repro.comm.compressors import fake_quantize as _fake_quantize
+from repro.comm.compressors import topk_sparsify as _topk_sparsify
 
 
 class AggregateStats(NamedTuple):
@@ -73,7 +72,7 @@ def masked_mean_quantized(grads, alphas, ef_memory: Optional[object] = None):
     if ef_memory is not None:
         grads = jax.tree_util.tree_map(lambda g, m: g + m, grads, ef_memory)
 
-    sent = jax.tree_util.tree_map(fake_quantize, grads)
+    sent = jax.tree_util.tree_map(_fake_quantize, grads)
 
     new_mem = None
     if ef_memory is not None:
@@ -98,7 +97,7 @@ def masked_mean_topk(grads, alphas, frac: float, ef_memory: Optional[object] = N
 
     # each agent sparsifies ITS OWN gradient (leading axis = agents)
     sent = jax.tree_util.tree_map(
-        lambda g: jax.vmap(lambda gi: topk_sparsify(gi, frac)[0])(g), grads
+        lambda g: jax.vmap(lambda gi: _topk_sparsify(gi, frac)[0])(g), grads
     )
 
     new_mem = None

@@ -38,6 +38,7 @@ flags are converted through :func:`repro.comm.resolve_policy` (with a
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -77,10 +78,97 @@ METRIC_KEYS = ("loss", "comm_rate", "any_tx", "num_tx", "mean_gain",
 NET_METRIC_KEYS = ("wire_bytes_attempted", "num_delivered",
                    "delivered_rate", "mean_staleness")
 
+# per-agent metric vectors emitted under ``StepOptions.agent_metrics``
+# — the per-tier resolution the telemetry rollup (repro.comm.rollup)
+# and the tiered-network frontiers consume.  agent_lam appears only for
+# adaptive policies, agent_delivered/agent_staleness only on
+# net_state-carrying (lossy-channel) traces.
+AGENT_METRIC_KEYS = ("agent_tx", "agent_bytes", "agent_lam",
+                     "agent_delivered", "agent_staleness")
+
 # the heterogeneous-network execution paths, fastest first (the default
 # is DISPATCH_MODES[0]); benchmarks/run.py --dispatch validates against
 # this same tuple so the CLI and the API cannot drift apart
 DISPATCH_MODES = ("hybrid", "switch", "unroll")
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOptions:
+    """Execution options for :func:`make_triggered_train_step`.
+
+    One struct instead of the grown kwarg sprawl — the documented
+    step-construction surface::
+
+        step = make_triggered_train_step(
+            loss_fn, opt, cfg, policy=spec,
+            options=StepOptions(agent_metrics=True))
+
+    Fields:
+
+    * ``hetero_dispatch`` — heterogeneous-network execution path, one
+      of :data:`DISPATCH_MODES` (see the step docstring for the
+      trade-offs).  Homogeneous policies ignore it.
+    * ``barriers`` — keep the ``optimization_barrier`` ULP pins that
+      make the dispatch paths bit-identical; must be ``False`` under
+      ``vmap`` (no batching rule for the barrier primitive).
+    * ``agent_metrics`` — add the per-agent :data:`AGENT_METRIC_KEYS`
+      vectors to the metrics (tier-level wire accounting, λ
+      trajectories — the telemetry hand-off).
+    * ``scale`` / ``chan_scale`` — optional FIXED operating-point
+      coordinates: the built step's call-time ``scale``/``chan_scale``
+      arguments default to these when the caller passes ``None``
+      (frontier engines keep passing traced per-lane values instead).
+    * ``mesh`` / ``rules`` — the fleet-shard plumbing: a mesh swaps in
+      the shard_map'd step (:func:`repro.sharding.agent_shard.
+      make_sharded_train_step`) partitioned over the mesh's agent
+      axes; ``rules`` optionally overrides its sharding rules and
+      ``sketch_native`` turns on the gateway sketch-space merge.
+      ``hetero_dispatch``/``barriers`` are ignored on that path (the
+      sharded step is the hybrid dispatch, barrier-free, partitioned).
+
+    The pre-struct keyword spellings (``hetero_dispatch=``,
+    ``barriers=``, ``agent_metrics=`` directly on
+    ``make_triggered_train_step``) still work with a
+    ``DeprecationWarning`` and bit-equal behavior for one release.
+    """
+
+    hetero_dispatch: str = "hybrid"
+    barriers: bool = True
+    agent_metrics: bool = False
+    scale: Optional[float] = None
+    chan_scale: Optional[float] = None
+    mesh: Any = None
+    rules: Optional[dict] = None
+    sketch_native: bool = False
+
+    def __post_init__(self):
+        if self.hetero_dispatch not in DISPATCH_MODES:
+            raise ValueError(
+                f"unknown hetero_dispatch {self.hetero_dispatch!r}: "
+                f"expected one of "
+                f"{', '.join(repr(m) for m in DISPATCH_MODES)}"
+            )
+
+
+_UNSET = object()  # sentinel: legacy keyword not passed
+
+
+def _merge_legacy_options(options: Optional[StepOptions],
+                          legacy: dict) -> StepOptions:
+    """Fold the deprecated keyword spellings into a StepOptions (one
+    release of bit-equal behavior; tests pin the equivalence)."""
+    given = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if given:
+        import warnings
+
+        warnings.warn(
+            f"keyword(s) {', '.join(sorted(given))} on "
+            "make_triggered_train_step are deprecated; pass "
+            "options=StepOptions(...) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return dataclasses.replace(options or StepOptions(), **given)
 
 
 def _microbatched(fn, m: int):
@@ -194,12 +282,20 @@ def make_triggered_train_step(
     aux_loss_fn: Optional[Callable] = None,
     use_kernel: bool = False,
     oracle: Optional[tuple] = None,
-    hetero_dispatch: str = "hybrid",
-    barriers: bool = True,
-    agent_metrics: bool = False,
+    options: Optional[StepOptions] = None,
+    hetero_dispatch=_UNSET,
+    barriers=_UNSET,
+    agent_metrics=_UNSET,
 ):
     """Build ``train_step(state, batch, scale=None, chan_scale=None)
     -> (state, metrics)``.
+
+    Execution options live in one :class:`StepOptions` struct
+    (``options=``); the bare ``hetero_dispatch``/``barriers``/
+    ``agent_metrics`` keywords are the deprecated spellings — they
+    shim through with a ``DeprecationWarning`` and bit-equal behavior.
+    ``options.mesh`` routes to the fleet-sharded step
+    (:func:`repro.sharding.agent_shard.make_sharded_train_step`).
 
     ``loss_fn(params, batch) -> scalar`` is the local empirical loss; the
     batch pytree's leaves must carry a leading agent axis of size
@@ -268,16 +364,44 @@ def make_triggered_train_step(
     (``agent_tx``, ``agent_bytes``, both ``(m,)``) to the metrics —
     the per-tier wire accounting the tiered-network frontiers need.
     """
+    opts = _merge_legacy_options(
+        options,
+        dict(hetero_dispatch=hetero_dispatch, barriers=barriers,
+             agent_metrics=agent_metrics),
+    )
+    if opts.mesh is not None:
+        # fleet-shard plumbing: the shard_map'd hybrid step partitioned
+        # over the mesh's agent axes (microbatching, policy resolution
+        # and the per-agent machinery all happen inside)
+        from repro.sharding.agent_shard import make_sharded_train_step
+
+        step = make_sharded_train_step(
+            loss_fn, optimizer, cfg, opts.mesh, policy=policy,
+            aux_loss_fn=aux_loss_fn, use_kernel=use_kernel,
+            oracle=oracle, rules=opts.rules,
+            sketch_native=opts.sketch_native,
+            agent_metrics=opts.agent_metrics,
+        )
+        if opts.scale is None and opts.chan_scale is None:
+            return step
+
+        def pinned(state, batch, scale=None, chan_scale=None):
+            return step(
+                state, batch,
+                opts.scale if scale is None else scale,
+                opts.chan_scale if chan_scale is None else chan_scale,
+            )
+
+        return pinned
+    hetero_dispatch = opts.hetero_dispatch
+    barriers = opts.barriers
+    agent_metrics = opts.agent_metrics
+
     if cfg.microbatches > 1:
         loss_fn = _microbatched(loss_fn, cfg.microbatches)
         if aux_loss_fn is not None:
             aux_loss_fn = _microbatched(aux_loss_fn, cfg.microbatches)
 
-    if hetero_dispatch not in DISPATCH_MODES:
-        raise ValueError(
-            f"unknown hetero_dispatch {hetero_dispatch!r}: expected one "
-            f"of {', '.join(repr(m) for m in DISPATCH_MODES)}"
-        )
     resolved = normalize_policy(
         resolve_policy(cfg, policy, use_kernel=use_kernel), cfg.num_agents
     )
@@ -377,6 +501,12 @@ def make_triggered_train_step(
         return alpha, gain, (ctrl_row if use_ctrl else None)
 
     def train_step(state: TrainState, batch, scale=None, chan_scale=None):
+        # StepOptions may pin a FIXED operating point; a traced
+        # call-time coordinate (the frontier engines') always wins
+        if scale is None:
+            scale = opts.scale
+        if chan_scale is None:
+            chan_scale = opts.chan_scale
         # the channel engages only when the state actually carries the
         # per-agent channel rows — same static slot discipline as EF and
         # the controllers: a None slot traces the exact lossless program

@@ -65,6 +65,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import (
+    StepOptions,
     TrainState,
     init_train_state,
     make_triggered_train_step,
@@ -143,32 +144,21 @@ def make_frontier_step(
     hybrid dispatch partitioned).  ``rules`` optionally overrides the
     mesh's default sharding rules.
     """
-    if mesh is not None:
-        from repro.sharding.agent_shard import make_sharded_train_step
-
-        step = make_sharded_train_step(
-            loss_fn,
-            optimizer,
-            cfg,
-            mesh,
-            policy=policy,
-            aux_loss_fn=aux_loss_fn,
-            oracle=oracle,
-            rules=rules,
-            agent_metrics=True,
-        )
-    else:
-        step = make_triggered_train_step(
-            loss_fn,
-            optimizer,
-            cfg,
-            policy=policy,
-            aux_loss_fn=aux_loss_fn,
-            oracle=oracle,
+    step = make_triggered_train_step(
+        loss_fn,
+        optimizer,
+        cfg,
+        policy=policy,
+        aux_loss_fn=aux_loss_fn,
+        oracle=oracle,
+        options=StepOptions(
             hetero_dispatch=hetero_dispatch,
             barriers=False,
             agent_metrics=True,
-        )
+            mesh=mesh,
+            rules=rules,
+        ),
+    )
     if channel_axis:
         return jax.vmap(step, in_axes=(0, None, 0, 0))
     return jax.vmap(step, in_axes=(0, None, 0))

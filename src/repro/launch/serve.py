@@ -1,10 +1,25 @@
-"""Batched serving driver: prefill a prompt batch, then step the decode
-loop (one token per request per step against the KV/state cache).
+"""Serving drivers: the one-shot decode demo and the streaming fleet
+endpoint.
+
+Decode demo (default) — prefill a prompt batch, then step the decode
+loop (one token per request per step against the KV/state cache)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --reduced --batch 4 --prompt-len 32 --gen 16
 
-Decode shapes in the dry-run lower exactly this ``decode_step``.
+Fleet mode (``--fleet``) — a continuous m=64 tiered training session
+(:class:`repro.launch.session.FleetSession`): observation streams feed
+the triggered train step round after round while the CommStats rollup
+is served live as JSON (``/stats.json``) and Prometheus text
+(``/metrics``)::
+
+    PYTHONPATH=src python -m repro.launch.serve --fleet \
+        --mix tiered_m64_adaptive --rounds 0 --telemetry-port 9100 \
+        --telemetry-file /tmp/fleet.json --log-every 100
+
+``--rounds 0`` serves until interrupted; ``--telemetry-port 0`` picks
+an ephemeral port (printed on startup).  Decode shapes in the dry-run
+lower exactly this ``decode_step``.
 """
 from __future__ import annotations
 
@@ -18,6 +33,13 @@ from repro.configs import get_config, list_archs, reduced
 from repro.data import synthetic as D
 from repro.models import build
 
+# the m=64 fleet scenarios --fleet can serve (repro.configs.paper_linreg)
+FLEET_MIXES = (
+    "tiered_m64", "tiered_m64_adaptive", "tiered_m64_edge_heavy",
+    "tiered_m64_backbone_heavy", "tiered_m64_one_big",
+    "tiered_m64_lossy", "tiered_m64_adaptive_lossy",
+)
+
 
 def parse_args():
     ap = argparse.ArgumentParser(description=__doc__)
@@ -29,11 +51,72 @@ def parse_args():
     ap.add_argument("--cache-len", type=int, default=None)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    fleet = ap.add_argument_group("fleet mode")
+    fleet.add_argument("--fleet", action="store_true",
+                       help="run the streaming fleet session instead of "
+                            "the decode demo")
+    fleet.add_argument("--mix", default="tiered_m64_adaptive",
+                       choices=FLEET_MIXES,
+                       help="which m=64 tier mix to serve")
+    fleet.add_argument("--rounds", type=int, default=0,
+                       help="rounds to serve (0 = until interrupted)")
+    fleet.add_argument("--lam-base", type=float, default=1.0)
+    fleet.add_argument("--telemetry-port", type=int, default=None,
+                       help="serve /stats.json + /metrics on this port "
+                            "(0 = ephemeral)")
+    fleet.add_argument("--telemetry-file", default=None,
+                       help="write rollup JSON snapshots to this path")
+    fleet.add_argument("--log-every", type=int, default=100,
+                       help="rounds between stderr/file telemetry flushes")
     return ap.parse_args()
 
 
-def main():
-    args = parse_args()
+def serve_fleet(args) -> int:
+    from repro.configs import paper_linreg as PL
+    from repro.launch.session import build_linreg_fleet_session, file_sink
+
+    net = getattr(PL, args.mix.upper())
+    sink = None
+    session = build_linreg_fleet_session(
+        net=net, lam_base=args.lam_base, seed=args.seed,
+        on_round=lambda k, m: _fleet_log(session, sink, k, args.log_every))
+    if args.telemetry_file:
+        sink = file_sink(args.telemetry_file, session.rollup,
+                         every=args.log_every)
+    server = None
+    if args.telemetry_port is not None:
+        server = session.serve_telemetry(port=args.telemetry_port)
+        print(f"telemetry: {server.url}/stats.json  {server.url}/metrics",
+              flush=True)
+    print(f"fleet: mix={net.name} m={net.num_agents} "
+          f"rounds={args.rounds or 'until-interrupted'}", flush=True)
+    try:
+        n = session.run(rounds=args.rounds)
+    except KeyboardInterrupt:
+        n = session.rollup.rounds
+    finally:
+        if sink is not None:
+            sink.flush()
+        if server is not None:
+            server.stop()
+    snap = session.rollup.snapshot()
+    print(f"served {n} rounds at {snap['rounds_per_sec']:.1f} rounds/s, "
+          f"final loss {snap['gauges'].get('loss', float('nan')):.4f}",
+          flush=True)
+    return 0
+
+
+def _fleet_log(session, sink, k, every):
+    if sink is not None:
+        sink(k, None)
+    if every and (k + 1) % every == 0:
+        s = session.rollup.snapshot()
+        print(f"round {s['rounds']}: loss={s['gauges'].get('loss'):.4f} "
+              f"comm_rate={s['gauges'].get('comm_rate'):.3f} "
+              f"{s['rounds_per_sec_window']:.1f} rounds/s", flush=True)
+
+
+def serve_decode(args) -> int:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
@@ -84,6 +167,14 @@ def main():
     for b in range(min(args.batch, 2)):
         print(f"request {b}: prompt…{prompts[b, -8:].tolist()} "
               f"-> {gen[b].tolist()}")
+    return 0
+
+
+def main():
+    args = parse_args()
+    if args.fleet:
+        raise SystemExit(serve_fleet(args))
+    raise SystemExit(serve_decode(args))
 
 
 if __name__ == "__main__":

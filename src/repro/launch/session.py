@@ -1,0 +1,290 @@
+"""FleetSession — the long-running fleet serving loop (ROADMAP item 4).
+
+The batch drivers run K rounds and exit; the paper's setting is the
+opposite — a fleet of agents at physical locations streaming
+observations into a learner indefinitely, with budgets *monitored over
+time* (adaptive scheduling only pays off in that regime).  A
+``FleetSession`` is that loop: continuous per-round observation batches
+fed into the single-compile triggered train step, with every round's
+CommStats folded into a live :class:`repro.comm.rollup.CommRollup`
+that HTTP scrapes and file sinks read while training runs.
+
+Overlap discipline (the double buffer): the jitted step is dispatched
+asynchronously (JAX returns futures), the NEXT round's observation
+batch is sampled on the host while the device works, and only then are
+the finished round's metrics pulled — host-side sampling and telemetry
+ride inside the device step's shadow instead of serializing after it.
+The step donates its TrainState argument (``donate_argnums=(0,)``), so
+steady-state serving allocates no new state buffers on backends that
+support donation.
+
+Run modes:
+
+* ``run(rounds)`` — blocking loop, ``rounds=0`` means until ``stop()``.
+* ``start()`` / ``stop()`` — the same loop on a daemon thread, for
+  embedding under a CLI that also serves HTTP.
+
+``serve_telemetry()`` attaches a :class:`TelemetryServer` exposing
+``/stats.json`` (rollup snapshot) and ``/metrics`` (Prometheus text);
+``python -m repro.launch.serve --fleet`` is the CLI around all of this.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+import warnings
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.rollup import CommRollup
+
+# CPU/backends without buffer donation warn per-compile; the session's
+# donation is an optimization, not a correctness requirement
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable"
+)
+
+
+class FleetSession:
+    """Continuous train-on-arrival loop over a triggered train step.
+
+    Parameters
+    ----------
+    step_fn:
+        The UNjitted ``(state, batch) -> (state, metrics)`` train step
+        (``make_triggered_train_step`` output); the session jits it
+        with a donated state argument.
+    state:
+        Initial TrainState (``init_train_state``).
+    batch_fn:
+        ``batch_fn(key) -> batch`` — one round's per-agent observation
+        batch; called on the host with a per-round fold of ``key``.
+    rollup:
+        The :class:`CommRollup` every round's metrics stream into.
+    key:
+        Base PRNG key for the observation stream.
+    on_round:
+        Optional ``on_round(round_index, metrics_dict)`` host callback
+        (logging, file sinks); runs outside the rollup lock.
+    """
+
+    def __init__(self, step_fn: Callable, state, batch_fn: Callable,
+                 rollup: CommRollup, *, key=None,
+                 on_round: Optional[Callable] = None):
+        self._step = jax.jit(step_fn, donate_argnums=(0,))
+        self._state = state
+        self._batch_fn = batch_fn
+        self.rollup = rollup
+        self._key = key if key is not None else jax.random.key(0)
+        self._on_round = on_round
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    @property
+    def state(self):
+        """The latest TrainState (safe to read between rounds; racy but
+        harmless mid-round — JAX arrays are immutable snapshots)."""
+        return self._state
+
+    def run(self, rounds: int = 0) -> int:
+        """Blocking serve loop; returns the number of rounds executed.
+
+        ``rounds=0`` runs until :meth:`stop` is called (or KeyboardInterrupt).
+        """
+        k = 0
+        batch = self._batch_fn(jax.random.fold_in(self._key, 0))
+        while not self._stop.is_set() and (rounds == 0 or k < rounds):
+            # 1. dispatch round k (async — returns device futures)
+            self._state, metrics = self._step(self._state, batch)
+            # 2. sample round k+1's observations in the device's shadow
+            if rounds == 0 or k + 1 < rounds:
+                batch = self._batch_fn(jax.random.fold_in(self._key, k + 1))
+            # 3. pull round k's metrics (blocks on the device) and roll up
+            metrics = jax.device_get(metrics)
+            self.rollup.update(metrics)
+            if self._on_round is not None:
+                self._on_round(k, metrics)
+            k += 1
+        return k
+
+    # -- thread mode ---------------------------------------------------
+
+    def start(self, rounds: int = 0) -> None:
+        """Run the serve loop on a daemon thread."""
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError("session already running")
+        self._stop.clear()
+
+        def _target():
+            try:
+                self.run(rounds)
+            except BaseException as e:  # surfaced by stop()/join()
+                self._error = e
+
+        self._thread = threading.Thread(
+            target=_target, name="fleet-session", daemon=True)
+        self._thread.start()
+
+    def stop(self, timeout: float = 30.0) -> None:
+        """Signal the loop to finish its round and join the thread."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def serve_telemetry(self, port: int = 0) -> "TelemetryServer":
+        """Start an HTTP telemetry endpoint over this session's rollup."""
+        server = TelemetryServer(self.rollup, port=port)
+        server.start()
+        return server
+
+
+# ----------------------------------------------------------------------
+# telemetry sinks
+# ----------------------------------------------------------------------
+
+
+class TelemetryServer:
+    """Threaded HTTP exporter: ``/stats.json`` + Prometheus ``/metrics``.
+
+    ``port=0`` binds an ephemeral port (read it back from ``.port``) —
+    the mode tests and parallel CI lanes use.
+    """
+
+    def __init__(self, rollup: CommRollup, *, port: int = 0,
+                 host: str = "127.0.0.1"):
+        self.rollup = rollup
+
+        roll = rollup
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self):  # noqa: N802 (stdlib casing)
+                if self.path in ("/", "/stats.json", "/stats"):
+                    body = roll.to_json().encode()
+                    ctype = "application/json"
+                elif self.path == "/metrics":
+                    body = roll.to_prometheus().encode()
+                    ctype = "text/plain; version=0.0.4"
+                else:
+                    self.send_error(404)
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args):  # quiet scrape spam
+                pass
+
+        self._httpd = ThreadingHTTPServer((host, port), Handler)
+        self.host = host
+        self.port = int(self._httpd.server_address[1])
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> None:
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="fleet-telemetry",
+            daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(5.0)
+            self._thread = None
+
+
+def file_sink(path: str, rollup: CommRollup, every: int = 50):
+    """An ``on_round`` callback writing rollup snapshots to ``path``.
+
+    Atomic-enough for CI consumption: a whole snapshot is written each
+    ``every`` rounds via replace, so a concurrent reader never sees a
+    torn file.
+    """
+    import os
+
+    def _write():
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            f.write(rollup.to_json())
+        os.replace(tmp, path)
+
+    def _cb(k, metrics):
+        if (k + 1) % every == 0:
+            _write()
+
+    _cb.flush = _write
+    return _cb
+
+
+# ----------------------------------------------------------------------
+# scenario builder: the m=64 tiered linreg fleet
+# ----------------------------------------------------------------------
+
+
+def build_linreg_fleet_session(
+    net=None, cfg_lr=None, *, lam_base: float = 1.0, seed: int = 0,
+    mesh=None, window: int = 64, clock=time.monotonic,
+    on_round: Optional[Callable] = None,
+) -> FleetSession:
+    """A :class:`FleetSession` serving the paper's linreg fleet.
+
+    Defaults to the budget-adaptive m=64 smart-city scenario
+    (``TIERED_M64_ADAPTIVE`` over ``TIERED_M64_CFG``): closed-loop
+    controllers give the rollup live λ trajectories, and per-tier
+    budgets arm the violation counters.  ``mesh`` routes through
+    ``StepOptions.mesh`` to the fleet-sharded step.
+    """
+    from repro.configs.base import TrainConfig
+    from repro.configs.paper_linreg import TIERED_M64_ADAPTIVE, TIERED_M64_CFG
+    from repro.core import regression as R
+    from repro.core.api import (
+        StepOptions,
+        init_train_state,
+        make_triggered_train_step,
+    )
+    from repro.optim import optimizers as opt_lib
+
+    net = net or TIERED_M64_ADAPTIVE
+    cfg_lr = cfg_lr or TIERED_M64_CFG
+    if net.num_agents != cfg_lr.num_agents:
+        raise ValueError(
+            f"network {net.name} has {net.num_agents} agents but problem "
+            f"{cfg_lr.name} expects {cfg_lr.num_agents}")
+    problem = R.make_problem(cfg_lr, jax.random.key(seed))
+
+    def loss_fn(params, batch):
+        xs, ys = batch
+        r = xs @ params["w"] - ys
+        return 0.5 * jnp.mean(r * r)
+
+    cfg = TrainConfig(lr=cfg_lr.stepsize, optimizer="sgd",
+                      num_agents=cfg_lr.num_agents,
+                      comm=net.policies(lam_base=lam_base))
+    opt = opt_lib.from_config(cfg)
+    step_fn = make_triggered_train_step(
+        loss_fn, opt, cfg,
+        options=StepOptions(agent_metrics=True, mesh=mesh))
+    state = init_train_state({"w": jnp.zeros(cfg_lr.n)}, opt, cfg)
+    rollup = CommRollup(
+        tier_names=tuple(t.name for t in net.tiers),
+        tier_index=net.tier_index(),
+        budgets=net.budgets(),
+        window=window, clock=clock)
+    return FleetSession(
+        step_fn, state, lambda key: R.agent_batches(problem, key),
+        rollup, key=jax.random.key(seed + 1), on_round=on_round)

@@ -30,6 +30,7 @@ from repro.configs.base import InputShape, ModelConfig, TrainConfig, TriggerConf
 from repro.core.api import (
     METRIC_KEYS,
     NET_METRIC_KEYS,
+    StepOptions,
     TrainState,
     make_triggered_train_step,
 )
@@ -72,7 +73,6 @@ def plan_run(
     lr: float = 1e-2,
     fsdp: Optional[bool] = None,
     seq_shard: bool = False,
-    quantize_grads: bool = False,
     remat: bool = False,
     attn_q_block: Optional[int] = None,
     inner_batch_shard: bool = False,
@@ -110,7 +110,6 @@ def plan_run(
         microbatches=microbatches,
         trigger=trigger,
         comm=comm,
-        quantize_grads=quantize_grads,
     )
     rules = resolve_rules(
         mesh, fsdp=fsdp, agent_axes=agent_axes or ("data",),
@@ -246,17 +245,15 @@ def build_train_step(mesh, plan: RunPlan, *, compute_dtype="bfloat16",
     batch_ax = input_axes(cfg, plan.shape, num_agents=plan.num_agents)
     batch_specs = tree_pspecs(batch_ax, batch_abs, plan.rules, mesh)
 
-    if fleet_shard:
-        from repro.sharding.agent_shard import make_sharded_train_step
-
-        step_fn = make_sharded_train_step(
-            model.loss_fn, optimizer, plan.train_cfg, mesh,
-            rules=plan.rules,
-        )
-    else:
-        step_fn = make_triggered_train_step(
-            model.loss_fn, optimizer, plan.train_cfg
-        )
+    # fleet_shard routes through StepOptions.mesh — the one
+    # step-construction surface (DESIGN.md §9)
+    step_fn = make_triggered_train_step(
+        model.loss_fn, optimizer, plan.train_cfg,
+        options=StepOptions(
+            mesh=mesh if fleet_shard else None,
+            rules=plan.rules if fleet_shard else None,
+        ),
+    )
     metric_specs = {k: P() for k in METRIC_KEYS}
     if use_net:
         # net_state-carrying steps emit the attempted/delivered split

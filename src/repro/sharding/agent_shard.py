@@ -71,6 +71,7 @@ from repro.core.api import (
     _warn_ctrl_state_missing,
     _warn_ef_memory_missing,
     _warn_net_state_missing,
+    StepOptions,
     build_hybrid_machinery,
     make_triggered_train_step,
 )
@@ -161,8 +162,10 @@ def make_sharded_train_step(
         return make_triggered_train_step(
             loss_fn, optimizer, cfg, policy=policy,
             aux_loss_fn=aux_loss_fn, use_kernel=use_kernel, oracle=oracle,
-            hetero_dispatch="hybrid", barriers=False,
-            agent_metrics=agent_metrics,
+            options=StepOptions(
+                hetero_dispatch="hybrid", barriers=False,
+                agent_metrics=agent_metrics,
+            ),
         )
 
     bank = mach.bank

@@ -5,13 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 from _hypothesis_compat import given, settings, st
 
-from repro.core.aggregation import (
-    dequantize_int8,
-    fake_quantize,
-    masked_mean,
-    masked_mean_quantized,
-    quantize_int8,
-)
+from repro.comm.compressors import dequantize_int8, fake_quantize, quantize_int8
+from repro.core.aggregation import masked_mean, masked_mean_quantized
 
 
 def tree(key, A):
@@ -112,7 +107,7 @@ def test_error_feedback_reduces_bias(rng):
 # ----------------------------------------------------------------------
 
 def test_topk_sparsify_keeps_largest(rng):
-    from repro.core.aggregation import topk_sparsify
+    from repro.comm.compressors import topk_sparsify
 
     x = jnp.asarray([0.1, -5.0, 0.3, 2.0, -0.2, 0.05])
     sparse, kept = topk_sparsify(x, 0.34)  # k = 2
@@ -124,7 +119,7 @@ def test_topk_sparsify_keeps_largest(rng):
 @given(frac=st.floats(0.05, 1.0))
 @settings(max_examples=25, deadline=None)
 def test_topk_fraction_property(frac):
-    from repro.core.aggregation import topk_sparsify
+    from repro.comm.compressors import topk_sparsify
 
     x = jnp.linspace(-1.0, 1.0, 64) + 1e-3  # distinct magnitudes
     sparse, kept = topk_sparsify(x, frac)
@@ -139,7 +134,8 @@ def test_topk_fraction_property(frac):
 
 
 def test_masked_mean_topk_with_error_feedback(rng):
-    from repro.core.aggregation import masked_mean_topk, topk_sparsify
+    from repro.comm.compressors import topk_sparsify
+    from repro.core.aggregation import masked_mean_topk
 
     g = tree(rng, 2)
     alphas = jnp.array([1.0, 1.0])

@@ -63,17 +63,27 @@ def _synth_payload(spec):
     for fk in spec.get("finite_keys", []):
         if fk not in row_keys_seen:
             payload[fk] = 1.0
-    # a floors spec pins a minimum: the synthetic rows (all 1.0) must
-    # clear it, so lift every floored key to its floor
-    for fl in spec.get("floors", []):
-        floor_val = max(1.0, fl["min"])
+    # floors/ref_floors specs pin minimums: the synthetic rows (all
+    # 1.0) must clear them, so lift every gated key to its floor
+    def _lift(key, floor_val):
         for rows in payload.values():
             if isinstance(rows, list):
                 for row in rows:
-                    if isinstance(row, dict) and fl["key"] in row:
-                        row[fl["key"]] = floor_val
-        if fl["key"] in payload:
-            payload[fl["key"]] = floor_val
+                    if isinstance(row, dict) and key in row:
+                        row[key] = floor_val
+        if key in payload:
+            payload[key] = floor_val
+
+    for fl in spec.get("floors", []):
+        _lift(fl["key"], max(1.0, fl["min"]))
+    for rf in spec.get("ref_floors", []):
+        from benchmarks.check_smoke import numbers_under
+
+        ref = json.loads((REPO / rf["ref_file"]).read_text())
+        floor_val = rf["frac"] * min(numbers_under(ref, rf["ref_key"]))
+        _lift(rf["key"], max(1.0, floor_val, *[
+            fl["min"] for fl in spec.get("floors", [])
+            if fl["key"] == rf["key"]]))
     payload["claims"] = {c: True for c in spec.get("claims", [])}
     for k in spec.get("required_keys", []):
         payload.setdefault(k, "synthetic")
@@ -135,6 +145,19 @@ def test_gate_fails_on_floor_violation(smoke_dir):
     r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
     assert r.returncode == 1
     assert "below floor" in r.stderr
+
+
+def test_gate_fails_on_ref_floor_violation(smoke_dir):
+    """The serving-throughput gate reads its floor from the COMMITTED
+    full-run payload (benchmarks/BENCH_serve.json): a serving-loop
+    collapse reddens the gate without a hand-maintained constant."""
+    path = smoke_dir / "serve_stream_smoke.json"
+    payload = json.loads(path.read_text())
+    payload["rows"][0]["rounds_per_sec"] = 0.01
+    path.write_text(json.dumps(payload))
+    r = _run(["benchmarks.check_smoke", "--dir", str(smoke_dir)])
+    assert r.returncode == 1
+    assert "committed 'rounds_per_sec'" in r.stderr
 
 
 def test_gate_fails_on_wire_ratio_out_of_bounds(smoke_dir):

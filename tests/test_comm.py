@@ -2,8 +2,9 @@
 
 Covers the ISSUE-1 acceptance surface: spec round-trips, compressor
 chaining equivalence against the legacy aggregation paths, per-agent
-heterogeneous policies, the legacy TrainConfig shim (bit-identical
-metrics), and wire-byte accounting through CommStats.
+heterogeneous policies, the retired TrainConfig flag shim (fast-fail +
+explicit ``from_train_config`` converter, bit-identical metrics), and
+wire-byte accounting through CommStats.
 """
 import jax
 import jax.numpy as jnp
@@ -525,40 +526,63 @@ def _smoke_run(cfg, policy=None, steps=10, seed=0):
     return state, history
 
 
-def test_legacy_shim_equivalence_bit_identical():
-    """Old TrainConfig flags and the equivalent parsed spec produce
-    bit-identical metrics over a 10-step smoke run (ISSUE-1 acceptance)."""
+def test_legacy_flags_fast_fail():
+    """The PR-1 implicit flag shim is retired: a TrainConfig that still
+    sets quantize_grads/topk_frac/error_feedback fails fast with a
+    migration pointer instead of silently resolving."""
     legacy = TrainConfig(
         lr=0.1, optimizer="sgd", num_agents=2,
         trigger=TriggerConfig(kind="gain_lookahead", lam=0.01),
         quantize_grads=True, error_feedback=True,
     )
+    with pytest.raises(ValueError, match="from_train_config"):
+        _smoke_run(legacy)
+
+
+def test_explicit_converter_equivalence_bit_identical():
+    """``from_train_config`` remains the EXPLICIT migration path: an old
+    flag set run through it is bit-identical to the hand-written spec."""
+    from repro.comm import from_train_config
+
+    legacy = TrainConfig(
+        lr=0.1, optimizer="sgd", num_agents=2,
+        trigger=TriggerConfig(kind="gain_lookahead", lam=0.01),
+        quantize_grads=True, error_feedback=True,
+    )
+    converted = TrainConfig(
+        lr=0.1, optimizer="sgd", num_agents=2,
+        comm=str(from_train_config(legacy)),
+    )
     spec = TrainConfig(
         lr=0.1, optimizer="sgd", num_agents=2,
         comm="gain_lookahead(lam=0.01)|int8+ef",
     )
-    with pytest.deprecated_call():
-        _, h_legacy = _smoke_run(legacy)
+    _, h_conv = _smoke_run(converted)
     _, h_spec = _smoke_run(spec)
-    for a, b in zip(h_legacy, h_spec):
+    for a, b in zip(h_conv, h_spec):
         for k in a:
             assert np.array_equal(a[k], b[k]), (k, a[k], b[k])
 
 
-def test_legacy_topk_shim_equivalence_bit_identical():
+def test_explicit_topk_converter_equivalence_bit_identical():
+    from repro.comm import from_train_config
+
     legacy = TrainConfig(
         lr=0.1, optimizer="sgd", num_agents=2,
         trigger=TriggerConfig(kind="always"),
         topk_frac=0.25, error_feedback=True,
     )
+    converted = TrainConfig(
+        lr=0.1, optimizer="sgd", num_agents=2,
+        comm=str(from_train_config(legacy)),
+    )
     spec = TrainConfig(
         lr=0.1, optimizer="sgd", num_agents=2,
         comm="always|topk(0.25)+ef",
     )
-    with pytest.deprecated_call():
-        _, h_legacy = _smoke_run(legacy)
+    _, h_conv = _smoke_run(converted)
     _, h_spec = _smoke_run(spec)
-    for a, b in zip(h_legacy, h_spec):
+    for a, b in zip(h_conv, h_spec):
         for k in a:
             assert np.array_equal(a[k], b[k]), (k, a[k], b[k])
 

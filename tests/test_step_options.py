@@ -1,0 +1,143 @@
+"""StepOptions (ISSUE-8 api_redesign): execution options for
+make_triggered_train_step live in ONE struct, and the pre-struct
+keyword spellings (``hetero_dispatch=``/``barriers=``/
+``agent_metrics=`` directly on the factory) shim through with a
+DeprecationWarning and BIT-equal behavior."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.core.api import (
+    DISPATCH_MODES,
+    StepOptions,
+    init_train_state,
+    make_triggered_train_step,
+)
+from repro.optim import optimizers as opt_lib
+
+N_FEATURES = 4
+# heterogeneous 4-agent fleet: exercises the dispatch machinery the
+# options steer (two distinct policies -> a real stage bank)
+HETERO_SPEC = ("gain_lookahead(lam=0.1)|int8+ef ; always|topk(0.25) ; "
+               "gain_lookahead(lam=0.1)|int8+ef ; always|topk(0.25)")
+
+
+def linreg_loss(params, batch):
+    xs, ys = batch
+    r = xs @ params["w"] - ys
+    return 0.5 * jnp.mean(r * r)
+
+
+def _linreg_batch(key, A=4, N=16):
+    kx, kn = jax.random.split(key)
+    xs = jax.random.normal(kx, (A, N, N_FEATURES))
+    w_star = jnp.arange(1.0, N_FEATURES + 1)
+    ys = jnp.einsum("anj,j->an", xs, w_star) + 0.05 * jax.random.normal(
+        kn, (A, N))
+    return xs, ys
+
+
+def _run(step_fn, steps=5, seed=0):
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=4,
+                      comm=HETERO_SPEC)
+    opt = opt_lib.from_config(cfg)
+    state = init_train_state({"w": jnp.zeros(N_FEATURES)}, opt, cfg)
+    step = jax.jit(step_fn)
+    history = []
+    for k in range(steps):
+        state, m = step(state, _linreg_batch(jax.random.key(seed + k)))
+        history.append(jax.device_get(m))
+    return jax.device_get(state.params["w"]), history
+
+
+def _build(**kw):
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=4,
+                      comm=HETERO_SPEC)
+    return make_triggered_train_step(
+        linreg_loss, opt_lib.from_config(cfg), cfg, **kw)
+
+
+@pytest.mark.parametrize("legacy_kw,opts", [
+    (dict(hetero_dispatch="switch"),
+     StepOptions(hetero_dispatch="switch")),
+    (dict(hetero_dispatch="unroll", barriers=False),
+     StepOptions(hetero_dispatch="unroll", barriers=False)),
+    (dict(agent_metrics=True), StepOptions(agent_metrics=True)),
+])
+def test_legacy_keywords_shim_bit_equal(legacy_kw, opts):
+    """Each deprecated spelling warns AND produces bit-identical params
+    and metrics to the StepOptions path."""
+    with pytest.deprecated_call(match="StepOptions"):
+        legacy_step = _build(**legacy_kw)
+    new_step = _build(options=opts)
+    w_legacy, hist_legacy = _run(legacy_step)
+    w_new, hist_new = _run(new_step)
+    assert np.array_equal(w_legacy, w_new)
+    for ml, mn in zip(hist_legacy, hist_new):
+        assert set(ml) == set(mn)
+        for k in ml:
+            assert np.array_equal(ml[k], mn[k]), k
+
+
+def test_options_path_does_not_warn(recwarn):
+    _build(options=StepOptions(hetero_dispatch="switch"))
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_legacy_keyword_overrides_options_field():
+    """A legacy keyword passed ALONGSIDE options= wins for its field —
+    dataclasses.replace semantics, so partially migrated call sites
+    keep their old behavior until fully converted."""
+    with pytest.deprecated_call(match="StepOptions"):
+        step = _build(options=StepOptions(hetero_dispatch="hybrid",
+                                          agent_metrics=True),
+                      hetero_dispatch="switch")
+    _, hist = _run(step, steps=1)
+    # agent_metrics from the struct survived the merge
+    assert "agent_tx" in hist[0]
+
+
+def test_invalid_dispatch_rejected_on_both_paths():
+    with pytest.raises(ValueError, match="hetero_dispatch"):
+        StepOptions(hetero_dispatch="nope")
+    with pytest.raises(ValueError, match="hetero_dispatch"):
+        with pytest.deprecated_call():
+            _build(hetero_dispatch="nope")
+
+
+def test_all_dispatch_modes_are_constructible():
+    for mode in DISPATCH_MODES:
+        assert StepOptions(hetero_dispatch=mode).hetero_dispatch == mode
+
+
+def test_step_options_frozen():
+    opts = StepOptions()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        opts.agent_metrics = True
+
+
+def test_options_scale_pins_lambda_scale():
+    """StepOptions.scale is the default lam scale for every call — the
+    serving loop's way of pinning an operating point without threading
+    scale through each step invocation."""
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=4,
+                      comm="gain_lookahead(lam=0.1)")
+    opt = opt_lib.from_config(cfg)
+    batch = _linreg_batch(jax.random.key(0))
+
+    def one(step):
+        state = init_train_state({"w": jnp.zeros(N_FEATURES)}, opt, cfg)
+        _, m = jax.jit(step)(state, batch)
+        return jax.device_get(m)
+
+    silent = one(make_triggered_train_step(
+        linreg_loss, opt, cfg, options=StepOptions(scale=1e9)))
+    loud = one(make_triggered_train_step(
+        linreg_loss, opt, cfg, options=StepOptions(scale=0.0)))
+    assert float(silent["comm_rate"]) == 0.0  # λ huge: nobody transmits
+    assert float(loud["comm_rate"]) == 1.0    # λ zero: everyone does

@@ -16,12 +16,12 @@ from repro.optim import optimizers as opt_lib
 
 
 def make_run(arch="smollm-135m", trigger=None, steps_n=12, lr=0.05, seq=24,
-             batch=4, optimizer="sgd", quantize=False, fresh_data=False):
+             batch=4, optimizer="sgd", comm=None, fresh_data=False):
     mesh = make_host_mesh()
     cfg = tiny_cfg(arch)
     shape = InputShape("t", seq_len=seq, global_batch=batch, kind="train")
     plan = S.plan_run(cfg, shape, mesh, trigger=trigger, lr=lr,
-                      optimizer=optimizer, quantize_grads=quantize)
+                      optimizer=optimizer, comm=comm)
     jitted, *_ = S.build_train_step(mesh, plan, compute_dtype="float32")
     model = build(plan.cfg.replace(compute_dtype="float32"))
     params, _ = model.init(jax.random.key(0), dtype=jnp.float32)
@@ -80,8 +80,7 @@ def test_grad_norm_baseline_runs():
 
 def test_quantized_transmission_still_learns():
     """Beyond-paper int8 wire format: training still converges."""
-    _, hist = make_run(trigger=TriggerConfig(kind="gain_lookahead", lam=0.0),
-                       steps_n=15, quantize=True)
+    _, hist = make_run(comm="gain_lookahead(lam=0.0)|int8", steps_n=15)
     first = np.mean([h["loss"] for h in hist[:3]])
     last = np.mean([h["loss"] for h in hist[-3:]])
     assert last < first - 0.04, (first, last)
@@ -109,16 +108,11 @@ def test_metrics_match_thm2_accounting():
 
 def test_topk_sparse_transmission_still_learns():
     """Beyond-paper top-k wire format (10% of entries) + error feedback."""
-    import dataclasses
-
     mesh = make_host_mesh()
     cfg = tiny_cfg("smollm-135m")
     shape = InputShape("t", seq_len=24, global_batch=4, kind="train")
     plan = S.plan_run(mesh=mesh, cfg=cfg, shape=shape,
-                      trigger=TriggerConfig(kind="gain_lookahead"), lr=0.05)
-    plan = dataclasses.replace(
-        plan, train_cfg=dataclasses.replace(
-            plan.train_cfg, topk_frac=0.1, error_feedback=True))
+                      comm="gain_lookahead(lam=0.0)|topk(0.1)+ef", lr=0.05)
     jitted, *_ = S.build_train_step(mesh, plan, compute_dtype="float32")
     model = build(plan.cfg.replace(compute_dtype="float32"))
     params, _ = model.init(jax.random.key(0), dtype=jnp.float32)

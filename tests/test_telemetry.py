@@ -1,0 +1,354 @@
+"""The fleet telemetry plane (ISSUE-8): CommRollup streaming
+aggregation, its JSON/Prometheus exports, and the FleetSession serving
+loop around the triggered train step.
+
+Golden exports run against an INJECTED clock, so the JSON snapshot and
+the Prometheus text are pinned byte-exact; the threaded-producer test
+hammers the rollup lock from a pool while a reader snapshots; the
+session tests drive the real m=64 builder end-to-end (blocking run,
+daemon-thread run, live HTTP scrape, file sink).
+"""
+import json
+import math
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.comm import CommRollup
+from repro.launch.session import (
+    FleetSession,
+    TelemetryServer,
+    build_linreg_fleet_session,
+    file_sink,
+)
+
+
+def make_clock(start=0.0, step=0.5):
+    """Deterministic monotonic clock: start, start+step, ..."""
+    t = [start - step]
+
+    def clock():
+        t[0] += step
+        return t[0]
+
+    return clock
+
+
+def _two_round_rollup():
+    """A 3-agent / 2-tier rollup fed two hand-computable rounds."""
+    roll = CommRollup(
+        tier_names=("edge", "core"),
+        tier_index=[0, 0, 1],
+        budgets=[4.0, 4.0, float("inf")],
+        lam_alpha=0.5,
+        clock=make_clock(),
+    )
+    roll.update({
+        "loss": 1.0, "comm_rate": 0.5, "num_tx": 2, "wire_bytes": 12.0,
+        "agent_tx": np.array([1.0, 0.0, 1.0]),
+        "agent_bytes": np.array([8.0, 0.0, 4.0]),
+        "agent_lam": np.array([0.2, 0.4, 0.1]),
+    })
+    roll.update({
+        "loss": 0.5, "comm_rate": 1.0, "num_tx": 3, "wire_bytes": 20.0,
+        "agent_tx": np.array([1.0, 1.0, 1.0]),
+        "agent_bytes": np.array([8.0, 8.0, 4.0]),
+        "agent_lam": np.array([0.4, 0.6, 0.3]),
+    })
+    return roll
+
+
+# ----------------------------------------------------------------------
+# golden exports (deterministic clock)
+# ----------------------------------------------------------------------
+
+def test_snapshot_golden():
+    """The whole JSON snapshot, pinned value-exact.
+
+    Hand computation: updates at t=0.0 and t=0.5 → 1 round interval in
+    0.5 s = 2 rounds/sec.  Tier "edge" (agents 0, 1, budget 4 B): 3 of
+    4 possible transmissions, 24 B over 4 agent-rounds, agent 0 over
+    budget both rounds + agent 1 once → 3 violations; λ EWMA with
+    α=0.5: 0.3 then 0.5·0.3+0.5·0.5 = 0.4.  Tier "core" (agent 2,
+    inf budget): always transmits, never violates.
+    """
+    snap = _two_round_rollup().snapshot()
+    assert snap == {
+        "rounds": 2,
+        "elapsed_s": 0.5,
+        "rounds_per_sec": 2.0,
+        "rounds_per_sec_window": 2.0,
+        "gauges": {"loss": 0.5, "comm_rate": 1.0},
+        "counters": {"num_tx": 5.0, "wire_bytes": 32.0},
+        "budget_violation_rounds": 2,
+        "tiers": {
+            "edge": {
+                "agents": 2, "tx_total": 3.0, "tx_rate": 0.75,
+                "bytes_total": 24.0, "bytes_per_agent_round": 6.0,
+                "violations": 3, "budget_bytes_per_round": 4.0,
+                "lam_ewma": 0.4,
+            },
+            "core": {
+                "agents": 1, "tx_total": 2.0, "tx_rate": 1.0,
+                "bytes_total": 8.0, "bytes_per_agent_round": 4.0,
+                "violations": 0, "budget_bytes_per_round": None,
+                "lam_ewma": 0.2,
+            },
+        },
+    }
+    # the JSON rendering round-trips the same cut
+    assert json.loads(_two_round_rollup().to_json()) == json.loads(
+        json.dumps(snap))
+
+
+def test_prometheus_golden():
+    """The full v0.0.4 exposition text, byte-exact: fleet_ prefix,
+    counters end in _total, per-tier series carry tier labels, and
+    integral samples print as ints."""
+    text = _two_round_rollup().to_prometheus()
+    assert text == "\n".join([
+        "# HELP fleet_rounds_total Training rounds completed by the "
+        "serving loop.",
+        "# TYPE fleet_rounds_total counter",
+        "fleet_rounds_total 2",
+        "# HELP fleet_uptime_seconds Seconds between first and latest "
+        "round.",
+        "# TYPE fleet_uptime_seconds gauge",
+        "fleet_uptime_seconds 0.5",
+        "# HELP fleet_rounds_per_sec Overall training throughput "
+        "(rounds/sec).",
+        "# TYPE fleet_rounds_per_sec gauge",
+        "fleet_rounds_per_sec 2",
+        "# HELP fleet_rounds_per_sec_window Windowed training throughput "
+        "(rounds/sec).",
+        "# TYPE fleet_rounds_per_sec_window gauge",
+        "fleet_rounds_per_sec_window 2",
+        "# HELP fleet_loss Latest round's training loss.",
+        "# TYPE fleet_loss gauge",
+        "fleet_loss 0.5",
+        "# HELP fleet_comm_rate Latest round's fleet transmit fraction.",
+        "# TYPE fleet_comm_rate gauge",
+        "fleet_comm_rate 1",
+        "# HELP fleet_num_tx_total Transmissions attempted, cumulative.",
+        "# TYPE fleet_num_tx_total counter",
+        "fleet_num_tx_total 5",
+        "# HELP fleet_wire_bytes_total Effective (delivered) wire bytes, "
+        "cumulative.",
+        "# TYPE fleet_wire_bytes_total counter",
+        "fleet_wire_bytes_total 32",
+        "# HELP fleet_budget_violation_rounds_total Rounds with at least "
+        "one agent over its wire budget.",
+        "# TYPE fleet_budget_violation_rounds_total counter",
+        "fleet_budget_violation_rounds_total 2",
+        "# HELP fleet_tier_agents Agents in the tier.",
+        "# TYPE fleet_tier_agents gauge",
+        'fleet_tier_agents{tier="edge"} 2',
+        'fleet_tier_agents{tier="core"} 1',
+        "# HELP fleet_tier_tx_rate Cumulative per-tier transmit rate.",
+        "# TYPE fleet_tier_tx_rate gauge",
+        'fleet_tier_tx_rate{tier="edge"} 0.75',
+        'fleet_tier_tx_rate{tier="core"} 1',
+        "# HELP fleet_tier_wire_bytes_total Per-tier delivered wire "
+        "bytes, cumulative.",
+        "# TYPE fleet_tier_wire_bytes_total counter",
+        'fleet_tier_wire_bytes_total{tier="edge"} 24',
+        'fleet_tier_wire_bytes_total{tier="core"} 8',
+        "# HELP fleet_tier_bytes_per_agent_round Per-tier delivered "
+        "bytes per agent per round.",
+        "# TYPE fleet_tier_bytes_per_agent_round gauge",
+        'fleet_tier_bytes_per_agent_round{tier="edge"} 6',
+        'fleet_tier_bytes_per_agent_round{tier="core"} 4',
+        "# HELP fleet_tier_lam_ewma EWMA of the tier's controller "
+        "threshold lambda.",
+        "# TYPE fleet_tier_lam_ewma gauge",
+        'fleet_tier_lam_ewma{tier="edge"} 0.4',
+        'fleet_tier_lam_ewma{tier="core"} 0.2',
+        "# HELP fleet_tier_budget_violations_total Per-tier agent-round "
+        "budget violations, cumulative.",
+        "# TYPE fleet_tier_budget_violations_total counter",
+        'fleet_tier_budget_violations_total{tier="edge"} 3',
+        'fleet_tier_budget_violations_total{tier="core"} 0',
+    ]) + "\n"
+
+
+def test_empty_rollup_exports_cleanly():
+    """Zero rounds: no division blowups, exports still valid."""
+    roll = CommRollup(clock=make_clock())
+    snap = roll.snapshot()
+    assert snap["rounds"] == 0
+    assert snap["rounds_per_sec"] == 0.0
+    assert "tiers" not in snap
+    assert "fleet_rounds_total 0" in roll.to_prometheus()
+
+
+def test_lossy_keys_roll_up():
+    """Attempted-vs-delivered accounting: the delivered-byte fraction
+    appears once wire_bytes_attempted is ingested."""
+    roll = CommRollup(clock=make_clock())
+    for _ in range(2):
+        roll.update({"wire_bytes": 30.0, "wire_bytes_attempted": 40.0,
+                     "num_delivered": 3, "delivered_rate": 0.75,
+                     "mean_staleness": 1.5})
+    snap = roll.snapshot()
+    assert snap["delivered_byte_frac"] == 0.75
+    assert snap["counters"]["wire_bytes_attempted"] == 80.0
+    assert snap["gauges"]["mean_staleness"] == 1.5
+    text = roll.to_prometheus()
+    assert "fleet_wire_bytes_attempted_total 80" in text
+    assert "fleet_delivered_byte_frac 0.75" in text
+
+
+def test_tier_names_without_index_rejected():
+    with pytest.raises(ValueError, match="tier_index"):
+        CommRollup(tier_names=("a",))
+
+
+# ----------------------------------------------------------------------
+# thread safety
+# ----------------------------------------------------------------------
+
+def test_concurrent_producers_lose_no_updates():
+    """8 producers × 250 rounds race the lock while a reader snapshots;
+    every counter lands exactly (no torn read-modify-write)."""
+    roll = CommRollup(tier_names=("t",), tier_index=[0, 0],
+                      budgets=[1.0, 1.0])
+    stop = threading.Event()
+    seen = []
+
+    def produce():
+        for _ in range(250):
+            roll.update({"num_tx": 1, "wire_bytes": 2.0,
+                         "agent_tx": np.ones(2),
+                         "agent_bytes": np.full(2, 3.0)})
+
+    def scrape():
+        while not stop.is_set():
+            seen.append(roll.snapshot()["counters"].get("num_tx", 0.0))
+
+    reader = threading.Thread(target=scrape)
+    reader.start()
+    workers = [threading.Thread(target=produce) for _ in range(8)]
+    for w in workers:
+        w.start()
+    for w in workers:
+        w.join()
+    stop.set()
+    reader.join()
+    snap = roll.snapshot()
+    assert snap["rounds"] == 2000
+    assert snap["counters"]["num_tx"] == 2000.0
+    assert snap["counters"]["wire_bytes"] == 4000.0
+    assert snap["tiers"]["t"]["tx_total"] == 4000.0
+    assert snap["tiers"]["t"]["violations"] == 4000
+    assert snap["budget_violation_rounds"] == 2000
+    # the concurrent reader only ever saw monotone counter values
+    assert all(a <= b for a, b in zip(seen, seen[1:]))
+
+
+# ----------------------------------------------------------------------
+# the serving loop (real m=64 session)
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def session():
+    return build_linreg_fleet_session(seed=0)
+
+
+def test_fleet_session_blocking_run(session):
+    """N rounds through the real adaptive m=64 step: the rollup counts
+    every round, throughput is positive, counters are monotone and the
+    λ trajectories surface per tier."""
+    rounds_in = []
+    session._on_round = lambda k, m: rounds_in.append(k)
+    n = session.run(rounds=6)
+    session._on_round = None
+    assert n == 6 and rounds_in == list(range(6))
+    snap = session.rollup.snapshot()
+    assert snap["rounds"] >= 6
+    assert snap["rounds_per_sec"] > 0
+    assert math.isfinite(snap["gauges"]["loss"])
+    assert snap["counters"]["wire_bytes"] > 0
+    from repro.configs.paper_linreg import TIERED_M64_ADAPTIVE
+
+    assert set(snap["tiers"]) == {t.name for t in TIERED_M64_ADAPTIVE.tiers}
+    assert any("lam_ewma" in t for t in snap["tiers"].values())
+    before = snap["counters"]["num_tx"]
+    session.run(rounds=2)
+    assert session.rollup.snapshot()["counters"]["num_tx"] >= before
+
+
+def test_fleet_session_thread_mode_and_http_scrape(session, tmp_path):
+    """start()/stop() on a daemon thread while a TelemetryServer scrape
+    and a file sink read the same rollup live."""
+    sink = file_sink(str(tmp_path / "snap.json"), session.rollup, every=2)
+    session._on_round = sink
+    server = session.serve_telemetry(port=0)
+    try:
+        base = session.rollup.rounds
+        session.start(rounds=0)
+        # scrape while training runs
+        with urllib.request.urlopen(f"{server.url}/stats.json",
+                                    timeout=10) as r:
+            stats = json.loads(r.read())
+        with urllib.request.urlopen(f"{server.url}/metrics",
+                                    timeout=10) as r:
+            metrics = r.read().decode()
+        session.stop()
+        sink.flush()
+    finally:
+        session._on_round = None
+        server.stop()
+    assert stats["rounds"] >= base
+    assert metrics.startswith("# HELP fleet_rounds_total ")
+    assert 'fleet_tier_tx_rate{tier="backbone"}' in metrics
+    on_disk = json.loads((tmp_path / "snap.json").read_text())
+    assert on_disk["rounds"] >= stats["rounds"]
+    # the loop really stopped: no more rounds accumulate
+    settled = session.rollup.rounds
+    time.sleep(0.2)
+    assert session.rollup.rounds == settled
+
+
+def test_fleet_session_thread_error_surfaces():
+    """An exception on the serve thread re-raises from stop()."""
+
+    def bad_step(state, batch):
+        raise RuntimeError("boom")
+
+    sess = FleetSession(bad_step, {"w": np.zeros(2)},
+                        lambda key: None, CommRollup())
+    sess.start(rounds=1)
+    sess._thread.join(30)
+    with pytest.raises(RuntimeError, match="boom"):
+        sess.stop()
+
+
+def test_double_start_rejected(session):
+    session.start(rounds=0)
+    try:
+        with pytest.raises(RuntimeError, match="already running"):
+            session.start(rounds=0)
+    finally:
+        session.stop()
+
+
+def test_builder_rejects_mismatched_network():
+    from repro.configs.paper_linreg import FIG2_LEFT, TIERED_M64
+
+    with pytest.raises(ValueError, match="64 agents"):
+        build_linreg_fleet_session(net=TIERED_M64, cfg_lr=FIG2_LEFT)
+
+
+def test_telemetry_server_404():
+    roll = CommRollup()
+    server = TelemetryServer(roll, port=0)
+    server.start()
+    try:
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"{server.url}/nope", timeout=10)
+    finally:
+        server.stop()

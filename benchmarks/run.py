@@ -151,6 +151,7 @@ for _knob in (k for k in KNOBS if k.pre_import):
 
 from benchmarks import (  # noqa: E402  (after the pre_import phase)
     adaptive_budget,
+    async_rounds,
     dispatch_bench,
     fig1_right,
     fig2_left,
@@ -177,6 +178,7 @@ ALL = {
     "tiered_m64": tiered_m64.run,      # beyond-paper: m=64 tier-mix frontiers
     "adaptive_budget": adaptive_budget.run,  # beyond-paper: closed-loop λ
     "lossy_channels": lossy_channels.run,  # beyond-paper: lossy wires (repro.net)
+    "async_rounds": async_rounds.run,  # beyond-paper: latency wires + churn
     "dispatch_bench": dispatch_bench.run,  # unroll/switch/hybrid step+compile
     "shard_scale": shard_scale.run,    # fleet sharding vs single-device vmap
     "serve_stream": serve_stream.run,  # FleetSession serving throughput

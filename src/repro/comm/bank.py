@@ -33,7 +33,13 @@ trace-time property — see :meth:`StageBank.epilogues`): ``net`` is one
 agent's ``(NET_WIDTH,)`` row ``[staleness, aux, uid]``, ``chan_scale``
 the frontier's channel-parameter grid coordinate, ``delivered = alpha ×
 d`` the realized delivery (channel-free branches alias it to ``alpha``
-— zero extra ops for lossless tiers inside a lossy bank).
+— zero extra ops for lossless tiers inside a lossy bank).  When the
+bank carries a ``delay`` channel (``net_depth > 0``) the net operand is
+the enlarged ``(row, line)`` pair, a delay branch's ``sent`` output is
+the MATURED payload dequeued from its FIFO line and ``delivered`` its
+staleness-discounted application weight ``w ∈ [0, 1]`` — the same
+7-tuple contract, with non-delay branches passing the line through
+untouched so ``lax.switch`` keeps uniform branch pytrees.
 
 ``ctrl`` is one agent's ``(CTRL_WIDTH,)`` controller row — the
 closed-loop threshold state of the budget-adaptive triggers
@@ -150,6 +156,14 @@ class StageBank:
     def needs_net(self) -> bool:
         """Any bank policy carrying a non-trivial lossy channel?"""
         return any(c is not None for c in self.channels)
+
+    @property
+    def net_depth(self) -> int:
+        """Max delay-line depth across the bank's channels (0 = no
+        delay channels — ``net_state`` stays the bare rows array)."""
+        return max(
+            (c.depth for c in self.channels if c is not None), default=0
+        )
 
     @property
     def num_agents(self) -> int:
@@ -293,13 +307,26 @@ def _make_epilogue(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool,
         # branches without a channel alias delivered to alpha below —
         # no extra ops, which keeps mixed banks' lossless tiers exact
         use_chan = use_net and channel is not None and net is not None
+        use_delay = use_chan and channel.depth > 0
         eff_scale = scale
-        if use_chan:
-            from repro.net.channels import channel_round, stale_scale, tx_cost
+        if use_delay:
+            from repro.net.channels import delay_round, stale_scale
+
+            d, stale, commit = delay_round(channel, net, step, chan_scale)
+            eff_scale = stale_scale(scale, channel.boost, stale, adaptive)
+            if adaptive:
+                kw["delivered"] = d
+        elif use_chan:
+            from repro.net.channels import (
+                channel_round,
+                net_rows,
+                stale_scale,
+                tx_cost,
+            )
 
             cost = tx_cost(grad, chain)
             d, stale, finalize = channel_round(
-                channel, net, step, chan_scale, cost
+                channel, net_rows(net), step, chan_scale, cost
             )
             eff_scale = stale_scale(scale, channel.boost, stale, adaptive)
             if adaptive:
@@ -319,20 +346,38 @@ def _make_epilogue(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool,
             new_ctrl = ctrl  # pass the (unused) row through unchanged
         g_eff = ef_add(grad, ef_mem if use_ef else None)
         sent = chain.compress_tree(g_eff) if chain else g_eff
-        if use_chan:
+        if use_delay:
+            # enqueue the payload (iff alpha×d), dequeue the matured
+            # head: ``sent`` becomes the MATURED payload and
+            # ``delivered`` its staleness-discounted application
+            # weight — masked_mean then aggregates old payloads with
+            # discounted weights, no new aggregation primitive
+            out_sent, delivered, new_net = commit(alpha * d, sent)
+        elif use_chan:
             delivered = alpha * d
-            new_net = finalize(delivered)
+            new_row = finalize(delivered)
+            # inside a delay-carrying bank the net operand is the
+            # (row, line) pair; pass the (unused) line through so every
+            # switch branch keeps a uniform output pytree
+            new_net = (
+                (new_row, net[1]) if isinstance(net, tuple) else new_row
+            )
         else:
             delivered = alpha       # lossless: delivered IS the decision
-            new_net = net           # pass the (unused) row through
+            new_net = net           # pass the (unused) slot through
         if ef_mem is None:
             new_mem = None
         elif use_ef:
-            # a dropped transmission folds its WHOLE payload back
+            # a dropped/rejected transmission folds its WHOLE payload
+            # back (for delay lines d is the accept indicator: the EF
+            # residual is priced on what entered the wire, not on what
+            # matured this round)
             new_mem = ef_residual(g_eff, sent, alpha,
                                   delivered=d if use_chan else None)
         else:
             new_mem = jax.tree_util.tree_map(jax.numpy.zeros_like, ef_mem)
+        if use_delay:
+            sent = out_sent
         if use_net:
             return alpha, gain, sent, new_mem, new_ctrl, delivered, new_net
         return alpha, gain, sent, new_mem, new_ctrl

@@ -44,7 +44,7 @@ import numpy as np
 
 # scalar metric keys exported as last-value gauges when present
 _GAUGE_KEYS = ("loss", "comm_rate", "any_tx", "mean_gain", "grad_norm",
-               "delivered_rate", "mean_staleness")
+               "delivered_rate", "mean_staleness", "num_active")
 # scalar metric keys accumulated as counters when present
 _COUNTER_KEYS = ("num_tx", "wire_bytes", "wire_bytes_attempted",
                  "num_delivered")
@@ -107,6 +107,12 @@ class CommRollup:
         self._tier_lam_ewma = np.full(T, np.nan)
         self._tier_violations = np.zeros(T, np.int64)
         self._violation_rounds = 0
+        # per-tier ACTIVE agent-round denominators: under scenario churn
+        # (an ``agent_active`` mask in the metrics) only joined agents
+        # count toward the per-tier rate denominators; churn-free
+        # streams accumulate rounds × tier size exactly as before
+        self._tier_possible = np.zeros(T)
+        self._saw_churn = False
 
     # ------------------------------------------------------------------
     # ingest
@@ -123,7 +129,7 @@ class CommRollup:
         scal = {k: float(np.asarray(metrics[k]))
                 for k in _GAUGE_KEYS + _COUNTER_KEYS if k in metrics}
         idx = self._tier_index
-        agent_tx = agent_bytes = agent_lam = None
+        agent_tx = agent_bytes = agent_lam = agent_active = None
         if idx is not None:
             if "agent_tx" in metrics:
                 agent_tx = np.asarray(metrics["agent_tx"], np.float64)
@@ -131,6 +137,9 @@ class CommRollup:
                 agent_bytes = np.asarray(metrics["agent_bytes"], np.float64)
             if "agent_lam" in metrics:
                 agent_lam = np.asarray(metrics["agent_lam"], np.float64)
+            if "agent_active" in metrics:
+                agent_active = np.asarray(
+                    metrics["agent_active"], np.float64)
         now = self._clock()
         with self._lock:
             self.rounds += 1
@@ -145,14 +154,25 @@ class CommRollup:
                 if k in scal:
                     self._counters[k] = self._counters.get(k, 0.0) + scal[k]
             T = len(self._tier_names)
+            if agent_active is not None:
+                self._saw_churn = True
             for t in range(T):
                 mask = idx == t
+                if agent_active is not None:
+                    act_mask = mask & (agent_active > 0.5)
+                    self._tier_possible[t] += float(act_mask.sum())
+                else:
+                    act_mask = mask
+                    self._tier_possible[t] += float(self._tier_agents[t])
                 if agent_tx is not None:
                     self._tier_tx[t] += float(agent_tx[mask].sum())
                 if agent_bytes is not None:
                     self._tier_bytes[t] += float(agent_bytes[mask].sum())
-                if agent_lam is not None:
-                    mean = float(agent_lam[mask].mean())
+                if agent_lam is not None and act_mask.any():
+                    # λ EWMAs track ACTIVE agents only — a fully-parked
+                    # tier holds its last estimate instead of averaging
+                    # frozen controller rows into it
+                    mean = float(agent_lam[act_mask].mean())
                     prev = self._tier_lam_ewma[t]
                     self._tier_lam_ewma[t] = (
                         mean if np.isnan(prev)
@@ -197,7 +217,9 @@ class CommRollup:
                     self._counters.get("wire_bytes", 0.0) / att, 6)
             if self._tier_names:
                 tiers = {}
-                possible = self.rounds * self._tier_agents
+                # ACTIVE agent-rounds; equals rounds × tier size exactly
+                # on churn-free streams (no agent_active mask ever seen)
+                possible = self._tier_possible
                 for t, name in enumerate(self._tier_names):
                     row = {
                         "agents": int(self._tier_agents[t]),
@@ -211,6 +233,9 @@ class CommRollup:
                         ) if possible[t] else 0.0,
                         "violations": int(self._tier_violations[t]),
                     }
+                    if self._saw_churn:
+                        row["active_agent_rounds"] = round(
+                            float(possible[t]), 3)
                     if self._budgets is not None:
                         b = float(self._budgets[self._tier_index == t][0])
                         row["budget_bytes_per_round"] = (
@@ -253,6 +278,7 @@ class CommRollup:
             "grad_norm": "Latest round's aggregated gradient norm.",
             "delivered_rate": "Latest round's delivered-transmission rate.",
             "mean_staleness": "Latest round's mean EF staleness (rounds).",
+            "num_active": "Latest round's active (joined) agent count.",
         }
         for k, v in s["gauges"].items():
             emit(f"fleet_{k}", "gauge", gauge_help[k], v)
@@ -285,6 +311,9 @@ class CommRollup:
             ("fleet_tier_budget_violations_total", "counter",
              "Per-tier agent-round budget violations, cumulative.",
              "violations"),
+            ("fleet_tier_active_agent_rounds_total", "counter",
+             "Per-tier ACTIVE agent-rounds under scenario churn, "
+             "cumulative.", "active_agent_rounds"),
         ):
             rows = [(name, row[key]) for name, row in
                     s.get("tiers", {}).items() if key in row]

@@ -264,3 +264,56 @@ TIERED_M64_LOSSY = _lossy(TIERED_M64, "tiered_m64_lossy", LOSSY_CHANNEL)
 TIERED_M64_ADAPTIVE_LOSSY = _lossy(
     TIERED_M64_ADAPTIVE, "tiered_m64_adaptive_lossy", LOSSY_CHANNEL
 )
+
+
+# ----------------------------------------------------------------------
+# Latency tier mixes + scenario churn (benchmarks/async_rounds.py)
+# ----------------------------------------------------------------------
+
+# The async m=64 pairing: SAME fleet layouts and budgets, with a
+# geometric-latency wire (mean lag 2 rounds, FIFO depth 6) on every
+# metered tier.  DELAY_CHANNEL discounts stale payloads at application
+# (w = 1 / (1 + 0.5·(age−1))); DELAY_CHANNEL_NAIVE is the identical
+# wire with discount=0 — apply-on-arrival at full weight, the ablation
+# benchmarks/async_rounds.py compares at equal wire bytes.
+DELAY_CHANNEL = "delay(dist=geometric,lag=2.0,max_lag=6,discount=0.5)"
+DELAY_CHANNEL_NAIVE = "delay(dist=geometric,lag=2.0,max_lag=6)"
+TIERED_M64_DELAYED = _lossy(
+    TIERED_M64, "tiered_m64_delayed", DELAY_CHANNEL
+)
+TIERED_M64_ADAPTIVE_DELAYED = _lossy(
+    TIERED_M64_ADAPTIVE, "tiered_m64_adaptive_delayed", DELAY_CHANNEL
+)
+TIERED_M64_DELAYED_NAIVE = _lossy(
+    TIERED_M64, "tiered_m64_delayed_naive", DELAY_CHANNEL_NAIVE
+)
+
+
+def churn_schedule(net: TieredNetwork, steps: int, *, period: int = 4,
+                   skip: Tuple[str, ...] = ("backbone",)
+                   ) -> Tuple[Tuple[int, int], ...]:
+    """A deterministic per-agent ``(join, leave)`` activity schedule.
+
+    Within each metered tier, every ``period``-th agent (offset 1)
+    JOINS late — at ``steps // 4`` — and every ``period``-th (offset 2)
+    LEAVES early — at ``3·steps // 4``; everyone else, and every tier
+    in ``skip`` (the backbone, by default), is up for the whole run.
+    Roughly ``2/period`` of the metered fleet churns, the scenario
+    ``StepOptions(churn=...)`` and the rollup's active-agent-round
+    denominators are tested against.  Tier-contiguous agent order
+    matches :meth:`TieredNetwork.policies`.
+    """
+    late = max(steps // 4, 1)
+    early = max((3 * steps) // 4, late + 1)
+    sched = []
+    for t in net.tiers:
+        for j in range(t.count):
+            if t.name in skip:
+                sched.append((0, steps))
+            elif j % period == 1:
+                sched.append((late, steps))
+            elif j % period == 2:
+                sched.append((0, early))
+            else:
+                sched.append((0, steps))
+    return tuple(sched)

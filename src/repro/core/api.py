@@ -63,7 +63,14 @@ from repro.comm import (
 )
 from repro.configs.base import TrainConfig
 from repro.core.aggregation import masked_mean
-from repro.net.channels import channel_round, net_init, stale_scale, tx_cost
+from repro.net.channels import (
+    channel_round,
+    delay_round,
+    net_init,
+    net_rows,
+    stale_scale,
+    tx_cost,
+)
 from repro.sharding.constraint import constrain_params
 from repro.utils.tree import tree_add_scaled
 
@@ -78,13 +85,20 @@ METRIC_KEYS = ("loss", "comm_rate", "any_tx", "num_tx", "mean_gain",
 NET_METRIC_KEYS = ("wire_bytes_attempted", "num_delivered",
                    "delivered_rate", "mean_staleness")
 
+# extra scalar metric emitted ONLY by churn-carrying steps
+# (``StepOptions.churn``): the number of currently-active agents — the
+# denominator behind the active-only rates below.  Churn-free programs
+# keep their exact pre-churn key set.
+CHURN_METRIC_KEYS = ("num_active",)
+
 # per-agent metric vectors emitted under ``StepOptions.agent_metrics``
 # — the per-tier resolution the telemetry rollup (repro.comm.rollup)
 # and the tiered-network frontiers consume.  agent_lam appears only for
 # adaptive policies, agent_delivered/agent_staleness only on
-# net_state-carrying (lossy-channel) traces.
+# net_state-carrying (lossy-channel) traces, agent_active only on
+# churn-carrying traces.
 AGENT_METRIC_KEYS = ("agent_tx", "agent_bytes", "agent_lam",
-                     "agent_delivered", "agent_staleness")
+                     "agent_delivered", "agent_staleness", "agent_active")
 
 # the heterogeneous-network execution paths, fastest first (the default
 # is DISPATCH_MODES[0]); benchmarks/run.py --dispatch validates against
@@ -125,6 +139,13 @@ class StepOptions:
       ``sketch_native`` turns on the gateway sketch-space merge.
       ``hetero_dispatch``/``barriers`` are ignored on that path (the
       sharded step is the hybrid dispatch, barrier-free, partitioned).
+    * ``churn`` — the scenario-churn layer: a per-agent tuple of
+      ``(join_step, leave_step)`` pairs (length ``cfg.num_agents``).
+      Agent ``i`` is ACTIVE while ``join <= step < leave``; inactive
+      agents contribute zero gradient weight and zero wire bytes, their
+      EF/controller/channel state is frozen, and every rate-style
+      metric divides by the number of ACTIVE agents.  ``None`` (the
+      default) adds no ops — churn-free programs compile unchanged.
 
     The pre-struct keyword spellings (``hetero_dispatch=``,
     ``barriers=``, ``agent_metrics=`` directly on
@@ -140,6 +161,7 @@ class StepOptions:
     mesh: Any = None
     rules: Optional[dict] = None
     sketch_native: bool = False
+    churn: Optional[Tuple[Tuple[int, int], ...]] = None
 
     def __post_init__(self):
         if self.hetero_dispatch not in DISPATCH_MODES:
@@ -148,6 +170,23 @@ class StepOptions:
                 f"expected one of "
                 f"{', '.join(repr(m) for m in DISPATCH_MODES)}"
             )
+        if self.churn is not None:
+            # normalize to a hashable tuple-of-pairs and validate the
+            # schedule shape up front (the length-vs-num_agents check
+            # happens at step build, where the config is known)
+            pairs = tuple(tuple(int(v) for v in p) for p in self.churn)
+            for p in pairs:
+                if len(p) != 2:
+                    raise ValueError(
+                        f"churn entries must be (join, leave) pairs, "
+                        f"got {p!r}"
+                    )
+                if p[0] >= p[1]:
+                    raise ValueError(
+                        f"churn (join, leave) must satisfy join < "
+                        f"leave, got {p!r}"
+                    )
+            object.__setattr__(self, "churn", pairs)
 
 
 _UNSET = object()  # sentinel: legacy keyword not passed
@@ -269,7 +308,9 @@ def init_train_state(params, optimizer, cfg: TrainConfig,
         opt_state=optimizer.init(params),
         ef_memory=ef,
         ctrl_state=ctrl_init(resolved, cfg.num_agents),
-        net_state=net_init(resolved, cfg.num_agents),
+        # params size the delay-line payload buffer of @ delay policies;
+        # loss-only channels keep the bare (A, NET_WIDTH) rows
+        net_state=net_init(resolved, cfg.num_agents, params),
     )
 
 
@@ -381,6 +422,7 @@ def make_triggered_train_step(
             oracle=oracle, rules=opts.rules,
             sketch_native=opts.sketch_native,
             agent_metrics=opts.agent_metrics,
+            churn=opts.churn,
         )
         if opts.scale is None and opts.chan_scale is None:
             return step
@@ -408,6 +450,21 @@ def make_triggered_train_step(
     hetero: Optional[Tuple[CommPolicy, ...]] = (
         resolved if isinstance(resolved, tuple) else None
     )
+    if opts.churn is not None and len(opts.churn) != cfg.num_agents:
+        raise ValueError(
+            f"churn schedule has {len(opts.churn)} entries but "
+            f"num_agents={cfg.num_agents}"
+        )
+    if (
+        hetero is None
+        and resolved.needs_net
+        and resolved.channel_model().depth > 0
+    ):
+        # a homogeneous @ delay policy runs through the stage-bank
+        # dispatch (a P=1 bank): the delay line's enqueue/dequeue
+        # epilogue lives in ONE place (repro.comm.bank) instead of
+        # being re-derived on the homogeneous vmap path
+        hetero = (resolved,) * cfg.num_agents
 
     def build_stages(pol: CommPolicy):
         trig = pol.build_trigger(loss_fn=loss_fn, probe_eps=cfg.lr, oracle=oracle)
@@ -792,15 +849,24 @@ def make_triggered_train_step(
                 _warn_ctrl_state_missing()
             per = []
             ctrl_rows = []
-            net_rows = []
+            net_rows_out = []
             for i, (trig_i, chain_i, ef_i, ad_i, chan_i) in enumerate(stages):
                 agent_batch = jax.tree_util.tree_map(lambda x: x[i], batch)
                 main, g = grad_prologue(state.params, agent_batch, True)
                 use_chan = use_net and chan_i is not None
-                if use_chan:
+                use_delay = use_chan and chan_i.depth > 0
+                net_i = jax.tree_util.tree_map(
+                    lambda x: x[i], state.net_state
+                ) if use_net else None
+                if use_delay:
+                    d, stale, commit = delay_round(
+                        chan_i, net_i, state.step, chan_scale
+                    )
+                    eff_scale = stale_scale(scale, chan_i.boost, stale, ad_i)
+                elif use_chan:
                     cost = tx_cost(g, chain_i)
                     d, stale, finalize = channel_round(
-                        chan_i, state.net_state[i], state.step,
+                        chan_i, net_rows(net_i), state.step,
                         chan_scale, cost,
                     )
                     eff_scale = stale_scale(scale, chan_i.boost, stale, ad_i)
@@ -824,15 +890,24 @@ def make_triggered_train_step(
                 resid = ef_residual(
                     g_eff, s, alpha, delivered=d if use_chan else None
                 ) if use_ef else None
-                if use_chan:
+                if use_delay:
+                    # the wire payload enqueues; what the server sees
+                    # is the matured head with its staleness weight
+                    s, delivered, new_net_i = commit(alpha * d, s)
+                    net_rows_out.append(new_net_i)
+                elif use_chan:
                     delivered = alpha * d
-                    net_rows.append(finalize(delivered))
+                    new_row = finalize(delivered)
+                    net_rows_out.append(
+                        (new_row, net_i[1]) if isinstance(net_i, tuple)
+                        else new_row
+                    )
                 else:
                     # channel-free agent (inside a lossy network or not):
                     # delivery IS the decision and the row is untouched
                     delivered = alpha
                     if use_net:
-                        net_rows.append(state.net_state[i])
+                        net_rows_out.append(net_i)
                 per.append((main, alpha, gain, s, resid, delivered))
 
             # materialize the stacked per-agent scalars: without the
@@ -849,7 +924,9 @@ def make_triggered_train_step(
             alphas = stack([p[1] for p in per])
             gains = stack([p[2] for p in per])
             delivereds = stack([p[5] for p in per]) if use_net else alphas
-            new_net = jnp.stack(net_rows) if use_net else state.net_state
+            new_net = jax.tree_util.tree_map(
+                lambda *leaves: jnp.stack(leaves), *net_rows_out
+            ) if use_net else state.net_state
             sent = jax.tree_util.tree_map(
                 lambda *leaves: jnp.stack(leaves), *[p[3] for p in per]
             )
@@ -869,6 +946,43 @@ def make_triggered_train_step(
             new_ctrl = (
                 jnp.stack(ctrl_rows) if use_ctrl else state.ctrl_state
             )
+
+        # scenario churn: inactive agents (outside their [join, leave)
+        # window) are masked OUT of this round — zero aggregation
+        # weight, zero wire bytes, frozen per-agent state — all with
+        # jnp.where/multiplies over the agent axis AFTER dispatch, so
+        # one mask covers every execution path.  churn=None (the
+        # default) is a static skip: churn-free programs compile
+        # unchanged.
+        if opts.churn is not None:
+            act = (
+                (state.step >= jnp.asarray(
+                    [j for j, _ in opts.churn], jnp.int32))
+                & (state.step < jnp.asarray(
+                    [l for _, l in opts.churn], jnp.int32))
+            ).astype(jnp.float32)
+            n_act = jnp.maximum(fold_sum(act), 1.0)
+            alphas = alphas * act
+            gains = gains * act
+            delivereds = delivereds * act
+
+            def freeze(new, old):
+                return jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(
+                        act.reshape((-1,) + (1,) * (n.ndim - 1)) > 0.5,
+                        n, o,
+                    ),
+                    new, old,
+                )
+
+            if new_ef is not None and new_ef is not state.ef_memory:
+                new_ef = freeze(new_ef, state.ef_memory)
+            if new_ctrl is not None and new_ctrl is not state.ctrl_state:
+                new_ctrl = freeze(new_ctrl, state.ctrl_state)
+            if use_net:
+                new_net = freeze(new_net, state.net_state)
+        else:
+            act = n_act = None
 
         # eq. (10) over DELIVERED messages: under a lossy channel the
         # server can only average what arrived.  Channel-free paths bind
@@ -904,22 +1018,41 @@ def make_triggered_train_step(
             ),
             "wire_bytes": stats.wire_bytes,
         }
+        if act is not None:
+            # active-only accounting: inactive agents are excluded from
+            # every mean/rate (their alphas/gains/delivereds are already
+            # masked to zero above, so only the denominators change)
+            metrics["loss"] = fold_sum(losses * act) / n_act
+            metrics["comm_rate"] = stats.num_tx / n_act
+            metrics["mean_gain"] = fold_sum(gains) / n_act
+            metrics["num_active"] = fold_sum(act)
         if use_net:
             # the attempted/delivered split: comm_rate/any_tx/num_tx and
             # wire_bytes_attempted price the DECISIONS (what agents put
             # on the wire); wire_bytes is redefined to what ARRIVED —
             # the bytes the budget controllers are accountable for.
-            # Emitted only on net_state-carrying traces so channel-free
-            # programs keep the exact METRIC_KEYS signature.
+            # Under a delay channel ``delivereds`` are the
+            # staleness-discounted APPLICATION weights of the matured
+            # payloads, so the delivered metrics price what entered the
+            # aggregate this round.  Emitted only on net_state-carrying
+            # traces so channel-free programs keep the exact
+            # METRIC_KEYS signature.
             dstats = comm_stats(delivereds, gains, structural=sb,
                                 ratios=ratios)
             metrics["wire_bytes"] = dstats.wire_bytes
             metrics["wire_bytes_attempted"] = stats.wire_bytes
             metrics["num_delivered"] = dstats.num_tx
             metrics["delivered_rate"] = dstats.comm_rate
-            metrics["mean_staleness"] = (
-                fold_sum(new_net[:, 0]) / new_net.shape[0]
-            )
+            stale_col = net_rows(new_net)[:, 0]
+            if act is not None:
+                metrics["delivered_rate"] = dstats.num_tx / n_act
+                metrics["mean_staleness"] = fold_sum(
+                    stale_col * act
+                ) / n_act
+            else:
+                metrics["mean_staleness"] = (
+                    fold_sum(stale_col) / stale_col.shape[0]
+                )
         if agent_metrics:
             # per-agent vectors for tier-level accounting (a (1,)-long
             # ratio tuple is the homogeneous case and broadcasts);
@@ -929,9 +1062,11 @@ def make_triggered_train_step(
             metrics["agent_bytes"] = per_agent_wire_bytes(
                 delivereds, structural=sb, ratios=ratios
             )
+            if act is not None:
+                metrics["agent_active"] = act
             if use_net:
                 metrics["agent_delivered"] = delivereds
-                metrics["agent_staleness"] = new_net[..., 0]
+                metrics["agent_staleness"] = net_rows(new_net)[..., 0]
             if needs_ctrl and new_ctrl is not None:
                 # the controllers' per-agent thresholds — the λ
                 # trajectories the adaptive benchmarks plot

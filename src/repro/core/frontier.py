@@ -59,6 +59,7 @@ hybrid/switch/unroll lane-for-lane equality under the grid).
 """
 from __future__ import annotations
 
+import inspect
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
@@ -112,6 +113,24 @@ def budget_scales(targets, base: float) -> jnp.ndarray:
     return jnp.asarray(targets, jnp.float32) / jnp.float32(base)
 
 
+def _batch_fn_arity(batch_fn: Callable) -> int:
+    """1 for the classic ``batch_fn(round_key)``, 2 for the
+    round-indexed ``batch_fn(round_key, step)`` form (drifting-target
+    data modes need the round number to evaluate the drift inside the
+    scan).  Uninspectable callables default to the 1-arg contract."""
+    try:
+        params = inspect.signature(batch_fn).parameters
+    except (TypeError, ValueError):
+        return 1
+    n = 0
+    for p in params.values():
+        if p.kind == p.VAR_POSITIONAL:
+            return 2
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+            n += 1
+    return 2 if n >= 2 else 1
+
+
 def make_frontier_step(
     loss_fn: Callable,
     optimizer,
@@ -124,6 +143,7 @@ def make_frontier_step(
     channel_axis: bool = False,
     mesh=None,
     rules=None,
+    churn=None,
 ):
     """Build ``batched_step(states, batch, scales) -> (states, metrics)``.
 
@@ -157,6 +177,7 @@ def make_frontier_step(
             agent_metrics=True,
             mesh=mesh,
             rules=rules,
+            churn=churn,
         ),
     )
     if channel_axis:
@@ -181,6 +202,7 @@ def run_frontier(
     chan_scales=None,
     mesh=None,
     rules=None,
+    churn=None,
 ) -> FrontierResult:
     """Run a whole loss-vs-communication frontier as ONE jitted program.
 
@@ -192,8 +214,13 @@ def run_frontier(
     compiles in a different fusion context; the integer-valued wire
     accounting stays exact).  ``batch_fn(round_key) -> batch`` samples one
     round's per-agent batch inside the scan; every lane consumes the
-    same batch.  ``steps`` rounds are scanned with keys split from
-    ``key``.
+    same batch.  A two-argument ``batch_fn(round_key, step)``
+    additionally receives the traced round index (an i32 scalar) —
+    drifting-target data modes evaluate their drift schedule inside the
+    scan; the one-argument form keeps the exact pre-feature scan carry.
+    ``steps`` rounds are scanned with keys split from ``key``.
+    ``churn`` threads a per-agent ``((join, leave), ...)`` activity
+    schedule to every lane (see :class:`StepOptions`).
 
     ``chan_scales`` adds the channel-parameter grid axis: a ``(G,)``
     per-lane channel-severity coordinate (must match ``scales`` in
@@ -230,34 +257,43 @@ def run_frontier(
         channel_axis=chan_scales is not None,
         mesh=mesh,
         rules=rules,
+        churn=churn,
     )
+    arity = _batch_fn_arity(batch_fn)
+
+    def _xs(key):
+        keys = jax.random.split(key, steps)
+        if arity == 1:
+            return keys
+        return keys, jnp.arange(steps, dtype=jnp.int32)
+
+    def _batch(x):
+        return batch_fn(*x) if arity >= 2 else batch_fn(x)
 
     if chan_scales is None:
         def _run(params, scales, key):
             state0 = init_train_state(params, optimizer, cfg, policy=policy)
             states = stack_states(state0, grid)
-            keys = jax.random.split(key, steps)
 
-            def body(states, k):
-                states, metrics = batched_step(states, batch_fn(k), scales)
+            def body(states, x):
+                states, metrics = batched_step(states, _batch(x), scales)
                 return states, metrics
 
-            return jax.lax.scan(body, states, keys)
+            return jax.lax.scan(body, states, _xs(key))
 
         states, metrics = jax.jit(_run)(params, scales, key)
     else:
         def _run(params, scales, chan_scales, key):
             state0 = init_train_state(params, optimizer, cfg, policy=policy)
             states = stack_states(state0, grid)
-            keys = jax.random.split(key, steps)
 
-            def body(states, k):
+            def body(states, x):
                 states, metrics = batched_step(
-                    states, batch_fn(k), scales, chan_scales
+                    states, _batch(x), scales, chan_scales
                 )
                 return states, metrics
 
-            return jax.lax.scan(body, states, keys)
+            return jax.lax.scan(body, states, _xs(key))
 
         states, metrics = jax.jit(_run)(params, scales, chan_scales, key)
     # scan stacks metrics (K, G, ...) — present them grid-major (G, K, ...)
@@ -287,6 +323,9 @@ def frontier_curve(result: FrontierResult) -> Dict[str, jnp.ndarray]:
     if "agent_lam" in m:
         # final per-agent controller thresholds (adaptive policies)
         curve["agent_lam"] = m["agent_lam"][:, -1]
+    if "num_active" in m:
+        # churn frontiers: run-mean active-agent count per lane
+        curve["num_active"] = jnp.mean(m["num_active"], axis=1)
     if result.chan_scales is not None:
         curve["chan_scale"] = result.chan_scales
     if "wire_bytes_attempted" in m:

@@ -101,3 +101,52 @@ def batch_iterator(
             seq_len=seq_len,
         )
         step += 1
+
+
+# ----------------------------------------------------------------------
+# Drifting-target regression (non-stationary rounds)
+# ----------------------------------------------------------------------
+
+def drifting_problem(problem, step, *, amp: float = 1.0,
+                     period: int = 32, seed: int = 0):
+    """The paper's regression Problem with a smoothly drifting target.
+
+    ``w*(k) = w* + amp · sin(2πk / period) · u`` for a fixed random unit
+    direction ``u`` drawn from ``seed`` — a deterministic, seed-stable
+    non-stationarity: the optimum circles its nominal value instead of
+    sitting still, so triggers that went quiet at convergence must
+    re-open and channels with latency apply payloads aimed at a target
+    that has since moved.  ``step`` may be a traced i32 scalar (the
+    frontier engine's round index), so the drift evaluates inside the
+    single-compile scan.
+    """
+    import dataclasses
+
+    u = jax.random.normal(jax.random.PRNGKey(seed), problem.w_star.shape,
+                          jnp.float32)
+    u = u / jnp.sqrt(jnp.sum(u * u))
+    phase = 2.0 * jnp.pi * jnp.asarray(step, jnp.float32) / float(period)
+    return dataclasses.replace(
+        problem, w_star=problem.w_star + float(amp) * jnp.sin(phase) * u
+    )
+
+
+def drifting_batch_fn(problem, *, amp: float = 1.0, period: int = 32,
+                      seed: int = 0):
+    """A two-argument ``batch_fn(round_key, step)`` over a drifting target.
+
+    Plugs straight into :func:`repro.core.frontier.run_frontier`, whose
+    scan passes the round index to two-argument batch functions; each
+    round samples fresh per-agent batches from the Problem evaluated at
+    that round's drifted ``w*``.
+    """
+    from repro.core import regression as _R
+
+    def batch_fn(key, step):
+        return _R.agent_batches(
+            drifting_problem(problem, step, amp=amp, period=period,
+                             seed=seed),
+            key,
+        )
+
+    return batch_fn

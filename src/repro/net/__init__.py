@@ -1,11 +1,13 @@
-"""repro.net — lossy-channel network simulation.
+"""repro.net — lossy/latent-channel network simulation.
 
 Channel models (``ideal`` / ``bernoulli`` / ``gilbert_elliott`` /
-``rate``) attach to CommPolicies with the ``@`` spec suffix and run as
-traced per-round randomness inside the single-compile train step; the
-per-agent ``[staleness, aux, uid]`` state lives in the TrainState's
-``net_state`` slot.  See repro.net.channels for the full model and
-DESIGN.md §7 for the layering.
+``rate`` / ``delay``) attach to CommPolicies with the ``@`` spec suffix
+and run as traced per-round randomness inside the single-compile train
+step; the per-agent ``[staleness, aux, uid]`` state lives in the
+TrainState's ``net_state`` slot — enlarged to a ``(rows, line)`` pair
+holding the in-flight payload FIFO when a ``delay`` channel is present.
+See repro.net.channels for the full model and DESIGN.md §7 for the
+layering.
 """
 from repro.net.channels import (
     CHANNELS,
@@ -13,7 +15,9 @@ from repro.net.channels import (
     ChannelModel,
     build_channel,
     channel_round,
+    delay_round,
     net_init,
+    net_rows,
     spec_is_trivial,
     stale_scale,
     tx_cost,
@@ -25,7 +29,9 @@ __all__ = [
     "ChannelModel",
     "build_channel",
     "channel_round",
+    "delay_round",
     "net_init",
+    "net_rows",
     "spec_is_trivial",
     "stale_scale",
     "tx_cost",

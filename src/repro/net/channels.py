@@ -25,6 +25,10 @@ Registered channels (``repro.net.CHANNELS``):
   capacity model: each round credits ``bytes_per_round`` (capped at
   ``burst`` rounds' worth); a transmission is delivered iff the bucket
   covers its static per-transmission wire cost, which is then debited.
+* ``delay(dist,lag,max_lag,discount,boost,seed)`` — a LATENCY model:
+  accepted payloads are not lost, they arrive ``~lag`` rounds late
+  through a fixed-depth per-agent FIFO delay line and are applied with
+  a staleness-discounted weight at aggregation (see below).
 
 **State-slot layout.**  ``net_state`` is an ``(A, NET_WIDTH)`` f32
 array; per agent the row is ``[staleness, aux, uid]``:
@@ -36,6 +40,19 @@ array; per agent the row is ``[staleness, aux, uid]``:
 * ``uid`` — the agent's index, folded into the per-round PRNG key so
   every agent draws independent channel randomness from one seed.
 
+When any policy in the network carries a ``delay`` channel the slot is
+ENLARGED to a ``(rows, line)`` pair: ``rows`` the same ``(A,
+NET_WIDTH)`` array, ``line`` the in-flight payload FIFO — ``{"meta":
+(A, L, 2) f32 [valid, age], "buf": params-shaped tree with (A, L,
+*leaf) leaves}`` where ``L = max_lag``.  The line is FIFO-compact
+(valid slots are a zero-filled prefix); at most one payload matures per
+agent per round (head-of-line), so the matured payloads feed straight
+into the masked-mean aggregation with per-agent weights ``w = m / (1 +
+discount·(age−1))`` — staleness-discounted application, ``discount=0``
+being naive apply-on-arrival.  ``None``-is-free is preserved: the pair
+only exists for delay-carrying networks, and channel-free / ``@
+ideal`` TrainStates keep the bare ``None`` slot byte-for-byte.
+
 **Per-round randomness.**  The key for agent ``i`` at step ``k`` is
 ``fold_in(fold_in(PRNGKey(seed), k), i)`` — fully determined by the
 channel's ``seed`` spec argument, so runs are reproducible, and shared
@@ -44,9 +61,11 @@ loss realization, the same convention as the shared per-round batch).
 
 **The grid coordinate.**  The train step's ``chan_scale`` operand (the
 frontier's channel-parameter axis) multiplies a stochastic channel's
-loss probability and DIVIDES the rate channel's capacity — ``0`` is
-lossless, ``1`` nominal, ``>1`` harsher.  ``chan_scale=None`` (the
-default) adds no ops.
+loss probability, DIVIDES the rate channel's capacity, and MULTIPLIES
+the delay channel's mean lag — ``0`` is lossless (for ``delay``:
+minimum 1-round latency, the one channel where ``0`` is NOT bit-equal
+to channel-free), ``1`` nominal, ``>1`` harsher.  ``chan_scale=None``
+(the default) adds no ops.
 
 **Staleness escalation.**  Every non-trivial channel takes a ``boost``
 argument (default 0, statically skipped): with ``boost > 0`` an agent
@@ -83,6 +102,13 @@ class ChannelModel(NamedTuple):
     ``cost`` is the static per-transmission wire bytes (a Python
     float); stochastic channels ignore it.  Trivial channels (ideal)
     carry no functions — policies holding one compile channel-free.
+
+    Latency (``delay``) channels set ``depth > 0`` (their delay-line
+    slot count, = ``max_lag``) and carry ``mature(key, age,
+    chan_scale) -> {0.,1.}`` — the head-of-line arrival decision —
+    plus the ``discount`` of the staleness-discounted application
+    weight; they use :func:`delay_round` instead of
+    :func:`channel_round` and leave ``draw``/``update`` unset.
     """
 
     spec: StageSpec
@@ -92,6 +118,12 @@ class ChannelModel(NamedTuple):
     seed: int = 0
     draw: Optional[Callable[..., Tuple[jax.Array, jax.Array]]] = None
     update: Optional[Callable[..., jax.Array]] = None
+    # delay-line channels only: FIFO depth (= max_lag; 0 marks a
+    # non-delay channel), application-weight discount, and the
+    # head-of-line maturity decision
+    depth: int = 0
+    discount: float = 0.0
+    mature: Optional[Callable[..., jax.Array]] = None
 
 
 def build_channel(spec: StageSpec) -> ChannelModel:
@@ -210,31 +242,121 @@ def _rate(args, spec):
                         boost=float(args["boost"]), draw=draw, update=update)
 
 
+def _scaled_lag(lag: float, chan_scale):
+    """Mean lag × grid coordinate (no extra ops when None)."""
+    if chan_scale is None:
+        return jnp.float32(lag)
+    return jnp.float32(lag) * jnp.asarray(chan_scale, jnp.float32)
+
+
+@CHANNELS.register(
+    "delay",
+    params=(("dist", "geometric"), ("lag", 2.0), ("max_lag", 4),
+            ("discount", 0.0), ("boost", 0.0), ("seed", 0)),
+    doc="latency delay line: accepted payloads arrive ~lag rounds late",
+)
+def _delay(args, spec):
+    dist = str(args["dist"])
+    if dist not in ("geometric", "deterministic"):
+        raise ValueError(
+            f"delay dist must be 'geometric' or 'deterministic', "
+            f"got {dist!r}"
+        )
+    lag = float(args["lag"])
+    max_lag = int(args["max_lag"])
+    if max_lag < 1:
+        raise ValueError(f"delay max_lag must be >= 1, got {max_lag!r}")
+    if not 1.0 <= lag <= max_lag:
+        raise ValueError(
+            f"delay lag must be in [1, max_lag={max_lag}], got {lag!r}"
+        )
+    discount = float(args["discount"])
+    if discount < 0.0:
+        raise ValueError(f"delay discount must be >= 0, got {discount!r}")
+
+    if dist == "geometric":
+        def mature(key, age, chan_scale):
+            # arrival hazard 1/eff_lag per in-flight round ⇒ mean lag
+            # ≈ eff_lag; force-maturity at max_lag keeps the line a
+            # fixed-depth buffer (and makes acceptance a delivery
+            # GUARANTEE — what lets controllers price alpha×d)
+            eff = jnp.maximum(_scaled_lag(lag, chan_scale), 1.0)
+            u = jax.random.uniform(key)
+            arrive = (u < 1.0 / eff).astype(jnp.float32)
+            return jnp.where(age >= jnp.float32(max_lag), 1.0, arrive)
+    else:
+        def mature(key, age, chan_scale):
+            del key
+            eff = jnp.clip(_scaled_lag(lag, chan_scale), 1.0,
+                           jnp.float32(max_lag))
+            return (age >= eff).astype(jnp.float32)
+
+    return ChannelModel(spec, boost=float(args["boost"]),
+                        seed=int(args["seed"]), depth=max_lag,
+                        discount=discount, mature=mature)
+
+
 # ----------------------------------------------------------------------
 # TrainState slot + per-round helpers (consumed by repro.comm.bank and
 # repro.core.api — the three dispatch paths share this logic)
 # ----------------------------------------------------------------------
 
-def net_init(policy, num_agents: int):
-    """The initial ``(num_agents, NET_WIDTH)`` net-state slot for a
-    (normalized) policy, or ``None`` when no agent's channel is
-    non-trivial — the ``None`` that keeps channel-free (and
-    ``@ ideal``) TrainStates byte-for-byte what they were."""
+def net_init(policy, num_agents: int, params=None):
+    """The initial net-state slot for a (normalized) policy, or ``None``
+    when no agent's channel is non-trivial — the ``None`` that keeps
+    channel-free (and ``@ ideal``) TrainStates byte-for-byte what they
+    were.
+
+    Loss-only networks get the classic ``(num_agents, NET_WIDTH)``
+    array.  When any policy carries a ``delay`` channel the slot is the
+    enlarged ``(rows, line)`` pair — the line's payload buffer is sized
+    from ``params`` (payloads are compressed gradients, which keep the
+    params tree's shapes), so delay-carrying policies must pass it.
+    """
     policies = policy if isinstance(policy, tuple) else (policy,)
     if not any(p.needs_net for p in policies):
         return None
 
-    def aux0(p) -> float:
-        model = p.channel_model()
+    models = [p.channel_model() if p.needs_net else None for p in policies]
+
+    def aux0(model) -> float:
         return model.init_aux if (model is not None and not model.trivial) \
             else 0.0
 
     if len(policies) == 1:
-        auxes = [aux0(policies[0])] * num_agents
+        auxes = [aux0(models[0])] * num_agents
     else:
-        auxes = [aux0(p) for p in policies]
-    rows = [[0.0, a, float(i)] for i, a in enumerate(auxes)]
-    return jnp.asarray(rows, jnp.float32)
+        auxes = [aux0(m) for m in models]
+    rows = jnp.asarray(
+        [[0.0, a, float(i)] for i, a in enumerate(auxes)], jnp.float32
+    )
+    depth = max(
+        (m.depth for m in models if m is not None and not m.trivial),
+        default=0,
+    )
+    if not depth:
+        return rows
+    if params is None:
+        raise ValueError(
+            "policy attaches a delay channel (@ delay(...)): net_init "
+            "needs the params tree to size the payload delay line — "
+            "call net_init(policy, num_agents, params)"
+        )
+    meta = jnp.zeros((num_agents, depth, 2), jnp.float32)
+    buf = jax.tree_util.tree_map(
+        lambda p: jnp.zeros((num_agents, depth) + jnp.shape(p),
+                            jnp.asarray(p).dtype),
+        params,
+    )
+    return rows, {"meta": meta, "buf": buf}
+
+
+def net_rows(net):
+    """The ``(..., NET_WIDTH)`` staleness/aux/uid rows of a net-state
+    value — the bare array itself for loss-only networks, the first
+    element of the ``(rows, line)`` pair once a delay line is carried.
+    Works on the full ``(A, ...)`` slot and on one agent's slice."""
+    return net[0] if isinstance(net, tuple) else net
 
 
 def tx_cost(grad, chain) -> float:
@@ -276,6 +398,97 @@ def channel_round(model: ChannelModel, net_row, step, chan_scale,
     return d, stale, finalize
 
 
+def delay_round(model: ChannelModel, net_i, step, chan_scale):
+    """One agent's delay-line round (a ``depth``-slot latency channel).
+
+    ``net_i`` is the agent's ``(row, line)`` slice: ``row`` the
+    ``[staleness, aux, uid]`` triple, ``line`` the ``{"meta": (L, 2)
+    [valid, age], "buf": (L, *leaf) payload tree}`` FIFO of in-flight
+    payloads.  Mirrors :func:`channel_round`'s shape — returns ``(d,
+    stale, commit)``:
+
+    * ``d`` — the ACCEPT indicator, decided before the trigger runs:
+      1 iff the line has a free slot after this round's head dequeue
+      (tail-drop on a full line).  Because force-maturity at ``depth``
+      bounds every in-flight age, an accepted payload is GUARANTEED to
+      arrive, so adaptive controllers price ``alpha × d`` exactly as
+      they price delivery on loss channels; a rejected payload folds
+      whole into EF memory like a dropped packet.
+    * ``stale`` — the row's staleness counter, for :func:`stale_scale`
+      (it resets when a payload MATURES, i.e. is actually applied).
+    * ``commit(accepted, payload) -> (out_sent, weight, new_net_i)`` —
+      enqueues ``payload`` iff ``accepted`` (= alpha × d), dequeues the
+      matured head, and returns the MATURED payload together with its
+      staleness-discounted application weight ``w = m / (1 +
+      discount·(age−1))``: a minimum-latency (1-round) arrival keeps
+      full weight, ``discount=0`` is naive apply-on-arrival.  The
+      ``(out_sent, weight)`` pair slots straight into the step's
+      ``masked_mean(sent, delivereds)`` tail — staleness-discounted
+      aggregation with no new aggregation primitive.
+
+    Per-round order (everything before the trigger is independent of
+    this round's alpha): in-flight payloads age, the head's maturity is
+    drawn from the shared channel PRNG convention
+    ``fold_in(fold_in(PRNGKey(seed), step), uid)``, and acceptance is
+    decided from post-dequeue occupancy.
+    """
+    row, line = net_i
+    stale, aux, uid = row[0], row[1], row[2]
+    meta, buf = line["meta"], line["buf"]
+    depth = meta.shape[0]
+    valid = meta[:, 0]
+    # (1) every in-flight payload ages one round
+    age = meta[:, 1] + valid
+    # (2) head maturity — the line is FIFO-compact, slot 0 is oldest
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(model.seed), step),
+        uid.astype(jnp.int32),
+    )
+    m = valid[0] * model.mature(key, age[0], chan_scale)
+    # (3) accept iff a slot is free after the dequeue (tail drop)
+    occ_after = jnp.sum(valid) - m
+    d = (occ_after < jnp.float32(depth)).astype(jnp.float32)
+
+    def commit(accepted, payload):
+        matured = m > 0.5
+        # the matured head payload (zeros when nothing arrives) — a
+        # where keeps each leaf's dtype exactly, so mixed banks keep
+        # uniform switch-branch pytrees
+        out_sent = jax.tree_util.tree_map(
+            lambda b: jnp.where(matured, b[0], jnp.zeros_like(b[0])), buf
+        )
+        w = m / (1.0 + jnp.float32(model.discount)
+                 * jnp.maximum(age[0] - 1.0, 0.0))
+
+        def shift(x):
+            return jnp.concatenate([x[1:], jnp.zeros_like(x[:1])], axis=0)
+
+        meta1 = jnp.stack([valid, age], axis=1)
+        meta1 = jnp.where(matured, shift(meta1), meta1)
+        buf1 = jax.tree_util.tree_map(
+            lambda b: jnp.where(matured, shift(b), b), buf
+        )
+        # enqueue at the first free slot; [valid=1, age=0] — the age
+        # increments at the START of each round, so a payload enqueued
+        # now is applied at the earliest NEXT round with staleness 1
+        slot = (jnp.arange(depth) == jnp.sum(meta1[:, 0])) & (
+            accepted > 0.5
+        )
+        meta2 = jnp.where(slot[:, None], jnp.asarray([1.0, 0.0]), meta1)
+        buf2 = jax.tree_util.tree_map(
+            lambda b, s: jnp.where(
+                slot.reshape((depth,) + (1,) * (b.ndim - 1)),
+                s.astype(b.dtype)[None], b,
+            ),
+            buf1, payload,
+        )
+        new_stale = (stale + 1.0) * (1.0 - m)
+        new_row = jnp.stack([new_stale, aux, uid])
+        return out_sent, w, (new_row, {"meta": meta2, "buf": buf2})
+
+    return d, stale, commit
+
+
 def stale_scale(scale, boost: float, stale, adaptive: bool):
     """The staleness-escalated trigger knob scale.
 
@@ -300,7 +513,9 @@ __all__ = [
     "ChannelModel",
     "build_channel",
     "channel_round",
+    "delay_round",
     "net_init",
+    "net_rows",
     "spec_is_trivial",
     "stale_scale",
     "tx_cost",

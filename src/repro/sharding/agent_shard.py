@@ -75,6 +75,7 @@ from repro.core.api import (
     build_hybrid_machinery,
     make_triggered_train_step,
 )
+from repro.net.channels import net_rows
 from repro.sharding.rules import (
     agent_axis_names,
     agent_pspec,
@@ -111,6 +112,7 @@ def make_sharded_train_step(
     rules: Optional[dict] = None,
     sketch_native: bool = False,
     agent_metrics: bool = False,
+    churn=None,
 ):
     """Build the fleet-sharded ``train_step(state, batch, scale=None,
     chan_scale=None) -> (state, metrics)``.
@@ -135,6 +137,10 @@ def make_sharded_train_step(
     aspec = agent_pspec(mesh, m, rules)  # warns LOUDLY on replication
     axes = agent_axis_names(mesh, rules)
     shards = agent_shard_count(mesh, rules)
+    if churn is not None and len(churn) != m:
+        raise ValueError(
+            f"churn schedule has {len(churn)} entries but num_agents={m}"
+        )
 
     mach = build_hybrid_machinery(
         loss_fn, cfg, policy=policy, aux_loss_fn=aux_loss_fn,
@@ -164,7 +170,7 @@ def make_sharded_train_step(
             aux_loss_fn=aux_loss_fn, use_kernel=use_kernel, oracle=oracle,
             options=StepOptions(
                 hetero_dispatch="hybrid", barriers=False,
-                agent_metrics=agent_metrics,
+                agent_metrics=agent_metrics, churn=churn,
             ),
         )
 
@@ -178,6 +184,12 @@ def make_sharded_train_step(
     )
     agent_index = tuple(bank.agent_index)
     use_pre = bool(prologue_fns)
+    # static churn schedule → an (m, 2) [join, leave) array sharded
+    # like every other per-agent operand; None adds no operand at all
+    churn_arr = (
+        jnp.asarray([[j, l] for j, l in churn], jnp.int32)
+        if churn is not None else None
+    )
 
     def train_step(state: TrainState, batch, scale=None, chan_scale=None):
         use_net = needs_net and state.net_state is not None
@@ -209,7 +221,7 @@ def make_sharded_train_step(
         ix_arr = jnp.asarray(agent_index, jnp.int32)
 
         def body(params, opt_state, step_ctr, scale_a, chan_a, batch_l,
-                 mem_l, ctrl_l, net_l, ix_l, ratio_l):
+                 mem_l, ctrl_l, net_l, ix_l, ratio_l, churn_l=None):
             # phase 1: this gateway's slice of the vmapped gradient
             # prologue (plus the bank's deduped trigger gain precursors)
             def agent_prologue(ab):
@@ -255,6 +267,42 @@ def make_sharded_train_step(
                 )
                 alphas, gains, sent, new_mem, new_ctrl = outs
                 delivereds, new_net = alphas, net_l
+
+            # scenario churn: mask this gateway's slice BEFORE the
+            # two-level reduce — inactive agents carry zero aggregation
+            # weight, zero wire bytes, frozen per-agent state (the same
+            # post-dispatch masking the single-device step applies)
+            if churn_l is not None:
+                act = (
+                    (step_ctr >= churn_l[:, 0])
+                    & (step_ctr < churn_l[:, 1])
+                ).astype(jnp.float32)
+                n_act = jnp.maximum(
+                    jax.lax.psum(fold_sum(act), axes), 1.0
+                )
+                alphas = alphas * act
+                gains = gains * act
+                delivereds = delivereds * act
+
+                def freeze(new, old):
+                    return jax.tree_util.tree_map(
+                        lambda n, o: jnp.where(
+                            act.reshape(
+                                (-1,) + (1,) * (n.ndim - 1)
+                            ) > 0.5,
+                            n, o,
+                        ),
+                        new, old,
+                    )
+
+                if has_mem:
+                    new_mem = freeze(new_mem, mem_l)
+                if use_ctrl:
+                    new_ctrl = freeze(new_ctrl, ctrl_l)
+                if use_net:
+                    new_net = freeze(new_net, net_l)
+            else:
+                act = n_act = None
 
             # two-level reduce: agents -> gateway (local masked partial
             # sum) -> center (ONE psum whose operand is payload-sized,
@@ -306,12 +354,20 @@ def make_sharded_train_step(
             att_bytes = (sb * psum(fold_sum(alphas * ratio_l))).astype(
                 jnp.float32
             )
+            # rate denominators: active agents only under churn (same
+            # rate semantics as the single-device step's active-masked
+            # means; the two-level reduce re-associates as usual)
+            loss_num = (
+                psum(fold_sum(losses * act)) if act is not None
+                else psum(fold_sum(losses))
+            )
+            rate_den = n_act if act is not None else jnp.float32(m)
             metrics = {
-                "loss": psum(fold_sum(losses)) / m,
-                "comm_rate": tot_alpha / m,
+                "loss": loss_num / rate_den,
+                "comm_rate": tot_alpha / rate_den,
                 "any_tx": jax.lax.pmax(jnp.max(alphas), axes),
                 "num_tx": tot_alpha,
-                "mean_gain": psum(fold_sum(gains)) / m,
+                "mean_gain": psum(fold_sum(gains)) / rate_den,
                 "grad_norm": jnp.sqrt(
                     sum(
                         jnp.sum(jnp.square(x.astype(jnp.float32)))
@@ -320,6 +376,8 @@ def make_sharded_train_step(
                 ),
                 "wire_bytes": att_bytes,
             }
+            if act is not None:
+                metrics["num_active"] = psum(fold_sum(act))
             if use_net:
                 dtot = psum(fold_sum(delivereds))
                 metrics["wire_bytes"] = (
@@ -327,10 +385,13 @@ def make_sharded_train_step(
                 ).astype(jnp.float32)
                 metrics["wire_bytes_attempted"] = att_bytes
                 metrics["num_delivered"] = dtot
-                metrics["delivered_rate"] = dtot / m
+                metrics["delivered_rate"] = dtot / rate_den
+                stale_col = net_rows(new_net)[:, 0]
+                if act is not None:
+                    stale_col = stale_col * act
                 metrics["mean_staleness"] = psum(
-                    fold_sum(new_net[:, 0])
-                ) / m
+                    fold_sum(stale_col)
+                ) / rate_den
             if agent_metrics:
                 metrics["agent_tx"] = alphas
                 metrics["agent_bytes"] = (
@@ -338,9 +399,11 @@ def make_sharded_train_step(
                 ).astype(jnp.float32)
                 if use_net:
                     metrics["agent_delivered"] = delivereds
-                    metrics["agent_staleness"] = new_net[..., 0]
+                    metrics["agent_staleness"] = net_rows(new_net)[..., 0]
                 if use_ctrl:
                     metrics["agent_lam"] = new_ctrl[..., 0]
+                if act is not None:
+                    metrics["agent_active"] = act
             return {
                 "params": new_params,
                 "opt_state": new_opt,
@@ -353,6 +416,8 @@ def make_sharded_train_step(
         mkeys = list(METRIC_KEYS) + (
             list(NET_METRIC_KEYS) if use_net else []
         )
+        if churn_arr is not None:
+            mkeys.append("num_active")
         metric_specs = {k: P() for k in mkeys}
         if agent_metrics:
             metric_specs["agent_tx"] = aspec
@@ -362,8 +427,18 @@ def make_sharded_train_step(
                 metric_specs["agent_staleness"] = aspec
             if use_ctrl:
                 metric_specs["agent_lam"] = aspec
+            if churn_arr is not None:
+                metric_specs["agent_active"] = aspec
         in_specs = (P(), P(), P(), P(), P(),
                     aspec, aspec, aspec, aspec, aspec, aspec)
+        operands = (
+            state.params, state.opt_state, state.step, scale, chan_scale,
+            batch, mem, ctrl, net, ix_arr, ratio_arr,
+        )
+        if churn_arr is not None:
+            # churn-free programs keep the exact 11-operand signature
+            in_specs = in_specs + (aspec,)
+            operands = operands + (churn_arr,)
         out_specs = {
             "params": P(), "opt_state": P(), "mem": aspec,
             "ctrl": aspec, "net": aspec, "metrics": metric_specs,
@@ -371,8 +446,7 @@ def make_sharded_train_step(
         out = shard_map(
             body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_rep=False,
-        )(state.params, state.opt_state, state.step, scale, chan_scale,
-          batch, mem, ctrl, net, ix_arr, ratio_arr)
+        )(*operands)
         new_state = TrainState(
             state.step + 1, out["params"], out["opt_state"],
             out["mem"] if has_mem else state.ef_memory,

@@ -208,26 +208,6 @@ def test_none_ctrl_state_bit_equal_with_compressors_and_ef(problem):
             np.testing.assert_array_equal(ma[k], mf[k], err_msg=k)
 
 
-@pytest.mark.parametrize("dispatch", ["switch", "hybrid"])
-def test_adaptive_hetero_bank_dispatch_equals_unroll(problem, dispatch):
-    """Mixed adaptive/fixed policies: each stage-bank dispatch path
-    (agent-axis switch scan; vmap-prologue hybrid) and the unrolled
-    reference agree bitwise — controller rows included.  The budget
-    controllers share the hybrid prologue's single lookahead-probe
-    evaluation with gain_lookahead, so this also pins the deduped
-    precursor against the in-branch recomputation."""
-    mix = ("always", "budget_dual(rate=0.3)",
-           "gain_lookahead(lam=0.5)|int8+ef",
-           "budget_window(bytes=3.0,window=8)|fp16")
-    cfg = _cfg(mix)
-    ssw, hsw = _run(cfg, problem, steps=8, hetero_dispatch=dispatch)
-    sun, hun = _run(cfg, problem, steps=8, hetero_dispatch="unroll")
-    assert _tree_equal(ssw, sun)
-    for ma, mf in zip(hsw, hun):
-        for k in mf:
-            np.testing.assert_array_equal(ma[k], mf[k], err_msg=k)
-
-
 def test_adaptive_mix_hybrid_equals_unroll_under_frontier_vmap(problem):
     """ISSUE-5 acceptance: the hybrid path matches the unrolled
     reference lane-for-lane under the frontier grid vmap with ADAPTIVE

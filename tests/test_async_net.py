@@ -1,0 +1,370 @@
+"""ISSUE-9 acceptance surface: the async network layer — latency
+(``delay``) channels with stale-payload application, the per-round
+scenario-churn masks, and the channel PRNG derivation contract.
+
+Delay semantics under test (DESIGN.md §7): payloads enter a fixed-depth
+per-agent FIFO delay line inside ``net_state``; a matured head-of-line
+payload is applied with the staleness-discounted weight
+``w = 1 / (1 + discount · max(age − 1, 0))`` (``agent_delivered``
+reports exactly ``w``); maturity is FORCED at ``max_lag`` so acceptance
+is a delivery guarantee; a full line tail-drops the new payload into EF.
+Churn semantics: ``StepOptions.churn`` holds per-agent ``(join, leave)``
+rounds, an inactive agent contributes zero update, zero wire bytes and
+is excluded from every rate denominator — and ``churn=None`` compiles
+the exact channel-free program (static skip).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommPolicy
+from repro.configs.base import TrainConfig
+from repro.configs.paper_linreg import LinRegConfig, churn_schedule, \
+    TIERED_M64
+from repro.core import regression as R
+from repro.core.api import StepOptions, init_train_state, \
+    make_triggered_train_step
+from repro.core.frontier import frontier_curve, run_frontier
+from repro.net import build_channel, net_init
+from repro.net.channels import channel_round
+from repro.optim import optimizers as opt_lib
+
+TOY = LinRegConfig(name="toy", n=6, num_agents=4, samples_per_agent=8,
+                   stepsize=0.1, steps=6)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return R.make_problem(TOY, jax.random.key(0))
+
+
+def linreg_loss(params, batch):
+    xs, ys = batch
+    r = xs @ params["w"] - ys
+    return 0.5 * jnp.mean(r * r)
+
+
+def _params():
+    return {"w": jnp.zeros(TOY.n)}
+
+
+def _run(comm, problem, steps=8, churn=None, dispatch="hybrid"):
+    cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                      num_agents=TOY.num_agents, comm=comm)
+    opt = opt_lib.from_config(cfg)
+    step = jax.jit(make_triggered_train_step(
+        linreg_loss, opt, cfg,
+        options=StepOptions(agent_metrics=True, churn=churn,
+                            hetero_dispatch=dispatch)))
+    state = init_train_state(_params(), opt, cfg)
+    hist = []
+    for i in range(steps):
+        state, m = step(state, R.agent_batches(
+            problem, jax.random.fold_in(jax.random.key(7), i)))
+        hist.append({k: np.asarray(v) for k, v in m.items()})
+    return state, hist
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# ----------------------------------------------------------------------
+# channel PRNG: the delivery-key derivation contract
+# ----------------------------------------------------------------------
+
+# bernoulli(p=0.5,seed=9) delivery realization over (step, uid) — the
+# regression golden for the documented fold ORDER
+# ``fold_in(fold_in(PRNGKey(seed), step), uid)``.  A coordinated swap
+# of the two folds (step↔uid) produces a different matrix, so this
+# golden catches it even if both the channel and a re-derived reference
+# were changed together.
+_DELIVERY_GOLDEN = np.asarray([
+    [0, 1, 0, 0],
+    [0, 0, 1, 1],
+    [0, 0, 1, 0],
+    [0, 0, 0, 1],
+    [1, 0, 1, 0],
+    [1, 1, 0, 1],
+], np.float32)
+
+
+def test_delivery_key_fold_order():
+    """The per-round channel key is ``fold_in(fold_in(key, step), uid)``
+    — step folded FIRST, agent uid second — checked against both an
+    explicit re-derivation and the committed golden matrix."""
+    model = build_channel(
+        CommPolicy.parse_one("always @ bernoulli(p=0.5,seed=9)").channel)
+    got = np.zeros_like(_DELIVERY_GOLDEN)
+    for step in range(_DELIVERY_GOLDEN.shape[0]):
+        for uid in range(_DELIVERY_GOLDEN.shape[1]):
+            row = jnp.asarray([0.0, 0.0, float(uid)], jnp.float32)
+            d, _, _ = channel_round(model, row, jnp.int32(step), None, 1.0)
+            got[step, uid] = float(d)
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(9), step), uid)
+            want = float(jax.random.uniform(key) >= 0.5)
+            assert float(d) == want, (step, uid)
+    np.testing.assert_array_equal(got, _DELIVERY_GOLDEN)
+    # the realization actually varies along BOTH axes (a derivation
+    # that ignored step or uid would be constant along one of them)
+    assert len({tuple(r) for r in got.tolist()}) > 1
+    assert len({tuple(c) for c in got.T.tolist()}) > 1
+
+
+def test_delivery_key_is_common_across_lanes(problem):
+    """Two frontier lanes draw the SAME channel realization (common
+    random numbers): the delivery pattern is a function of (seed, step,
+    uid) only, never of the lane's λ scale."""
+    cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                      num_agents=TOY.num_agents,
+                      comm=("always @ bernoulli(p=0.5,seed=9)",) * 4)
+    opt = opt_lib.from_config(cfg)
+    res = run_frontier(
+        linreg_loss, opt, cfg, _params(), scales=[0.5, 2.0], steps=6,
+        batch_fn=lambda k: R.agent_batches(problem, k),
+        key=jax.random.key(3))
+    ad = np.asarray(res.metrics["agent_delivered"])  # (G, T, A)
+    np.testing.assert_array_equal(ad[0], ad[1])
+
+
+# ----------------------------------------------------------------------
+# delay line: state layout + latency semantics
+# ----------------------------------------------------------------------
+
+def test_delay_net_state_is_rows_plus_line():
+    """Delay-carrying policies enlarge ``net_state`` to the
+    ``(rows, line)`` pair: classic ``(A, 3)`` rows plus the depth-L
+    delay line (``meta`` ages/valids and the params-shaped payload
+    buffer); loss-only policies keep the bare rows array."""
+    params = _params()
+    pol = CommPolicy.parse_one(
+        "always @ delay(dist=deterministic,lag=3,max_lag=4)")
+    net = net_init(pol, 4, params)
+    assert isinstance(net, tuple) and len(net) == 2
+    rows, line = net
+    assert rows.shape == (4, 3)
+    np.testing.assert_array_equal(np.asarray(rows[:, 2]),
+                                  np.arange(4, dtype=np.float32))
+    assert line["meta"].shape == (4, 4, 2)
+    assert line["buf"]["w"].shape == (4, 4, TOY.n)
+    assert not np.any(np.asarray(line["meta"]))
+    # loss-only: the classic bare rows
+    bern = CommPolicy.parse_one("always @ bernoulli(p=0.5)")
+    assert net_init(bern, 4, params).shape == (4, 3)
+    # delay without params cannot size the payload buffer: loud error
+    with pytest.raises(ValueError, match="delay"):
+        net_init(pol, 4)
+
+
+def test_deterministic_delay_delivers_after_lag(problem):
+    """``dist=deterministic, lag=3``: nothing lands for the first 3
+    rounds (staleness climbs 1, 2, 3), then exactly one payload matures
+    every round — the wire has a hard 3-round latency and ``always``
+    keeps the pipeline full.  With ``discount=1`` every applied payload
+    is age 3, so its application weight is 1/(1+1·(3−1)) = 1/3."""
+    _, hist = _run(
+        ("always @ delay(dist=deterministic,lag=3,max_lag=4,"
+         "discount=1.0)",) * 4, problem)
+    delivered = np.asarray([m["agent_delivered"][0] for m in hist])
+    stale = np.asarray([m["agent_staleness"][0] for m in hist])
+    np.testing.assert_allclose(
+        delivered, [0, 0, 0] + [1.0 / 3.0] * 5, rtol=1e-6)
+    np.testing.assert_array_equal(stale, [1, 2, 3, 0, 0, 0, 0, 0])
+
+
+def test_zero_discount_weight_is_arrival_indicator(problem):
+    """``discount=0`` applies matured payloads at full weight — the
+    naive apply-on-arrival ablation — so ``agent_delivered`` collapses
+    to the exact 0/1 arrival indicator (honest byte accounting)."""
+    _, hist = _run(
+        ("always @ delay(dist=deterministic,lag=3,max_lag=4)",) * 4,
+        problem)
+    delivered = np.asarray([m["agent_delivered"] for m in hist])
+    np.testing.assert_array_equal(np.unique(delivered), [0.0, 1.0])
+    np.testing.assert_array_equal(delivered[3:], 1.0)
+
+
+def test_force_maturity_at_max_lag(problem):
+    """``max_lag`` FORCES maturity: a geometric wire with
+    ``max_lag=1`` can never hold a payload past one round, so it is
+    the deterministic lag-1 wire — bit-for-bit, PRNG draws and all
+    (acceptance is a delivery guarantee, not a best effort)."""
+    sg, hg = _run(
+        ("always @ delay(dist=geometric,lag=1.0,max_lag=1,seed=4)",) * 4,
+        problem)
+    sd, hd = _run(
+        ("always @ delay(dist=deterministic,lag=1,max_lag=1,seed=4)",) * 4,
+        problem)
+    assert _tree_equal(sg, sd)
+    for mg, md in zip(hg, hd):
+        for k in md:
+            np.testing.assert_array_equal(mg[k], md[k], err_msg=k)
+    # and lag-1 means delivery every round after the first
+    delivered = np.asarray([m["agent_delivered"][0] for m in hg])
+    np.testing.assert_array_equal(delivered, [0] + [1] * 7)
+
+
+def test_geometric_delay_staleness_is_bounded_by_max_lag(problem):
+    """Geometric maturity draws are clamped by the line depth: no
+    applied payload is ever older than ``max_lag`` rounds, so the
+    staleness counter never exceeds it either."""
+    _, hist = _run(
+        ("always @ delay(dist=geometric,lag=2.0,max_lag=4,seed=11)",) * 4,
+        problem, steps=16)
+    stale = np.asarray([m["agent_staleness"] for m in hist])
+    assert float(stale.max()) <= 4.0
+    # the wire is actually stochastic at this seed — both outcomes occur
+    delivered = np.asarray([m["agent_delivered"] for m in hist])
+    assert 0.0 < float(delivered[1:].mean()) < 1.0
+
+
+def test_delay_chan_scale_multiplies_mean_lag(problem):
+    """The frontier's ``chan_scales`` severity axis stretches a delay
+    wire's mean lag: a harsher lane matures later, so its tail
+    staleness dominates the milder lane's — inside one compiled grid."""
+    cfg = TrainConfig(
+        lr=TOY.stepsize, optimizer="sgd", num_agents=TOY.num_agents,
+        comm=("always @ delay(dist=geometric,lag=2.0,max_lag=6,"
+              "seed=2)",) * 4)
+    opt = opt_lib.from_config(cfg)
+    res = run_frontier(
+        linreg_loss, opt, cfg, _params(), scales=[1.0, 1.0],
+        chan_scales=[0.25, 2.0], steps=24,
+        batch_fn=lambda k: R.agent_batches(problem, k),
+        key=jax.random.key(5))
+    ms = np.asarray(res.metrics["mean_staleness"])  # (G, T)
+    assert ms[1, 8:].mean() > ms[0, 8:].mean()
+
+
+# ----------------------------------------------------------------------
+# scenario churn
+# ----------------------------------------------------------------------
+
+def test_all_active_churn_matches_no_churn_bitwise(problem):
+    """A churn schedule that never benches anyone reproduces the
+    churn-free program's results exactly — the masking lane is the
+    identity when every agent is active."""
+    T = 6
+    comm = ("always|int8+ef",) * 4
+    s0, h0 = _run(comm, problem, steps=T, churn=None)
+    s1, h1 = _run(comm, problem, steps=T, churn=((0, T),) * 4)
+    assert _tree_equal(s0.params, s1.params)
+    assert _tree_equal(s0.ef_memory, s1.ef_memory)
+    # churn traces add exactly the two churn metrics, nothing else moves
+    assert set(h1[0]) - set(h0[0]) == {"num_active", "agent_active"}
+    for m0, m1 in zip(h0, h1):
+        for k in m0:
+            np.testing.assert_array_equal(m1[k], m0[k], err_msg=k)
+    np.testing.assert_array_equal(
+        np.asarray([m["num_active"] for m in h1]), 4.0)
+
+
+def test_churn_masks_joins_and_leaves(problem):
+    """Join/leave windows gate everything: an agent outside its
+    ``[join, leave)`` window ships zero bytes, shows inactive in
+    ``agent_active``, and drops out of ``num_active``."""
+    T = 6
+    churn = ((0, T), (0, T), (2, T), (0, 2))  # 2 joins late, 3 leaves
+    _, hist = _run(("always|int8+ef",) * 4, problem, steps=T, churn=churn)
+    for i, m in enumerate(hist):
+        want = np.asarray(
+            [1.0, 1.0, float(i >= 2), float(i < 2)], np.float32)
+        np.testing.assert_array_equal(m["agent_active"], want, err_msg=i)
+        assert float(m["num_active"]) == float(want.sum())
+        np.testing.assert_array_equal(m["agent_bytes"] > 0, want > 0)
+        # rate denominators count ACTIVE agents only: all-on triggers
+        # keep comm_rate pinned at 1 regardless of the bench
+        assert float(m["comm_rate"]) == 1.0
+
+
+def test_churned_agent_state_is_frozen(problem):
+    """A benched agent's per-agent state (EF memory, net rows) holds
+    its last value — rejoin resumes from where it left, not from a
+    silently mutated slot."""
+    T = 8
+    churn = ((0, T), (0, T), (0, T), (4, T))  # agent 3 joins at 4
+    comm = ("gain_lookahead(lam=0.5)|int8+ef"
+            " @ delay(dist=deterministic,lag=2,max_lag=3)",) * 4
+    s, hist = _run(comm, problem, steps=T, churn=churn)
+    # while benched, agent 3 never transmits and its EF cannot charge
+    for m in hist[:4]:
+        assert float(m["agent_tx"][3]) == 0.0
+        assert float(m["agent_bytes"][3]) == 0.0
+    # after joining it participates like the others
+    assert any(float(m["agent_tx"][3]) > 0.0 for m in hist[4:])
+
+
+@pytest.mark.parametrize("dispatch", ["switch", "unroll"])
+def test_churn_agrees_across_dispatch_paths(problem, dispatch):
+    """Churn composes with every dispatch path bit-for-bit (the active
+    mask is shared-tail work, applied after the per-policy branches)."""
+    T = 6
+    churn = ((0, T), (1, T), (2, 5), (0, 3))
+    comm = ("always",
+            "gain_lookahead(lam=1.0)|fp16",
+            "gain_lookahead(lam=2.0)|int8+ef"
+            " @ delay(dist=geometric,lag=2.0,max_lag=4,seed=5)",
+            "gain_lookahead(lam=4.0)|topk(0.5)|int8+ef"
+            " @ bernoulli(p=0.3,seed=3)")
+    sh, hh = _run(comm, problem, steps=T, churn=churn, dispatch="hybrid")
+    so, ho = _run(comm, problem, steps=T, churn=churn, dispatch=dispatch)
+    assert _tree_equal(sh, so)
+    for mh, mo in zip(hh, ho):
+        for k in mh:
+            np.testing.assert_array_equal(mo[k], mh[k], err_msg=k)
+
+
+def test_churn_under_frontier_vmap(problem):
+    """The frontier engine threads churn through the grid vmap: every
+    lane shares the schedule, ``frontier_curve`` reports the mean
+    active count, and benched rounds ship no bytes on any lane."""
+    T = 8
+    churn = ((0, T), (0, T), (3, T), (0, 5))
+    cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
+                      num_agents=TOY.num_agents,
+                      comm=("always|int8+ef",) * 4)
+    opt = opt_lib.from_config(cfg)
+    res = run_frontier(
+        linreg_loss, opt, cfg, _params(), scales=[0.5, 1.0], steps=T,
+        batch_fn=lambda k: R.agent_batches(problem, k),
+        key=jax.random.key(9), churn=churn)
+    na = np.asarray(res.metrics["num_active"])  # (G, T)
+    want = np.asarray([3.0 if (i < 3 or i >= 5) else 4.0
+                       for i in range(T)])
+    for lane in na:
+        np.testing.assert_array_equal(lane, want)
+    curve = frontier_curve(res)
+    np.testing.assert_allclose(np.asarray(curve["num_active"]),
+                               want.mean(), rtol=1e-6)
+    ab = np.asarray(res.metrics["agent_bytes"])  # (G, T, A)
+    assert not np.any(ab[:, :3, 2]) and not np.any(ab[:, 5:, 3])
+
+
+def test_churn_schedule_helper_windows():
+    """``churn_schedule`` benches only metered tiers, keeps the
+    backbone always-on, and emits valid ``[join, leave)`` windows."""
+    steps = 40
+    sched = churn_schedule(TIERED_M64, steps)
+    assert len(sched) == TIERED_M64.num_agents
+    tiers = TIERED_M64.tier_index()
+    for (join, leave), tier in zip(sched, tiers):
+        assert 0 <= join < leave <= steps
+        if tier == 0:  # backbone never churns
+            assert (join, leave) == (0, steps)
+    assert any(j > 0 for j, _ in sched), "some agent joins late"
+    assert any(l < steps for _, l in sched), "some agent leaves early"
+
+
+def test_churn_length_must_match_fleet():
+    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=4,
+                      comm=("always",) * 4)
+    opt = opt_lib.from_config(cfg)
+    with pytest.raises(ValueError, match="churn"):
+        make_triggered_train_step(
+            linreg_loss, opt, cfg,
+            options=StepOptions(churn=((0, 4),) * 3))

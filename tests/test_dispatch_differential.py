@@ -1,0 +1,289 @@
+"""ISSUE-9 satellite: ONE parametrized differential harness for the
+three heterogeneous dispatch paths (hybrid / switch / unroll) across
+the full scenario matrix — tier mixes × wire models {ideal, bernoulli
+loss, latency delay} × controller families {fixed-λ, budget-adaptive}.
+
+Agreement policy (the suite-wide contract):
+
+* **ideal wires** — hybrid, switch and unroll are BIT-identical in
+  params, opt state, EF memory and every metric, with the one
+  long-standing exception that ``mean_gain`` may sit one ULP off
+  between the banked paths and the unrolled reference (probe-loss
+  fusion context); hybrid vs switch has no fusion excuse and is held
+  fully bitwise.
+* **lossy / delayed wires** — parameters and float metrics agree to
+  ~1 ULP (``rtol=1e-5``; the α·d·w application chain fuses differently
+  per path) while the integer-valued channel realization — delivery
+  indicators and staleness counters — stays EXACT across all three
+  paths (they share the ``fold_in(fold_in(key, step), uid)`` draw).
+
+This file subsumes the ad-hoc per-file equivalence tests that used to
+live in test_sweep / test_frontier / test_adaptive / test_net (one
+dispatch-agreement surface instead of seven hand-rolled ones).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.paper_linreg import (
+    LinRegConfig,
+    TIER_MIXES,
+    TIERED_M64,
+    TieredNetwork,
+    _adaptive_tiers,
+    _lossy,
+    _tiers,
+)
+from repro.core import regression as R
+from repro.core.api import StepOptions, init_train_state, \
+    make_triggered_train_step
+from repro.core.frontier import run_frontier
+from repro.optim import optimizers as opt_lib
+
+TOY4 = LinRegConfig(name="toy4", n=6, num_agents=4, samples_per_agent=8,
+                    stepsize=0.1, steps=4)
+TOY64 = LinRegConfig(name="toy64", n=6, num_agents=64,
+                     samples_per_agent=8, stepsize=0.1, steps=2)
+
+# wire models: one representative per channel family the matrix names.
+# Seeds are explicit so every dispatch path draws the same realization.
+CHANNELS = {
+    "ideal": None,
+    "bernoulli": "bernoulli(p=0.3,seed=3)",
+    "delay": "delay(dist=geometric,lag=2.0,max_lag=4,discount=0.5,seed=5)",
+}
+CONTROLLERS = ("fixed", "adaptive")
+
+# the four-tier template at 1 agent/tier — the m=4 differential core
+# (unroll compiles per agent, so the exhaustive three-way matrix runs
+# here; the m=64 fleets below pin the banked paths at scale)
+M4_NETS = {
+    "fixed": TieredNetwork("toy4_tiers", _tiers(1, 1, 1, 1, n=TOY4.n)),
+    "adaptive": TieredNetwork("toy4_tiers_adaptive",
+                              _adaptive_tiers(1, 1, 1, 1, n=TOY4.n)),
+}
+
+
+def _adaptive_mix(net):
+    """The budget-adaptive counterpart of a fixed-λ tier mix: same
+    four-tier layout and counts, controllers instead of hand-tuned λ."""
+    return TieredNetwork(f"{net.name}_adaptive",
+                         _adaptive_tiers(*(t.count for t in net.tiers),
+                                         n=TOY64.n))
+
+
+def _with_channel(net, channel):
+    if CHANNELS[channel] is None:
+        return net
+    return _lossy(net, f"{net.name}_{channel}", CHANNELS[channel])
+
+
+@pytest.fixture(scope="module")
+def problem4():
+    return R.make_problem(TOY4, jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def problem64():
+    return R.make_problem(TOY64, jax.random.key(42))
+
+
+def linreg_loss(params, batch):
+    xs, ys = batch
+    r = xs @ params["w"] - ys
+    return 0.5 * jnp.mean(r * r)
+
+
+def _run(cfg, problem, dispatch, steps, n):
+    opt = opt_lib.from_config(cfg)
+    step = jax.jit(make_triggered_train_step(
+        linreg_loss, opt, cfg,
+        options=StepOptions(hetero_dispatch=dispatch, agent_metrics=True)))
+    state = init_train_state({"w": jnp.zeros(n)}, opt, cfg)
+    hist = []
+    for i in range(steps):
+        state, m = step(state, R.agent_batches(
+            problem, jax.random.fold_in(jax.random.key(13), i)))
+        hist.append({k: np.asarray(v) for k, v in m.items()})
+    return state, hist
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# metric keys that are the integer-valued channel/trigger realization —
+# exact across paths under EVERY wire model
+EXACT_KEYS = ("agent_tx", "agent_delivered", "agent_staleness",
+              "num_tx", "any_tx")
+
+
+def _assert_pair(got, ref, channel, tag):
+    """Hold (state, hist) `got` to the agreement policy against `ref`."""
+    (gs, gh), (rs, rh) = got, ref
+    if channel == "ideal":
+        assert _tree_equal(gs, rs), f"{tag}: state differs"
+    else:
+        for a, b in zip(jax.tree_util.tree_leaves(gs),
+                        jax.tree_util.tree_leaves(rs)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6, err_msg=tag)
+    for gm, rm in zip(gh, rh):
+        assert set(gm) == set(rm)
+        for k in rm:
+            if channel == "ideal" and k != "mean_gain":
+                np.testing.assert_array_equal(gm[k], rm[k],
+                                              err_msg=f"{tag}:{k}")
+            elif k in EXACT_KEYS:
+                np.testing.assert_array_equal(gm[k], rm[k],
+                                              err_msg=f"{tag}:{k}")
+            else:
+                np.testing.assert_allclose(gm[k], rm[k], rtol=1e-5,
+                                           atol=1e-6,
+                                           err_msg=f"{tag}:{k}")
+
+
+# ----------------------------------------------------------------------
+# m=4 differential core: full three-way matrix, unroll included
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("controller", CONTROLLERS)
+@pytest.mark.parametrize("channel", tuple(CHANNELS))
+def test_m4_three_way_matrix(problem4, channel, controller):
+    net = _with_channel(M4_NETS[controller], channel)
+    cfg = TrainConfig(lr=TOY4.stepsize, optimizer="sgd",
+                      num_agents=net.num_agents,
+                      comm=net.policies(lam_base=1.0))
+    outs = {d: _run(cfg, problem4, d, steps=TOY4.steps, n=TOY4.n)
+            for d in ("hybrid", "switch", "unroll")}
+    for d in ("hybrid", "switch"):
+        _assert_pair(outs[d], outs["unroll"], channel, f"{d}-vs-unroll")
+    # banked paths pin each other bitwise regardless of wire model
+    assert _tree_equal(outs["hybrid"][0], outs["switch"][0])
+    for gm, rm in zip(outs["hybrid"][1], outs["switch"][1]):
+        for k in rm:
+            np.testing.assert_array_equal(gm[k], rm[k], err_msg=k)
+
+
+def test_m4_three_way_under_adamw(problem4):
+    """Stateful optimizer slots ride the same agreement contract (the
+    opt-state tree is part of the compared state)."""
+    net = _with_channel(M4_NETS["fixed"], "delay")
+    cfg = TrainConfig(lr=0.05, optimizer="adamw",
+                      num_agents=net.num_agents,
+                      comm=net.policies(lam_base=1.0))
+    outs = {d: _run(cfg, problem4, d, steps=TOY4.steps, n=TOY4.n)
+            for d in ("hybrid", "switch", "unroll")}
+    for d in ("hybrid", "switch"):
+        _assert_pair(outs[d], outs["unroll"], "delay", f"{d}-vs-unroll")
+
+
+# ----------------------------------------------------------------------
+# m=64 fleets: hybrid ↔ switch across the whole matrix; the unrolled
+# reference joins where it is load-bearing (ideal×fixed pins all four
+# mixes against it; the delay×adaptive cell pins the newest machinery)
+# ----------------------------------------------------------------------
+
+M64_GRID = [(net, chan, ctrl)
+            for net in TIER_MIXES
+            for chan in CHANNELS
+            for ctrl in CONTROLLERS]
+
+
+def _m64_modes(net, channel, controller):
+    if channel == "ideal" and controller == "fixed":
+        return ("hybrid", "switch", "unroll")
+    if net is TIERED_M64 and channel == "delay" and controller == "adaptive":
+        return ("hybrid", "switch", "unroll")
+    return ("hybrid", "switch")
+
+
+@pytest.mark.parametrize(
+    "net,channel,controller", M64_GRID,
+    ids=[f"{n.name}-{c}-{t}" for n, c, t in M64_GRID])
+def test_m64_fleet_matrix(problem64, net, channel, controller):
+    base = net if controller == "fixed" else _adaptive_mix(net)
+    mixed = _with_channel(base, channel)
+    cfg = TrainConfig(lr=TOY64.stepsize, optimizer="sgd",
+                      num_agents=mixed.num_agents,
+                      comm=mixed.policies(lam_base=1.0))
+    modes = _m64_modes(net, channel, controller)
+    outs = {d: _run(cfg, problem64, d, steps=TOY64.steps, n=TOY64.n)
+            for d in modes}
+    if "unroll" in modes:
+        for d in ("hybrid", "switch"):
+            _assert_pair(outs[d], outs["unroll"], channel,
+                         f"{d}-vs-unroll")
+    # hybrid vs switch: fully bitwise, every wire model (same banked
+    # branch programs, same fusion context)
+    assert _tree_equal(outs["hybrid"][0], outs["switch"][0])
+    for gm, rm in zip(outs["hybrid"][1], outs["switch"][1]):
+        assert set(gm) == set(rm)
+        for k in rm:
+            np.testing.assert_array_equal(gm[k], rm[k], err_msg=k)
+
+
+# ----------------------------------------------------------------------
+# frontier grid vmap: the dispatch paths stay pinned under vmap too
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("channel", ("ideal", "delay"))
+def test_m4_frontier_vmap_three_way(problem4, channel):
+    """Every dispatch path agrees lane-for-lane under the grid vmap —
+    the hybrid path's agent vmap composes with the grid vmap (vmap-of-
+    vmap) and on this backend all three stay bit-identical, delay-line
+    net state included."""
+    net = _with_channel(M4_NETS["fixed"], channel)
+    cfg = TrainConfig(lr=TOY4.stepsize, optimizer="sgd",
+                      num_agents=net.num_agents,
+                      comm=net.policies(lam_base=1.0))
+    opt = opt_lib.from_config(cfg)
+    kw = dict(scales=[0.0, 0.5, 1.0, 4.0], steps=TOY4.steps,
+              batch_fn=lambda k: R.agent_batches(problem4, k),
+              key=jax.random.key(5))
+    outs = {d: run_frontier(linreg_loss, opt, cfg,
+                            {"w": jnp.zeros(TOY4.n)},
+                            hetero_dispatch=d, **kw)
+            for d in ("hybrid", "switch", "unroll")}
+    for d in ("hybrid", "switch"):
+        assert _tree_equal(outs[d].state, outs["unroll"].state), d
+        for k in outs[d].metrics:
+            np.testing.assert_array_equal(
+                np.asarray(outs[d].metrics[k]),
+                np.asarray(outs["unroll"].metrics[k]), err_msg=f"{d}:{k}")
+
+
+@pytest.mark.parametrize("channel", ("ideal", "delay"))
+def test_m64_frontier_hybrid_matches_switch(problem64, channel):
+    """A TIERED_M64 smoke-style frontier (grid vmap over the full
+    64-agent fleet) matches between hybrid and switch within the
+    suite's float tolerance — integer wire accounting exactly equal —
+    with and without the latency wire."""
+    mixed = _with_channel(TIERED_M64, channel)
+    cfg = TrainConfig(lr=TOY64.stepsize, optimizer="sgd",
+                      num_agents=mixed.num_agents,
+                      comm=mixed.policies(lam_base=1.0))
+    opt = opt_lib.from_config(cfg)
+    kw = dict(scales=[0.0, 1.0, 4.0], steps=4,
+              batch_fn=lambda k: R.agent_batches(problem64, k),
+              key=jax.random.key(17))
+    hy = run_frontier(linreg_loss, opt, cfg, {"w": jnp.zeros(TOY64.n)},
+                      hetero_dispatch="hybrid", **kw)
+    sw = run_frontier(linreg_loss, opt, cfg, {"w": jnp.zeros(TOY64.n)},
+                      hetero_dispatch="switch", **kw)
+    for a, b in zip(jax.tree_util.tree_leaves(hy.state),
+                    jax.tree_util.tree_leaves(sw.state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    for k in ("num_tx", "wire_bytes", "any_tx", "agent_tx"):
+        np.testing.assert_array_equal(np.asarray(hy.metrics[k]),
+                                      np.asarray(sw.metrics[k]), err_msg=k)
+    for k in ("loss", "mean_gain", "agent_bytes"):
+        np.testing.assert_allclose(np.asarray(hy.metrics[k]),
+                                   np.asarray(sw.metrics[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)

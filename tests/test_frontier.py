@@ -198,122 +198,9 @@ def test_scale_is_the_lambda_axis(problem):
     assert _tree_equal(a.metrics, b.metrics)
 
 
-# ----------------------------------------------------------------------
-# dispatch paths under the grid vmap
-# ----------------------------------------------------------------------
-
-@pytest.mark.parametrize("dispatch", ["switch", "hybrid"])
-def test_bank_dispatch_vs_unroll_equal_under_vmap(problem, dispatch):
-    """Every stage-bank dispatch path agrees lane-for-lane with the
-    unrolled reference under the grid vmap (barrier-free: the bank
-    branches still run the unrolled ops — the hybrid path's agent vmap
-    simply composes with the grid vmap, vmap-of-vmap — and on this
-    backend the paths stay bit-identical)."""
-    cfg = TrainConfig(lr=TOY.stepsize, optimizer="sgd",
-                      num_agents=4, comm=MIXED_M4)
-    opt = opt_lib.from_config(cfg)
-    kw = dict(scales=[0.0, 0.5, 1.0, 4.0], steps=STEPS,
-              batch_fn=lambda k: R.agent_batches(problem, k),
-              key=jax.random.key(5))
-    sw = run_frontier(linreg_loss, opt, cfg, _params(),
-                      hetero_dispatch=dispatch, **kw)
-    un = run_frontier(linreg_loss, opt, cfg, _params(),
-                      hetero_dispatch="unroll", **kw)
-    assert _tree_equal(sw.state, un.state)
-    for k in sw.metrics:
-        np.testing.assert_array_equal(np.asarray(sw.metrics[k]),
-                                      np.asarray(un.metrics[k]),
-                                      err_msg=k)
-
-
-# ----------------------------------------------------------------------
-# ISSUE-5 acceptance: hybrid bit-identity at the full m=64 tier mixes
-# ----------------------------------------------------------------------
-
-TOY64 = LinRegConfig(name="toy64", n=6, num_agents=64, samples_per_agent=8,
-                     stepsize=0.1, steps=2)
-
-
-@pytest.fixture(scope="module")
-def problem64():
-    return R.make_problem(TOY64, jax.random.key(42))
-
-
-def _run_m64(problem64, net, dispatch, steps=2):
-    cfg = TrainConfig(lr=TOY64.stepsize, optimizer="sgd",
-                      num_agents=net.num_agents,
-                      comm=net.policies(lam_base=1.0))
-    opt = opt_lib.from_config(cfg)
-    step = jax.jit(make_triggered_train_step(linreg_loss, opt, cfg,
-                                             hetero_dispatch=dispatch))
-    state = init_train_state({"w": jnp.zeros(TOY64.n)}, opt, cfg)
-    hist = []
-    for i in range(steps):
-        state, m = step(state, R.agent_batches(
-            problem64, jax.random.fold_in(jax.random.key(13), i)))
-        hist.append({k: np.asarray(v) for k, v in m.items()})
-    return state, hist
-
-
-@pytest.mark.parametrize("net", TIER_MIXES, ids=lambda n: n.name)
-def test_hybrid_bit_identical_to_unroll_every_tier_mix(problem64, net):
-    """ISSUE-5 acceptance: the hybrid path is bit-identical to the
-    unrolled reference on CPU for every TIER_MIXES scenario at the full
-    m=64 — params, opt state, EF memory, and the metrics, with the one
-    pre-existing exception the switch path already has: ``mean_gain``
-    can sit one ULP off (probe-loss fusion context), so it is compared
-    to float tolerance while everything else must be exact.  The switch
-    path is held to the same standard in the same run, so all three
-    dispatch paths are mutually pinned."""
-    outs = {d: _run_m64(problem64, net, d)
-            for d in ("hybrid", "switch", "unroll")}
-    for d in ("hybrid", "switch"):
-        state, hist = outs[d]
-        ref_state, ref_hist = outs["unroll"]
-        assert _tree_equal(state, ref_state), f"{d} state differs"
-        for got, want in zip(hist, ref_hist):
-            for k in want:
-                if k == "mean_gain":
-                    np.testing.assert_allclose(got[k], want[k], rtol=1e-5,
-                                               err_msg=f"{d}:{k}")
-                else:
-                    np.testing.assert_array_equal(got[k], want[k],
-                                                  err_msg=f"{d}:{k}")
-    # hybrid vs switch have no fusion-context excuse: fully bitwise
-    assert _tree_equal(outs["hybrid"][0], outs["switch"][0])
-    for got, want in zip(outs["hybrid"][1], outs["switch"][1]):
-        for k in want:
-            np.testing.assert_array_equal(got[k], want[k], err_msg=k)
-
-
-def test_tiered_m64_frontier_hybrid_matches_switch(problem64):
-    """ISSUE-5 acceptance: a TIERED_M64 smoke-style frontier (grid vmap
-    over the full 64-agent 4-tier fleet) matches between hybrid and
-    switch within the suite's float tolerance — in practice bitwise on
-    CPU — with the integer-valued wire accounting exactly equal."""
-    net = TIERED_M64
-    cfg = TrainConfig(lr=TOY64.stepsize, optimizer="sgd",
-                      num_agents=net.num_agents,
-                      comm=net.policies(lam_base=1.0))
-    opt = opt_lib.from_config(cfg)
-    kw = dict(scales=[0.0, 1.0, 4.0], steps=4,
-              batch_fn=lambda k: R.agent_batches(problem64, k),
-              key=jax.random.key(17))
-    hy = run_frontier(linreg_loss, opt, cfg, _params(),
-                      hetero_dispatch="hybrid", **kw)
-    sw = run_frontier(linreg_loss, opt, cfg, _params(),
-                      hetero_dispatch="switch", **kw)
-    for a, b in zip(jax.tree_util.tree_leaves(hy.state),
-                    jax.tree_util.tree_leaves(sw.state)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   rtol=1e-5, atol=1e-6)
-    for k in ("num_tx", "wire_bytes", "any_tx", "agent_tx"):
-        np.testing.assert_array_equal(np.asarray(hy.metrics[k]),
-                                      np.asarray(sw.metrics[k]), err_msg=k)
-    for k in ("loss", "mean_gain", "agent_bytes"):
-        np.testing.assert_allclose(np.asarray(hy.metrics[k]),
-                                   np.asarray(sw.metrics[k]),
-                                   rtol=1e-5, atol=1e-6, err_msg=k)
+# (dispatch-path equivalence — under the grid vmap and at the full
+# m=64 tier mixes — now lives in tests/test_dispatch_differential.py,
+# the one parametrized harness over mixes × wire models × controllers)
 
 
 # ----------------------------------------------------------------------

@@ -144,10 +144,6 @@ def test_knob_vocabulary_errors():
 # ----------------------------------------------------------------------
 
 N_FEATURES = 4
-MIXED_M4 = ("always",
-            "gain_lookahead(lam=0.01)|int8+ef",
-            "grad_norm(mu=0.5)|topk(0.5)",
-            "periodic(period=2)")
 
 
 def linreg_loss(params, batch):
@@ -179,35 +175,9 @@ def _train(cfg, dispatch, steps=12):
     return state, hist
 
 
-@pytest.mark.parametrize("dispatch", ["switch", "hybrid"])
-def test_bank_dispatch_bit_identical_to_unrolled_m4(dispatch):
-    """ISSUE-2/ISSUE-5 acceptance: metrics, params, opt state and EF
-    memory are BIT-identical between each stage-bank dispatch path
-    (agent-axis switch scan; vmap-prologue hybrid) and the unrolled
-    reference at m=4 mixed policies."""
-    cfg = TrainConfig(lr=0.1, optimizer="sgd", num_agents=4, comm=MIXED_M4)
-    s_sw, h_sw = _train(cfg, dispatch)
-    s_un, h_un = _train(cfg, "unroll")
-    for a, b in zip(h_sw, h_un):
-        for k in a:
-            assert np.array_equal(a[k], b[k]), (k, a[k], b[k])
-    for a, b in zip(jax.tree_util.tree_leaves(s_sw),
-                    jax.tree_util.tree_leaves(s_un)):
-        assert np.array_equal(np.asarray(a), np.asarray(b))
-
-
-@pytest.mark.parametrize("dispatch", ["switch", "hybrid"])
-def test_bank_dispatch_bit_identical_under_adamw(dispatch):
-    cfg = TrainConfig(lr=0.05, optimizer="adamw", num_agents=4,
-                      comm=MIXED_M4)
-    s_sw, h_sw = _train(cfg, dispatch, steps=6)
-    s_un, h_un = _train(cfg, "unroll", steps=6)
-    for a, b in zip(h_sw, h_un):
-        for k in a:
-            assert np.array_equal(a[k], b[k]), k
-    for a, b in zip(jax.tree_util.tree_leaves(s_sw),
-                    jax.tree_util.tree_leaves(s_un)):
-        assert np.array_equal(np.asarray(a), np.asarray(b))
+# (dispatch-path equivalence at m=4 — incl. the adamw variant — now
+# lives in tests/test_dispatch_differential.py, the one parametrized
+# harness over mixes × wire models × controllers)
 
 
 def test_switch_dispatch_scales_to_m16_with_3_banks():

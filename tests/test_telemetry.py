@@ -202,6 +202,141 @@ def test_lossy_keys_roll_up():
     assert "fleet_delivered_byte_frac 0.75" in text
 
 
+def _churned_rollup():
+    """The 3-agent / 2-tier rollup under scenario churn: round 1 all
+    active, round 2 agent 1 benched (the active mask SHRINKS
+    mid-stream).  Same injected clock as :func:`_two_round_rollup`."""
+    roll = CommRollup(
+        tier_names=("edge", "core"),
+        tier_index=[0, 0, 1],
+        budgets=[4.0, 4.0, float("inf")],
+        lam_alpha=0.5,
+        clock=make_clock(),
+    )
+    roll.update({
+        "loss": 1.0, "comm_rate": 0.5, "num_tx": 2, "wire_bytes": 12.0,
+        "num_active": 3.0,
+        "agent_active": np.array([1.0, 1.0, 1.0]),
+        "agent_tx": np.array([1.0, 0.0, 1.0]),
+        "agent_bytes": np.array([8.0, 0.0, 4.0]),
+        "agent_lam": np.array([0.2, 0.4, 0.1]),
+    })
+    roll.update({
+        "loss": 0.5, "comm_rate": 1.0, "num_tx": 2, "wire_bytes": 12.0,
+        "num_active": 2.0,
+        "agent_active": np.array([1.0, 0.0, 1.0]),
+        "agent_tx": np.array([1.0, 0.0, 1.0]),
+        "agent_bytes": np.array([8.0, 0.0, 4.0]),
+        "agent_lam": np.array([0.4, 0.0, 0.3]),
+    })
+    return roll
+
+
+def test_churn_snapshot_golden():
+    """ISSUE-9: the churned snapshot, pinned value-exact.
+
+    Hand computation: tier "edge" (agents 0, 1) has 2 + 1 = 3 ACTIVE
+    agent-rounds — agent 1's benched round 2 is excluded — so 2
+    transmissions rate to 2/3 and 16 B spread over 3 agent-rounds, not
+    4; λ EWMA averages active agents only (0.3 then 0.5·0.3 + 0.5·0.4 =
+    0.35, agent 1's parked 0.0 never dilutes it); ``num_active`` tracks
+    the latest round's joined count as a gauge."""
+    snap = _churned_rollup().snapshot()
+    assert snap == {
+        "rounds": 2,
+        "elapsed_s": 0.5,
+        "rounds_per_sec": 2.0,
+        "rounds_per_sec_window": 2.0,
+        "gauges": {"loss": 0.5, "comm_rate": 1.0, "num_active": 2.0},
+        "counters": {"num_tx": 4.0, "wire_bytes": 24.0},
+        "budget_violation_rounds": 2,
+        "tiers": {
+            "edge": {
+                "agents": 2, "tx_total": 2.0, "tx_rate": 0.666667,
+                "bytes_total": 16.0, "bytes_per_agent_round": 5.333333,
+                "violations": 2, "active_agent_rounds": 3.0,
+                "budget_bytes_per_round": 4.0, "lam_ewma": 0.35,
+            },
+            "core": {
+                "agents": 1, "tx_total": 2.0, "tx_rate": 1.0,
+                "bytes_total": 8.0, "bytes_per_agent_round": 4.0,
+                "violations": 0, "active_agent_rounds": 2.0,
+                "budget_bytes_per_round": None, "lam_ewma": 0.2,
+            },
+        },
+    }
+    assert json.loads(_churned_rollup().to_json()) == json.loads(
+        json.dumps(snap))
+
+
+def test_churn_prometheus_series():
+    """The churned exposition adds exactly the two churn series —
+    the ``fleet_num_active`` gauge and the per-tier active agent-round
+    counters — and the tier rates already price the shrunken mask."""
+    text = _churned_rollup().to_prometheus()
+    for line in (
+        "# HELP fleet_num_active Latest round's active (joined) agent "
+        "count.",
+        "# TYPE fleet_num_active gauge",
+        "fleet_num_active 2",
+        "# TYPE fleet_tier_active_agent_rounds_total counter",
+        'fleet_tier_active_agent_rounds_total{tier="edge"} 3',
+        'fleet_tier_active_agent_rounds_total{tier="core"} 2',
+        'fleet_tier_tx_rate{tier="edge"} 0.666667',
+        'fleet_tier_bytes_per_agent_round{tier="edge"} 5.333333',
+    ):
+        assert line in text, line
+    # churn-free streams keep the pre-churn exposition byte-exact —
+    # no active_agent_rounds series, no num_active gauge
+    clean = _two_round_rollup()
+    assert "active_agent_rounds" not in clean.to_prometheus()
+    assert "num_active" not in clean.to_prometheus()
+    assert "active_agent_rounds" not in clean.snapshot()["tiers"]["edge"]
+
+
+def test_counters_monotone_under_churn():
+    """Every counter — fleet and per-tier — is non-decreasing round
+    over round while the active mask flaps, and the active agent-round
+    denominators never count a benched agent."""
+    roll = CommRollup(tier_names=("edge", "core"), tier_index=[0, 0, 1],
+                      budgets=[4.0, 4.0, float("inf")],
+                      clock=make_clock())
+    masks = [(1, 1, 1), (1, 0, 1), (0, 0, 1), (1, 1, 1), (1, 0, 0)]
+    prev, expect_possible = None, np.zeros(2)
+    for i, mask in enumerate(masks):
+        act = np.asarray(mask, np.float64)
+        roll.update({
+            "loss": 1.0 / (i + 1), "comm_rate": act.mean(),
+            "num_tx": act.sum(), "wire_bytes": 4.0 * act.sum(),
+            "num_active": act.sum(), "agent_active": act,
+            "agent_tx": act.copy(), "agent_bytes": 4.0 * act,
+            "agent_lam": 0.1 * act,
+        })
+        expect_possible += [act[:2].sum(), act[2:].sum()]
+        snap = roll.snapshot()
+        tiers = snap["tiers"]
+        assert [tiers["edge"]["active_agent_rounds"],
+                tiers["core"]["active_agent_rounds"]] \
+            == list(expect_possible)
+        for name in ("edge", "core"):
+            # transmissions == active agent-rounds here, so the rate
+            # pins at exactly 1 only BECAUSE benched agents are excluded
+            assert tiers[name]["tx_rate"] == (
+                1.0 if expect_possible[("edge", "core").index(name)]
+                else 0.0)
+        if prev is not None:
+            assert snap["counters"]["num_tx"] >= prev["counters"]["num_tx"]
+            assert snap["counters"]["wire_bytes"] >= \
+                prev["counters"]["wire_bytes"]
+            assert snap["rounds"] == prev["rounds"] + 1
+            for name in ("edge", "core"):
+                for key in ("tx_total", "bytes_total", "violations",
+                            "active_agent_rounds"):
+                    assert tiers[name][key] >= prev["tiers"][name][key], \
+                        (name, key)
+        prev = snap
+
+
 def test_tier_names_without_index_rejected():
     with pytest.raises(ValueError, match="tier_index"):
         CommRollup(tier_names=("a",))

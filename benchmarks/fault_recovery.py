@@ -1,0 +1,331 @@
+"""Fault-tolerant serving: crash-safe resume, retransmit-vs-re-gate
+frontiers, agent crash/flap injection, and watchdog stall detection.
+
+Four demonstrations on one m=16 linreg fleet (DESIGN.md §10):
+
+* **Crash-safe resume** — a :class:`~repro.launch.session.FleetSession`
+  serving a lossy ``@ retx`` policy is checkpointed at round N and a
+  FRESH session auto-resumes from disk for N more rounds; its params
+  must match a 2N-round uninterrupted reference to the bit (the resumed
+  batch/channel streams are keyed by absolute round index, so the
+  trajectory replays exactly), with strictly monotone rollup counters
+  across the restart and the restart itself recorded.  Checkpoint
+  write, restore, and first-round-back times are reported as the
+  recovery cost.
+* **Retransmit vs re-gate** — under ``gain_lookahead`` gating WITHOUT
+  error feedback, a payload lost on a plain ``@ bernoulli`` wire is
+  gone until the gate re-fires (re-gating); ``@ retx(k=2,fresh=true)``
+  keeps it in the channel buffer and re-offers it while the gate still
+  judges it worthwhile.  The frontier sweeps both (plus non-fresh retx)
+  across channel severities in one compile; at ≥20% Bernoulli loss the
+  fresh-retx lane must reach LOWER final J on no more delivered bytes
+  than the re-gate baseline.
+* **Agent crashes** — a :class:`~repro.launch.faults.FaultInjector`
+  permanently crashes a quarter of the fleet mid-serve and flaps one
+  more agent on a cycle; the session must keep learning through it
+  (the global objective still falls well below J(w₀)).
+* **Watchdog** — a scheduled hung round (``make_stall``) starves the
+  session :class:`~repro.launch.session.Watchdog` past its timeout; the
+  rollup must carry the resulting ``"stall"`` degradation event while
+  the loop runs to completion.
+
+Claims: resumed params within a few ULP of uninterrupted (bitwise in
+practice), counters monotone across the restart, fresh-retx beats
+re-gating at matched delivered bytes on every severity lane, the
+crashed fleet still learns, the stall is flagged, and every retx lane
+learns.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_row, save_result
+from repro.comm.rollup import CommRollup
+from repro.configs.base import TrainConfig
+from repro.configs.paper_linreg import LinRegConfig
+from repro.core import regression as R
+from repro.core.api import StepOptions, init_train_state, make_triggered_train_step
+from repro.core.frontier import run_frontier
+from repro.launch.faults import AgentFault, FaultInjector, make_stall
+from repro.launch.session import FleetSession, SessionOptions
+from repro.optim import optimizers as opt_lib
+
+# the retx-vs-regate operating point: gated int8 without EF (a lost
+# payload is really lost — re-gating is the only baseline recourse),
+# 25% nominal Bernoulli loss swept over two severities (20% and 25%)
+GATE = "gain_lookahead(lam=2.0)|int8"
+LOSS_P = 0.25
+CHAN_SEVERITIES = [0.8, 1.0]
+BYTE_MATCH_TOL = 0.05  # delivered-byte budget slack for the retx win
+
+CFG_LR = LinRegConfig(name="fault_recovery", n=16, num_agents=16,
+                      samples_per_agent=24, stepsize=0.1, steps=40,
+                      noise_std=1.0, cov_range=(0.2, 4.0))
+
+# committed full-size artifact (like BENCH_lossy / BENCH_dispatch)
+BENCH_PATH = Path(__file__).resolve().parent / "BENCH_fault.json"
+
+
+def _loss_fn(params, batch):
+    xs, ys = batch
+    r = xs @ params["w"] - ys
+    return 0.5 * jnp.mean(r * r)
+
+
+def _session_spec(seed: int) -> str:
+    return f"{GATE}+ef @ retx(k=2,p={LOSS_P},seed={seed})"
+
+
+def _make_session(problem, dispatch, seed, *, options=None, on_round=None,
+                  batch_wrap=None):
+    cfg = TrainConfig(lr=CFG_LR.stepsize, optimizer="sgd",
+                      num_agents=CFG_LR.num_agents,
+                      comm=(_session_spec(seed),) * CFG_LR.num_agents)
+    opt = opt_lib.from_config(cfg)
+    step = make_triggered_train_step(
+        _loss_fn, opt, cfg,
+        options=StepOptions(hetero_dispatch=dispatch or "hybrid",
+                            agent_metrics=True))
+    state = init_train_state({"w": jnp.zeros(CFG_LR.n)}, opt, cfg)
+
+    def batch_fn(key):
+        return R.agent_batches(problem, key)
+
+    return FleetSession(
+        step, state,
+        batch_wrap(batch_fn) if batch_wrap else batch_fn,
+        CommRollup(), key=jax.random.key(31), options=options,
+        on_round=on_round)
+
+
+def _crash_resume(problem, dispatch, seed, rounds: int,
+                  ckpt_dir: str | None = None) -> dict:
+    """N rounds + checkpoint + fresh-session resume + N rounds, against
+    a 2N uninterrupted reference; returns the recovery record.
+
+    ``ckpt_dir`` pins the checkpoint root (the --ckpt-dir knob); a
+    fresh per-run subdirectory keeps stale checkpoints from hijacking
+    the resume.  Default: a temp directory.
+    """
+    with tempfile.TemporaryDirectory() as tmp:
+        if ckpt_dir is not None:
+            ckpt_dir = os.path.join(ckpt_dir, "fault_recovery_resume")
+            shutil.rmtree(ckpt_dir, ignore_errors=True)
+        else:
+            ckpt_dir = tmp
+        opts = SessionOptions(ckpt_dir=ckpt_dir, ckpt_every=0)
+        a = _make_session(problem, dispatch, seed, options=opts)
+        a.run(rounds=rounds)
+        before = a.rollup.snapshot()
+        t0 = time.monotonic()
+        a.checkpoint()
+        ckpt_write_s = time.monotonic() - t0
+
+        t0 = time.monotonic()
+        b = _make_session(problem, dispatch, seed, options=opts)
+        restore_s = time.monotonic() - t0
+        resumed_at = b.round_index
+        t0 = time.monotonic()
+        b.run(rounds=1)
+        first_round_s = time.monotonic() - t0
+        b.run(rounds=rounds - 1)
+        after = b.rollup.snapshot()
+
+    ref = _make_session(problem, dispatch, seed)
+    ref.run(rounds=2 * rounds)
+    w_res = np.asarray(b.state.params["w"])
+    w_ref = np.asarray(ref.state.params["w"])
+    max_abs_diff = float(np.abs(w_res - w_ref).max())
+    ulp = float(np.spacing(np.float32(np.abs(w_ref).max() or 1.0)))
+    c_before, c_after = before["counters"], after["counters"]
+    return {
+        "rounds_each_phase": rounds,
+        "resumed_at_round": resumed_at,
+        "restarts": after.get("restarts", 0),
+        "ckpt_write_s": ckpt_write_s,
+        "restore_s": restore_s,
+        "first_round_back_s": first_round_s,
+        "recovery_s": restore_s + first_round_s,
+        "max_abs_diff": max_abs_diff,
+        "bitwise": bool(np.array_equal(w_res, w_ref)),
+        "within_ulp": bool(max_abs_diff <= 4.0 * ulp),
+        "counters_before_kill": c_before,
+        "counters_final": c_after,
+        "counters_monotone": bool(
+            after["rounds"] == 2 * rounds
+            and before["rounds"] == resumed_at
+            and all(c_after[k] >= c_before[k] for k in c_before)
+        ),
+    }
+
+
+def _retx_frontier(problem, dispatch, seed, steps: int):
+    """One frontier per channel variant, severity-swept in one compile
+    each; rows are (spec, severity) lanes."""
+    channels = [
+        ("regate", f"bernoulli(p={LOSS_P},seed={seed})"),
+        ("retx", f"retx(k=2,p={LOSS_P},seed={seed})"),
+        ("retx_fresh", f"retx(k=2,fresh=true,p={LOSS_P},seed={seed})"),
+    ]
+
+    def batch_fn(key):
+        return R.agent_batches(problem, key)
+
+    rows = []
+    for kind, chan in channels:
+        spec = f"{GATE} @ {chan}"
+        cfg = TrainConfig(lr=CFG_LR.stepsize, optimizer="sgd",
+                          num_agents=CFG_LR.num_agents,
+                          comm=(spec,) * CFG_LR.num_agents)
+        opt = opt_lib.from_config(cfg)
+        res = run_frontier(
+            _loss_fn, opt, cfg, {"w": jnp.zeros(CFG_LR.n)},
+            scales=[1.0] * len(CHAN_SEVERITIES), steps=steps,
+            batch_fn=batch_fn, key=jax.random.key(31),
+            hetero_dispatch=dispatch or "hybrid",
+            chan_scales=CHAN_SEVERITIES)
+        J = np.asarray(jax.vmap(problem.J)(res.state.params["w"]))
+        deliv = np.asarray(res.metrics["wire_bytes"]).sum(axis=1)
+        att = np.asarray(res.metrics["wire_bytes_attempted"]).sum(axis=1)
+        stale = np.asarray(res.metrics["mean_staleness"])[:, -1]
+        for i, sev in enumerate(CHAN_SEVERITIES):
+            rows.append({
+                "kind": kind,
+                "spec": spec,
+                "chan_scale": float(sev),
+                "loss_rate": float(LOSS_P * sev),
+                "final_J": float(J[i]),
+                "delivered_bytes": float(deliv[i]),
+                "attempted_bytes": float(att[i]),
+                "mean_staleness_final": float(stale[i]),
+            })
+    return rows
+
+
+def _fault_injection(problem, dispatch, seed, rounds: int) -> dict:
+    """Crash 4/16 agents permanently at rounds//4, flap one more on an
+    8-round cycle, and stall one round past a 0.15s watchdog."""
+    faults = [AgentFault(agent=a, start=rounds // 4) for a in (3, 7, 11, 15)]
+    faults.append(AgentFault(agent=5, start=2, duration=2, period=8))
+
+    stall = make_stall(at_round=min(3, rounds - 1), seconds=0.5)
+    session = _make_session(
+        problem, dispatch, seed,
+        options=SessionOptions(watchdog_timeout=0.15),
+        on_round=stall,
+        batch_wrap=lambda fn: FaultInjector(
+            fn, faults, CFG_LR.num_agents))
+    session.run(rounds=rounds)
+    snap = session.rollup.snapshot()
+    final_J = float(problem.J(jnp.asarray(
+        np.asarray(session.state.params["w"]))))
+    return {
+        "rounds": rounds,
+        "crashed_agents": [f.agent for f in faults if f.period == 0],
+        "flapping_agent": 5,
+        "final_J": final_J,
+        "num_active_final": snap["gauges"].get("num_active"),
+        "degradation_events": snap.get("degradation_events", {}),
+    }
+
+
+def run(verbose: bool = True, smoke: bool = False,
+        dispatch: str | None = None, seed: int = 0,
+        ckpt_dir: str | None = None,
+        kill_round: int | None = None) -> dict:
+    """``dispatch`` pins the hetero train-step path (None = the default
+    ``hybrid``); ``seed`` keys the channel delivery streams so CI lanes
+    replay identical drop patterns; ``ckpt_dir`` roots the crash-resume
+    checkpoints (default: temp dir); ``kill_round`` overrides the round
+    the session is checkpointed and "killed" at."""
+    steps = 40 if smoke else 80
+    resume_rounds = kill_round or (8 if smoke else 24)
+    fault_rounds = 12 if smoke else 48
+    problem = R.make_problem(CFG_LR, jax.random.key(30))
+    J0 = float(problem.J(jnp.zeros(CFG_LR.n)))
+
+    retx_rows = _retx_frontier(problem, dispatch, seed, steps)
+    recovery = _crash_resume(problem, dispatch, seed, resume_rounds,
+                             ckpt_dir=ckpt_dir)
+    faults = _fault_injection(problem, dispatch, seed, fault_rounds)
+
+    def lanes(kind):
+        return [r for r in retx_rows if r["kind"] == kind]
+
+    retx_wins = all(
+        rf["final_J"] < rg["final_J"]
+        and rf["delivered_bytes"]
+        <= (1.0 + BYTE_MATCH_TOL) * rg["delivered_bytes"]
+        for rf, rg in zip(lanes("retx_fresh"), lanes("regate"))
+    )
+    claims = {
+        "crash_resume_trajectory_equal": recovery["within_ulp"],
+        "counters_monotone_across_restart": (
+            recovery["counters_monotone"] and recovery["restarts"] >= 1
+        ),
+        "retx_beats_regate_at_matched_bytes": retx_wins,
+        "survives_agent_crash": faults["final_J"] < 0.5 * J0,
+        "watchdog_flags_stall": (
+            faults["degradation_events"].get("stall", 0) >= 1
+        ),
+        "every_point_learns": all(
+            r["final_J"] < 0.5 * J0 for r in retx_rows
+        ),
+    }
+    payload = {
+        "config": (f"fault_recovery (n={CFG_LR.n}, m={CFG_LR.num_agents}, "
+                   f"N={CFG_LR.samples_per_agent}, eps={CFG_LR.stepsize}, "
+                   f"K={steps}, resume_rounds={resume_rounds}, "
+                   f"fault_rounds={fault_rounds}, gate={GATE}, "
+                   f"p={LOSS_P}, tol={BYTE_MATCH_TOL})"),
+        "dispatch": dispatch or "hybrid",
+        "seed": seed,
+        "J_init": J0,
+        "chan_severities": CHAN_SEVERITIES,
+        "rows": retx_rows,
+        "recovery": recovery,
+        "faults": faults,
+        "claims": claims,
+    }
+    if verbose:
+        print("-- retx vs re-gate (gate without EF)")
+        print("kind,chan_scale,loss_rate,final_J,delivered_B,attempted_B,"
+              "stale")
+        for r in retx_rows:
+            print(fmt_row(r["kind"], r["chan_scale"], r["loss_rate"],
+                          f"{r['final_J']:.4f}",
+                          f"{r['delivered_bytes']:.0f}",
+                          f"{r['attempted_bytes']:.0f}",
+                          f"{r['mean_staleness_final']:.2f}"))
+        print(f"-- crash-resume: bitwise={recovery['bitwise']} "
+              f"max|diff|={recovery['max_abs_diff']:.3g} "
+              f"recovery={recovery['recovery_s']:.3f}s "
+              f"(ckpt write {recovery['ckpt_write_s']:.3f}s, "
+              f"restore {recovery['restore_s']:.3f}s)")
+        print(f"-- faults: final_J={faults['final_J']:.4f} (J0={J0:.1f}) "
+              f"degradation={faults['degradation_events']}")
+        print("claims:", claims)
+    tag = f"_{dispatch}" if dispatch else ""
+    payload_path = save_result(
+        f"fault_recovery{tag}_smoke" if smoke else f"fault_recovery{tag}",
+        payload,
+    )
+    if not smoke:
+        assert all(claims.values()), claims
+        # refresh the committed artifact (default lane only, so CI
+        # dispatch lanes don't churn the repo copy)
+        if not dispatch:
+            BENCH_PATH.write_text(payload_path.read_text())
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -31,6 +31,11 @@ the same contract ``--smoke`` has always had.  Current knobs:
   MUST take effect before jax is imported, so the registry marks it
   ``pre_import`` and it is consumed at module top, before the
   benchmark imports.
+* ``--ckpt-dir PATH`` — root directory for the fault-tolerance
+  benchmark's crash-resume checkpoints (validated writable up front;
+  default: a temp directory).
+* ``--kill-round N`` — the round the fault-tolerance benchmark
+  checkpoints and "kills" its session at (positive integer).
 
 Dry-run-derived tables (roofline) read cached JSONs from
 ``experiments/dryrun`` — run ``python -m repro.launch.dryrun --all``
@@ -115,11 +120,41 @@ def _apply_devices(devices):
     ).strip()
 
 
+def _parse_ckpt_dir(value):
+    # validation lives in parse (apply only runs for pre_import knobs):
+    # the directory must exist and be writable BEFORE any benchmark
+    # runs, so a bad path fails with rc 2 instead of mid-benchmark
+    if not value:
+        raise KnobError("--ckpt-dir expects a directory path")
+    try:
+        os.makedirs(value, exist_ok=True)
+    except OSError as e:
+        raise KnobError(
+            f"--ckpt-dir {value!r} is not a usable directory: {e}")
+    if not os.access(value, os.W_OK):
+        raise KnobError(f"--ckpt-dir {value!r} is not writable")
+    return value
+
+
+def _parse_kill_round(value):
+    try:
+        r = int(value)
+        if r < 1:
+            raise ValueError
+    except (TypeError, ValueError):
+        raise KnobError(
+            f"--kill-round expects a positive integer, got {value!r}")
+    return r
+
+
 KNOBS = (
     Knob("--dispatch", "dispatch", _parse_dispatch, "no dispatch knob"),
     Knob("--seed", "seed", _parse_seed, "no seed knob"),
     Knob("--devices", "devices", _parse_devices, "no devices knob",
          pre_import=True, apply=_apply_devices),
+    Knob("--ckpt-dir", "ckpt_dir", _parse_ckpt_dir, "no ckpt_dir knob"),
+    Knob("--kill-round", "kill_round", _parse_kill_round,
+         "no kill_round knob"),
 )
 
 
@@ -153,6 +188,7 @@ from benchmarks import (  # noqa: E402  (after the pre_import phase)
     adaptive_budget,
     async_rounds,
     dispatch_bench,
+    fault_recovery,
     fig1_right,
     fig2_left,
     fig2_right,
@@ -179,6 +215,7 @@ ALL = {
     "adaptive_budget": adaptive_budget.run,  # beyond-paper: closed-loop λ
     "lossy_channels": lossy_channels.run,  # beyond-paper: lossy wires (repro.net)
     "async_rounds": async_rounds.run,  # beyond-paper: latency wires + churn
+    "fault_recovery": fault_recovery.run,  # crash-resume + retx-vs-regate
     "dispatch_bench": dispatch_bench.run,  # unroll/switch/hybrid step+compile
     "shard_scale": shard_scale.run,    # fleet sharding vs single-device vmap
     "serve_stream": serve_stream.run,  # FleetSession serving throughput

@@ -1,1 +1,8 @@
-from repro.checkpoint.checkpointer import restore, save, latest_step  # noqa: F401
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    CheckpointCorruptionError,
+    CheckpointError,
+    latest_step,
+    read_manifest,
+    restore,
+    save,
+)

@@ -1,41 +1,108 @@
-"""Minimal dependency-free checkpointing: npz payload + json manifest.
+"""Crash-safe dependency-free checkpointing: npz payload + json manifest.
 
-Layout:  <dir>/step_<k>/arrays.npz   (flat leaves, keyed by index)
-         <dir>/step_<k>/manifest.json  (treedef repr, shapes, dtypes, step)
+Layout:  <dir>/step_<k>/arrays.npz     (flat leaves, keyed by index)
+         <dir>/step_<k>/manifest.json  (shapes/dtypes/leaf paths, payload
+                                        checksum, caller metadata)
 
-``restore`` takes a template pytree (``like=``) to rebuild structure —
-the standard restore-into-abstract-state pattern.
+Durability model (the FleetSession resume path rides on all three):
+
+* **Atomic saves.**  Both files are written into a ``step_<k>.tmp``
+  sibling directory which is ``os.replace``d into place only once
+  complete.  :func:`latest_step` matches ``step_<digits>`` exactly, so
+  a crash mid-save leaves only an ignored ``.tmp`` orphan — never a
+  half-written checkpoint that restore would pick up.  (Re-saving an
+  existing step replaces it.)
+* **Corruption detection.**  The manifest records a CRC-32 of the
+  ``arrays.npz`` bytes; :func:`restore` re-hashes the payload and
+  raises :class:`CheckpointCorruptionError` on mismatch instead of
+  handing back silently wrong tensors.
+* **Template validation.**  ``restore`` takes a template pytree
+  (``like=``) to rebuild structure — the standard restore-into-
+  abstract-state pattern — and validates the checkpoint leaf-by-leaf
+  against it: leaf count, then each leaf's shape AND dtype, with the
+  first mismatching leaf's tree path in the exception message (not a
+  raw numpy failure, and never a silent dtype cast).
+
+``save(..., extra=...)`` stores one JSON-serializable object in the
+manifest (the session layer keeps its round index and rollup counters
+there); :func:`read_manifest` reads it back without touching the
+payload.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import shutil
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 
-def save(ckpt_dir: str, step: int, tree: Any) -> str:
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    os.makedirs(path, exist_ok=True)
+class CheckpointError(ValueError):
+    """A checkpoint that cannot be restored (structure/shape/dtype)."""
+
+
+class CheckpointCorruptionError(CheckpointError):
+    """A checkpoint whose payload bytes fail their manifest checksum."""
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def _leaf_paths(tree) -> list:
+    """Human-readable tree path per leaf (``jax.tree_util.keystr``)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(path) or "<root>" for path, _ in flat]
+
+
+def _crc32(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(chunk, crc)
+    return crc & 0xFFFFFFFF
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Any = None) -> str:
+    """Write ``tree`` atomically as checkpoint ``step``; returns its dir.
+
+    ``extra`` is any JSON-serializable object stored in the manifest
+    (read back via :func:`read_manifest`) — round counters, rollup
+    snapshots, anything that must travel with the arrays but is not a
+    tensor.
+    """
+    final = _step_dir(ckpt_dir, step)
+    tmp = final + ".tmp"
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)  # orphan from a crashed earlier save
+    os.makedirs(tmp)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     manifest = {
         "step": step,
         "num_leaves": len(leaves),
         "treedef": str(treedef),
-        "shapes": [list(np.shape(x)) for x in leaves],
-        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+        "paths": _leaf_paths(tree),
+        "shapes": [list(a.shape) for a in arrays.values()],
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "crc32": _crc32(os.path.join(tmp, "arrays.npz")),
+        "extra": extra,
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
-    return path
+    if os.path.isdir(final):
+        shutil.rmtree(final)  # re-save of an existing step replaces it
+    os.replace(tmp, final)
+    return final
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Highest COMPLETE checkpoint step (``.tmp`` orphans never match)."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [
@@ -46,26 +113,59 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Any:
+def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """The manifest dict of checkpoint ``step`` (default: latest)."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(_step_dir(ckpt_dir, step), "manifest.json")) as f:
+        return json.load(f)
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Any:
+    """Load checkpoint ``step`` (default: latest) into ``like``'s
+    structure, after checksum and leaf-by-leaf shape/dtype validation.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = _step_dir(ckpt_dir, step)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    npz = os.path.join(path, "arrays.npz")
+    want_crc = manifest.get("crc32")
+    if want_crc is not None and _crc32(npz) != want_crc:
+        raise CheckpointCorruptionError(
+            f"checkpoint {path} failed its payload checksum: arrays.npz "
+            f"does not match manifest crc32={want_crc} — the checkpoint "
+            f"is corrupt, restore from an earlier step"
+        )
+    data = np.load(npz)
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = _leaf_paths(like)
     if manifest["num_leaves"] != len(leaves_like):
-        raise ValueError(
-            f"checkpoint has {manifest['num_leaves']} leaves, template has {len(leaves_like)}"
+        raise CheckpointError(
+            f"checkpoint {path} has {manifest['num_leaves']} leaves, "
+            f"template has {len(leaves_like)} — the template's slot "
+            f"layout (EF/ctrl/net_state) must match the saved session"
         )
     leaves = []
-    for i, tmpl in enumerate(leaves_like):
+    for i, (tmpl, leaf_path) in enumerate(zip(leaves_like, paths)):
         arr = data[f"leaf_{i}"]
-        if tuple(arr.shape) != tuple(np.shape(tmpl)):
-            raise ValueError(
-                f"leaf {i} shape mismatch: ckpt {arr.shape} vs template {np.shape(tmpl)}"
+        tmpl_arr = np.asarray(tmpl)
+        if tuple(arr.shape) != tuple(tmpl_arr.shape):
+            raise CheckpointError(
+                f"checkpoint {path} leaf {leaf_path!r} (index {i}): "
+                f"shape {tuple(arr.shape)} does not match template "
+                f"shape {tuple(tmpl_arr.shape)}"
             )
-        leaves.append(jax.numpy.asarray(arr, dtype=np.asarray(tmpl).dtype if hasattr(tmpl, 'dtype') else arr.dtype))
+        if arr.dtype != tmpl_arr.dtype:
+            raise CheckpointError(
+                f"checkpoint {path} leaf {leaf_path!r} (index {i}): "
+                f"dtype {arr.dtype} does not match template dtype "
+                f"{tmpl_arr.dtype}"
+            )
+        leaves.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves)

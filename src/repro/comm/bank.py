@@ -39,7 +39,13 @@ the enlarged ``(row, line)`` pair, a delay branch's ``sent`` output is
 the MATURED payload dequeued from its FIFO line and ``delivered`` its
 staleness-discounted application weight ``w ∈ [0, 1]`` — the same
 7-tuple contract, with non-delay branches passing the line through
-untouched so ``lax.switch`` keeps uniform branch pytrees.
+untouched so ``lax.switch`` keeps uniform branch pytrees.  ``retx``
+branches ride the same enlarged slot (a 1-deep buffer holding the
+payload awaiting retransmission): their ``alpha`` output is the
+realized wire ATTEMPT (a re-offer transmits even when the trigger is
+shut, unless ``fresh`` re-gates it), ``sent`` the payload the server
+receives (buffered on re-offer rounds), and the EF fold of a lost
+payload is deferred until its ``k`` re-offers are exhausted.
 
 ``ctrl`` is one agent's ``(CTRL_WIDTH,)`` controller row — the
 closed-loop threshold state of the budget-adaptive triggers
@@ -307,9 +313,22 @@ def _make_epilogue(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool,
         # branches without a channel alias delivered to alpha below —
         # no extra ops, which keeps mixed banks' lossless tiers exact
         use_chan = use_net and channel is not None and net is not None
-        use_delay = use_chan and channel.depth > 0
+        # retx shares the payload-buffer slot (depth > 0) with delay but
+        # runs its own round logic — retx_k is the dispatch discriminator
+        use_retx = use_chan and channel.retx_k > 0
+        use_delay = use_chan and channel.depth > 0 and not use_retx
         eff_scale = scale
-        if use_delay:
+        if use_retx:
+            from repro.net.channels import retx_round, stale_scale, tx_cost
+
+            cost = tx_cost(grad, chain)
+            d, stale, pending, commit = retx_round(
+                channel, net, step, chan_scale, cost
+            )
+            eff_scale = stale_scale(scale, channel.boost, stale, adaptive)
+            if adaptive:
+                kw["delivered"] = d
+        elif use_delay:
             from repro.net.channels import delay_round, stale_scale
 
             d, stale, commit = delay_round(channel, net, step, chan_scale)
@@ -346,6 +365,33 @@ def _make_epilogue(trig: TriggerFn, chain: CompressorChain, *, use_ef: bool,
             new_ctrl = ctrl  # pass the (unused) row through unchanged
         g_eff = ef_add(grad, ef_mem if use_ef else None)
         sent = chain.compress_tree(g_eff) if chain else g_eff
+        if use_retx:
+            # resolve the retransmit round: alpha becomes the realized
+            # wire ATTEMPT (re-offers are priced in attempted bytes),
+            # ``sent`` the payload the server actually receives, and
+            # ``fold`` the expired buffered payload owed to EF
+            attempt, out_sent, delivered, fold, new_net = commit(
+                alpha, sent
+            )
+            if ef_mem is None:
+                new_mem = None
+            elif use_ef:
+                # compression residual only when THIS round's gradient
+                # went to the wire (empty buffer + open gate: the lost
+                # payload survives in the buffer, so nothing more is
+                # owed); a retransmitting round contributes nothing new;
+                # the expired payload folds back WHOLE on final failure
+                a_cur = alpha * (1.0 - pending)
+                new_mem = jax.tree_util.tree_map(
+                    lambda ge, se, f: (ge - se) * a_cur + f,
+                    g_eff, sent, fold,
+                )
+            else:
+                new_mem = jax.tree_util.tree_map(
+                    jax.numpy.zeros_like, ef_mem
+                )
+            return (attempt, gain, out_sent, new_mem, new_ctrl,
+                    delivered, new_net)
         if use_delay:
             # enqueue the payload (iff alpha×d), dequeue the matured
             # head: ``sent`` becomes the MATURED payload and

@@ -113,6 +113,15 @@ class CommRollup:
         # streams accumulate rounds × tier size exactly as before
         self._tier_possible = np.zeros(T)
         self._saw_churn = False
+        # fault-tolerance bookkeeping (PR-10): degradation events by
+        # kind (watchdog stalls, injected faults), process restarts
+        # (checkpoint resumes), and rounds served SINCE the last
+        # restart — throughput estimates use the live count so a
+        # resumed session reports honest rounds/sec while the monotone
+        # ``rounds`` counter keeps the whole history
+        self._degradation: Dict[str, int] = {}
+        self._restarts = 0
+        self._rounds_live = 0
 
     # ------------------------------------------------------------------
     # ingest
@@ -143,6 +152,7 @@ class CommRollup:
         now = self._clock()
         with self._lock:
             self.rounds += 1
+            self._rounds_live += 1
             if self._t_first is None:
                 self._t_first = now
             self._t_last = now
@@ -185,6 +195,82 @@ class CommRollup:
                     for t in range(T):
                         self._tier_violations[t] += int(over[idx == t].sum())
 
+    def record_degradation(self, kind: str) -> None:
+        """Count one degradation event (watchdog stall, injected fault,
+        ...) under ``kind``; exported as
+        ``fleet_degradation_events_total{kind=...}`` once any exist."""
+        with self._lock:
+            self._degradation[kind] = self._degradation.get(kind, 0) + 1
+
+    def record_restart(self) -> None:
+        """Count one process restart (a checkpoint resume)."""
+        with self._lock:
+            self._restarts += 1
+
+    # ------------------------------------------------------------------
+    # persistence (the FleetSession checkpoint path)
+    # ------------------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-serializable cut of everything a restart must carry.
+
+        Wall-clock state (timestamps) is deliberately NOT included:
+        after :meth:`load_state` the throughput estimates restart from
+        zero live rounds while every counter stays monotone.
+        """
+        with self._lock:
+            return {
+                "rounds": self.rounds,
+                "gauges": dict(self._gauges),
+                "counters": dict(self._counters),
+                "tier_tx": self._tier_tx.tolist(),
+                "tier_bytes": self._tier_bytes.tolist(),
+                "tier_lam_ewma": [
+                    None if np.isnan(v) else float(v)
+                    for v in self._tier_lam_ewma
+                ],
+                "tier_violations": self._tier_violations.tolist(),
+                "violation_rounds": self._violation_rounds,
+                "tier_possible": self._tier_possible.tolist(),
+                "saw_churn": self._saw_churn,
+                "degradation": dict(self._degradation),
+                "restarts": self._restarts,
+            }
+
+    def load_state(self, state: dict) -> None:
+        """Restore a :meth:`state_dict` cut (tier layout must match)."""
+        T = len(self._tier_names)
+        for key in ("tier_tx", "tier_bytes", "tier_lam_ewma",
+                    "tier_violations", "tier_possible"):
+            if len(state[key]) != T:
+                raise ValueError(
+                    f"rollup state {key!r} has {len(state[key])} tiers, "
+                    f"this rollup has {T} — scenario mismatch"
+                )
+        with self._lock:
+            self.rounds = int(state["rounds"])
+            self._rounds_live = 0
+            self._t_first = self._t_last = None
+            self._stamps.clear()
+            self._gauges = {k: float(v)
+                            for k, v in state["gauges"].items()}
+            self._counters = {k: float(v)
+                              for k, v in state["counters"].items()}
+            self._tier_tx = np.asarray(state["tier_tx"], np.float64)
+            self._tier_bytes = np.asarray(state["tier_bytes"], np.float64)
+            self._tier_lam_ewma = np.asarray(
+                [np.nan if v is None else v
+                 for v in state["tier_lam_ewma"]], np.float64)
+            self._tier_violations = np.asarray(
+                state["tier_violations"], np.int64)
+            self._violation_rounds = int(state["violation_rounds"])
+            self._tier_possible = np.asarray(
+                state["tier_possible"], np.float64)
+            self._saw_churn = bool(state["saw_churn"])
+            self._degradation = {k: int(v) for k, v in
+                                 state.get("degradation", {}).items()}
+            self._restarts = int(state.get("restarts", 0))
+
     # ------------------------------------------------------------------
     # export
     # ------------------------------------------------------------------
@@ -192,10 +278,15 @@ class CommRollup:
     def snapshot(self) -> dict:
         """A JSON-ready consistent cut of the rollup."""
         with self._lock:
+            # throughput over LIVE rounds (since construction or the
+            # last load_state): a resumed session's restored round
+            # count must not inflate its rounds/sec; on fresh rollups
+            # rounds == _rounds_live and this is the classic estimate
+            live = self._rounds_live
             elapsed = ((self._t_last - self._t_first)
-                       if self.rounds and self._t_last is not None else 0.0)
-            overall = ((self.rounds - 1) / elapsed
-                       if self.rounds > 1 and elapsed > 0 else 0.0)
+                       if live and self._t_last is not None else 0.0)
+            overall = ((live - 1) / elapsed
+                       if live > 1 and elapsed > 0 else 0.0)
             stamps = list(self._stamps)
             span = stamps[-1] - stamps[0] if len(stamps) > 1 else 0.0
             windowed = (len(stamps) - 1) / span if span > 0 else overall
@@ -210,6 +301,14 @@ class CommRollup:
                              for k in _COUNTER_KEYS if k in self._counters},
                 "budget_violation_rounds": self._violation_rounds,
             }
+            # fault-tolerance section: present only once an event or a
+            # restart exists, so fault-free streams keep their exact
+            # pre-PR-10 exports (the byte-golden contract)
+            if self._restarts:
+                snap["restarts"] = self._restarts
+            if self._degradation:
+                snap["degradation_events"] = dict(
+                    sorted(self._degradation.items()))
             att = self._counters.get("wire_bytes_attempted")
             if att:
                 # lossy channels: fraction of attempted bytes delivered
@@ -297,6 +396,19 @@ class CommRollup:
             emit("fleet_delivered_byte_frac", "gauge",
                  "Cumulative delivered/attempted wire-byte ratio.",
                  s["delivered_byte_frac"])
+        if "restarts" in s:
+            emit("fleet_restarts_total", "counter",
+                 "Process restarts (checkpoint resumes), cumulative.",
+                 s["restarts"])
+        if "degradation_events" in s:
+            out.append("# HELP fleet_degradation_events_total Degradation "
+                       "events (watchdog stalls, injected faults), "
+                       "cumulative.")
+            out.append("# TYPE fleet_degradation_events_total counter")
+            for kind, n in s["degradation_events"].items():
+                out.append(
+                    f'fleet_degradation_events_total{{kind="{kind}"}} '
+                    f"{_fmt(n)}")
         for metric, kind, help_, key in (
             ("fleet_tier_agents", "gauge", "Agents in the tier.", "agents"),
             ("fleet_tier_tx_rate", "gauge",

@@ -68,6 +68,7 @@ from repro.net.channels import (
     delay_round,
     net_init,
     net_rows,
+    retx_round,
     stale_scale,
     tx_cost,
 )
@@ -460,10 +461,11 @@ def make_triggered_train_step(
         and resolved.needs_net
         and resolved.channel_model().depth > 0
     ):
-        # a homogeneous @ delay policy runs through the stage-bank
-        # dispatch (a P=1 bank): the delay line's enqueue/dequeue
-        # epilogue lives in ONE place (repro.comm.bank) instead of
-        # being re-derived on the homogeneous vmap path
+        # a homogeneous payload-buffering policy (@ delay / @ retx,
+        # both depth > 0) runs through the stage-bank dispatch (a P=1
+        # bank): the buffer's enqueue/dequeue epilogue lives in ONE
+        # place (repro.comm.bank) instead of being re-derived on the
+        # homogeneous vmap path
         hetero = (resolved,) * cfg.num_agents
 
     def build_stages(pol: CommPolicy):
@@ -854,11 +856,18 @@ def make_triggered_train_step(
                 agent_batch = jax.tree_util.tree_map(lambda x: x[i], batch)
                 main, g = grad_prologue(state.params, agent_batch, True)
                 use_chan = use_net and chan_i is not None
-                use_delay = use_chan and chan_i.depth > 0
+                use_retx = use_chan and chan_i.retx_k > 0
+                use_delay = use_chan and chan_i.depth > 0 and not use_retx
                 net_i = jax.tree_util.tree_map(
                     lambda x: x[i], state.net_state
                 ) if use_net else None
-                if use_delay:
+                if use_retx:
+                    cost = tx_cost(g, chain_i)
+                    d, stale, pending, commit = retx_round(
+                        chan_i, net_i, state.step, chan_scale, cost
+                    )
+                    eff_scale = stale_scale(scale, chan_i.boost, stale, ad_i)
+                elif use_delay:
                     d, stale, commit = delay_round(
                         chan_i, net_i, state.step, chan_scale
                     )
@@ -887,6 +896,24 @@ def make_triggered_train_step(
                 ) if use_ef else None
                 g_eff = ef_add(g, mem_i)
                 s = chain_i.compress_tree(g_eff) if chain_i else g_eff
+                if use_retx:
+                    # same semantics as the bank's retx branch: alpha
+                    # becomes the realized attempt, the server sees the
+                    # buffered payload on re-offer rounds, and the EF
+                    # fold is deferred to final failure
+                    attempt, out_s, delivered, fold, new_net_i = commit(
+                        alpha, s
+                    )
+                    resid = jax.tree_util.tree_map(
+                        lambda ge, se, f:
+                        (ge - se) * (alpha * (1.0 - pending)) + f,
+                        g_eff, s, fold,
+                    ) if use_ef else None
+                    s = out_s
+                    alpha = attempt
+                    net_rows_out.append(new_net_i)
+                    per.append((main, alpha, gain, s, resid, delivered))
+                    continue
                 resid = ef_residual(
                     g_eff, s, alpha, delivered=d if use_chan else None
                 ) if use_ef else None

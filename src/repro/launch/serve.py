@@ -18,8 +18,11 @@ is served live as JSON (``/stats.json``) and Prometheus text
         --telemetry-file /tmp/fleet.json --log-every 100
 
 ``--rounds 0`` serves until interrupted; ``--telemetry-port 0`` picks
-an ephemeral port (printed on startup).  Decode shapes in the dry-run
-lower exactly this ``decode_step``.
+an ephemeral port (printed on startup).  ``--ckpt-dir`` arms crash-safe
+checkpointing: a killed run relaunched with the same directory
+auto-resumes from the latest complete checkpoint (``--no-resume``
+starts fresh).  Decode shapes in the dry-run lower exactly this
+``decode_step``.
 """
 from __future__ import annotations
 
@@ -68,18 +71,39 @@ def parse_args():
                        help="write rollup JSON snapshots to this path")
     fleet.add_argument("--log-every", type=int, default=100,
                        help="rounds between stderr/file telemetry flushes")
+    fleet.add_argument("--ckpt-dir", default=None,
+                       help="crash-safe session checkpoints under this "
+                            "directory (enables auto-resume on relaunch)")
+    fleet.add_argument("--ckpt-every", type=int, default=50,
+                       help="rounds between session checkpoints")
+    fleet.add_argument("--no-resume", action="store_true",
+                       help="ignore existing checkpoints in --ckpt-dir "
+                            "and start fresh")
+    fleet.add_argument("--watchdog", type=float, default=0.0,
+                       help="seconds without a completed round before a "
+                            "stall degradation event is logged (0 = off)")
     return ap.parse_args()
 
 
 def serve_fleet(args) -> int:
     from repro.configs import paper_linreg as PL
-    from repro.launch.session import build_linreg_fleet_session, file_sink
+    from repro.launch.session import (
+        SessionOptions,
+        build_linreg_fleet_session,
+        file_sink,
+    )
 
     net = getattr(PL, args.mix.upper())
     sink = None
+    options = SessionOptions(
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        resume=not args.no_resume, watchdog_timeout=args.watchdog)
     session = build_linreg_fleet_session(
-        net=net, lam_base=args.lam_base, seed=args.seed,
+        net=net, lam_base=args.lam_base, seed=args.seed, options=options,
         on_round=lambda k, m: _fleet_log(session, sink, k, args.log_every))
+    if args.ckpt_dir and session.round_index:
+        print(f"resumed from checkpoint at round {session.round_index} "
+              f"({args.ckpt_dir})", flush=True)
     if args.telemetry_file:
         sink = file_sink(args.telemetry_file, session.rollup,
                          every=args.log_every)
@@ -95,6 +119,8 @@ def serve_fleet(args) -> int:
     except KeyboardInterrupt:
         n = session.rollup.rounds
     finally:
+        if args.ckpt_dir:
+            session.checkpoint()
         if sink is not None:
             sink.flush()
         if server is not None:

@@ -27,9 +27,20 @@ Run modes:
 ``serve_telemetry()`` attaches a :class:`TelemetryServer` exposing
 ``/stats.json`` (rollup snapshot) and ``/metrics`` (Prometheus text);
 ``python -m repro.launch.serve --fleet`` is the CLI around all of this.
+
+Durability (DESIGN.md §10): a :class:`SessionOptions` with ``ckpt_dir``
+set arms crash-safe checkpointing through ``repro.checkpoint`` — every
+``ckpt_every`` rounds the TrainState, PRNG stream, round index and a
+rollup snapshot are written atomically, and a relaunched session
+auto-resumes from the latest complete checkpoint with a bit-equal
+observation stream (the batch key fold continues at the restored round
+index) and strictly monotone rollup counters.  ``watchdog_timeout``
+arms a :class:`Watchdog` that flags stalled device dispatch as a
+``"stall"`` degradation event without killing the loop.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import threading
 import time
@@ -47,6 +58,81 @@ from repro.comm.rollup import CommRollup
 warnings.filterwarnings(
     "ignore", message="Some donated buffers were not usable"
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionOptions:
+    """Durability knobs for a :class:`FleetSession`.
+
+    ckpt_dir:
+        Checkpoint directory; ``None`` (default) disables checkpointing
+        and resume entirely — the session is byte-for-byte the
+        pre-durability loop.
+    ckpt_every:
+        Write a checkpoint every N completed rounds (0 = only explicit
+        :meth:`FleetSession.checkpoint` calls).
+    resume:
+        Auto-restore from the latest complete checkpoint under
+        ``ckpt_dir`` at construction time (no-op when none exists).
+    watchdog_timeout:
+        Seconds without a completed round before the watchdog records a
+        ``"stall"`` degradation event (0 disables the watchdog).
+    """
+
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    resume: bool = True
+    watchdog_timeout: float = 0.0
+
+
+class Watchdog:
+    """Flags stalled round dispatch as rollup degradation events.
+
+    The serving loop calls :meth:`beat` after every completed round;
+    :meth:`check` compares the time since the last beat against
+    ``timeout`` and records one ``"stall"`` event per stall episode
+    (re-armed by the next beat) — the session keeps running, the event
+    stream is the signal.  ``check`` takes an explicit ``now`` so tests
+    drive it synchronously; :meth:`start` runs it on a daemon thread.
+    """
+
+    def __init__(self, rollup: CommRollup, timeout: float, *,
+                 clock=time.monotonic):
+        self.rollup = rollup
+        self.timeout = float(timeout)
+        self._clock = clock
+        self._last = clock()
+        self._flagged = False
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def beat(self) -> None:
+        self._last = self._clock()
+        self._flagged = False
+
+    def check(self, now: Optional[float] = None) -> bool:
+        """Returns True iff this call newly flagged a stall."""
+        now = self._clock() if now is None else now
+        if not self._flagged and now - self._last > self.timeout:
+            self._flagged = True
+            self.rollup.record_degradation("stall")
+            return True
+        return False
+
+    def start(self) -> None:
+        def _loop():
+            while not self._stop.wait(max(self.timeout / 4.0, 0.01)):
+                self.check()
+
+        self._thread = threading.Thread(
+            target=_loop, name="fleet-watchdog", daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(5.0)
+            self._thread = None
 
 
 class FleetSession:
@@ -70,20 +156,31 @@ class FleetSession:
     on_round:
         Optional ``on_round(round_index, metrics_dict)`` host callback
         (logging, file sinks); runs outside the rollup lock.
+    options:
+        :class:`SessionOptions` durability knobs.  When ``ckpt_dir`` is
+        set and ``resume`` is on, construction restores the latest
+        complete checkpoint (state, PRNG stream, round index, rollup)
+        before the first round runs.
     """
 
     def __init__(self, step_fn: Callable, state, batch_fn: Callable,
                  rollup: CommRollup, *, key=None,
-                 on_round: Optional[Callable] = None):
+                 on_round: Optional[Callable] = None,
+                 options: Optional[SessionOptions] = None):
         self._step = jax.jit(step_fn, donate_argnums=(0,))
         self._state = state
         self._batch_fn = batch_fn
         self.rollup = rollup
         self._key = key if key is not None else jax.random.key(0)
         self._on_round = on_round
+        self.options = options or SessionOptions()
+        self._round = 0
+        self._watchdog: Optional[Watchdog] = None
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        if self.options.ckpt_dir and self.options.resume:
+            self._try_resume()
 
     @property
     def state(self):
@@ -91,26 +188,92 @@ class FleetSession:
         harmless mid-round — JAX arrays are immutable snapshots)."""
         return self._state
 
+    @property
+    def round_index(self) -> int:
+        """The next round to run (== rounds completed this lineage,
+        across restarts)."""
+        return self._round
+
+    # -- durability ----------------------------------------------------
+
+    def _ckpt_tree(self):
+        """The pytree a session checkpoint round-trips: the full
+        TrainState (params/opt/EF/ctrl/net_state — tuple-shaped
+        net_state included) plus the raw PRNG key data."""
+        return {"state": self._state,
+                "key": jax.random.key_data(self._key)}
+
+    def checkpoint(self) -> Optional[int]:
+        """Atomically persist the session at its current round; returns
+        the checkpoint step (the round index) or None when disabled."""
+        if not self.options.ckpt_dir:
+            return None
+        from repro import checkpoint as ckpt
+
+        tree = jax.device_get(self._ckpt_tree())
+        extra = {"round": self._round, "rollup": self.rollup.state_dict()}
+        ckpt.save(self.options.ckpt_dir, self._round, tree, extra=extra)
+        return self._round
+
+    def _try_resume(self) -> None:
+        from repro import checkpoint as ckpt
+
+        step = ckpt.latest_step(self.options.ckpt_dir)
+        if step is None:
+            return
+        tree = ckpt.restore(self.options.ckpt_dir, self._ckpt_tree(),
+                            step=step)
+        extra = ckpt.read_manifest(
+            self.options.ckpt_dir, step=step).get("extra") or {}
+        self._state = tree["state"]
+        self._key = jax.random.wrap_key_data(tree["key"])
+        self._round = int(extra.get("round", step))
+        if extra.get("rollup"):
+            self.rollup.load_state(extra["rollup"])
+        self.rollup.record_restart()
+
     def run(self, rounds: int = 0) -> int:
         """Blocking serve loop; returns the number of rounds executed.
 
-        ``rounds=0`` runs until :meth:`stop` is called (or KeyboardInterrupt).
+        ``rounds=N`` runs N MORE rounds from the current (possibly
+        resumed) position; ``rounds=0`` runs until :meth:`stop` is
+        called (or KeyboardInterrupt).  The observation stream is keyed
+        by absolute round index, so a resumed session consumes exactly
+        the batches the killed one would have.
         """
-        k = 0
-        batch = self._batch_fn(jax.random.fold_in(self._key, 0))
-        while not self._stop.is_set() and (rounds == 0 or k < rounds):
-            # 1. dispatch round k (async — returns device futures)
-            self._state, metrics = self._step(self._state, batch)
-            # 2. sample round k+1's observations in the device's shadow
-            if rounds == 0 or k + 1 < rounds:
-                batch = self._batch_fn(jax.random.fold_in(self._key, k + 1))
-            # 3. pull round k's metrics (blocks on the device) and roll up
-            metrics = jax.device_get(metrics)
-            self.rollup.update(metrics)
-            if self._on_round is not None:
-                self._on_round(k, metrics)
-            k += 1
-        return k
+        opts = self.options
+        start = self._round
+        target = 0 if rounds == 0 else start + rounds
+        k = start
+        if opts.watchdog_timeout > 0:
+            self._watchdog = Watchdog(self.rollup, opts.watchdog_timeout)
+            self._watchdog.start()
+        try:
+            batch = self._batch_fn(jax.random.fold_in(self._key, k))
+            while not self._stop.is_set() and (target == 0 or k < target):
+                # 1. dispatch round k (async — returns device futures)
+                self._state, metrics = self._step(self._state, batch)
+                # 2. sample round k+1's observations in the device's shadow
+                if target == 0 or k + 1 < target:
+                    batch = self._batch_fn(
+                        jax.random.fold_in(self._key, k + 1))
+                # 3. pull round k's metrics (blocks on the device), roll up
+                metrics = jax.device_get(metrics)
+                self.rollup.update(metrics)
+                if self._watchdog is not None:
+                    self._watchdog.beat()
+                if self._on_round is not None:
+                    self._on_round(k, metrics)
+                k += 1
+                self._round = k
+                if (opts.ckpt_dir and opts.ckpt_every > 0
+                        and (k - start) % opts.ckpt_every == 0):
+                    self.checkpoint()
+        finally:
+            if self._watchdog is not None:
+                self._watchdog.stop()
+                self._watchdog = None
+        return k - start
 
     # -- thread mode ---------------------------------------------------
 
@@ -217,6 +380,10 @@ def file_sink(path: str, rollup: CommRollup, every: int = 50):
     """
     import os
 
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+
     def _write():
         tmp = f"{path}.tmp"
         with open(tmp, "w") as f:
@@ -240,6 +407,7 @@ def build_linreg_fleet_session(
     net=None, cfg_lr=None, *, lam_base: float = 1.0, seed: int = 0,
     mesh=None, window: int = 64, clock=time.monotonic,
     on_round: Optional[Callable] = None,
+    options: Optional[SessionOptions] = None,
 ) -> FleetSession:
     """A :class:`FleetSession` serving the paper's linreg fleet.
 
@@ -287,4 +455,5 @@ def build_linreg_fleet_session(
         window=window, clock=clock)
     return FleetSession(
         step_fn, state, lambda key: R.agent_batches(problem, key),
-        rollup, key=jax.random.key(seed + 1), on_round=on_round)
+        rollup, key=jax.random.key(seed + 1), on_round=on_round,
+        options=options)

@@ -1,7 +1,8 @@
 """repro.net — lossy/latent-channel network simulation.
 
 Channel models (``ideal`` / ``bernoulli`` / ``gilbert_elliott`` /
-``rate`` / ``delay``) attach to CommPolicies with the ``@`` spec suffix
+``rate`` / ``delay`` / ``retx``) attach to CommPolicies with the ``@``
+spec suffix
 and run as traced per-round randomness inside the single-compile train
 step; the per-agent ``[staleness, aux, uid]`` state lives in the
 TrainState's ``net_state`` slot — enlarged to a ``(rows, line)`` pair
@@ -18,6 +19,7 @@ from repro.net.channels import (
     delay_round,
     net_init,
     net_rows,
+    retx_round,
     spec_is_trivial,
     stale_scale,
     tx_cost,
@@ -32,6 +34,7 @@ __all__ = [
     "delay_round",
     "net_init",
     "net_rows",
+    "retx_round",
     "spec_is_trivial",
     "stale_scale",
     "tx_cost",

@@ -29,6 +29,15 @@ Registered channels (``repro.net.CHANNELS``):
   accepted payloads are not lost, they arrive ``~lag`` rounds late
   through a fixed-depth per-agent FIFO delay line and are applied with
   a staleness-discounted weight at aggregation (see below).
+* ``retx(k,fresh,p,model,boost,seed)`` — a RETRANSMIT wrapper over an
+  inner loss model (``model`` ∈ bernoulli/gilbert_elliott, nominal loss
+  ``p`` for bernoulli): a payload lost on its first offer is buffered
+  and re-offered for up to ``k`` subsequent rounds before folding into
+  EF memory — retransmit-vs-re-gate as a policy axis.  ``fresh=true``
+  re-evaluates the gate against the current gradient before each
+  re-offer (a declined fresh re-offer still consumes a retry).
+  Re-offers are priced in ATTEMPTED wire bytes; a retransmitting agent
+  offers no new content that round.
 
 **State-slot layout.**  ``net_state`` is an ``(A, NET_WIDTH)`` f32
 array; per agent the row is ``[staleness, aux, uid]``:
@@ -118,12 +127,20 @@ class ChannelModel(NamedTuple):
     seed: int = 0
     draw: Optional[Callable[..., Tuple[jax.Array, jax.Array]]] = None
     update: Optional[Callable[..., jax.Array]] = None
-    # delay-line channels only: FIFO depth (= max_lag; 0 marks a
-    # non-delay channel), application-weight discount, and the
-    # head-of-line maturity decision
+    # payload-buffering channels only: slot count of the per-agent
+    # payload buffer (= max_lag for delay lines, 1 for retx; 0 marks a
+    # bufferless channel — net_state stays the bare rows array)
     depth: int = 0
+    # delay-line channels only: application-weight discount and the
+    # head-of-line maturity decision
     discount: float = 0.0
     mature: Optional[Callable[..., jax.Array]] = None
+    # retransmit channels only: max re-offer rounds for an undelivered
+    # payload (0 marks a non-retx channel — the dispatch discriminator,
+    # since retx shares ``depth > 0`` with delay) and whether a pending
+    # re-offer re-evaluates the gate against the current gradient
+    retx_k: int = 0
+    fresh: bool = False
 
 
 def build_channel(spec: StageSpec) -> ChannelModel:
@@ -242,6 +259,41 @@ def _rate(args, spec):
                         boost=float(args["boost"]), draw=draw, update=update)
 
 
+@CHANNELS.register(
+    "retx",
+    params=(("k", 1), ("fresh", False), ("p", 0.1), ("model", "bernoulli"),
+            ("boost", 0.0), ("seed", 0)),
+    doc="retransmit wrapper: re-offer an undelivered payload up to k "
+        "rounds before the EF fold (fresh=true re-gates each re-offer)",
+)
+def _retx(args, spec):
+    k = int(args["k"])
+    if k < 1:
+        raise ValueError(f"retx k must be >= 1, got {args['k']!r}")
+    inner_name = str(args["model"])
+    if inner_name not in ("bernoulli", "gilbert_elliott"):
+        raise ValueError(
+            f"retx model must be a loss channel ('bernoulli' or "
+            f"'gilbert_elliott'), got {inner_name!r}"
+        )
+    if inner_name != "bernoulli" and float(args["p"]) != 0.1:
+        raise ValueError(
+            "retx p only parameterizes the bernoulli inner model; "
+            f"model={inner_name!r} takes its registry defaults"
+        )
+    # build the inner loss model through the registry so its draw and
+    # aux-state conventions (the rows' aux column) are reused verbatim
+    inner_entry = CHANNELS.get(inner_name)
+    inner_kw = {"seed": int(args["seed"])}
+    if inner_name == "bernoulli":
+        inner_kw["p"] = args["p"]
+    inner = build_channel(inner_entry.resolve((), inner_kw))
+    return ChannelModel(spec, init_aux=inner.init_aux,
+                        boost=float(args["boost"]), seed=int(args["seed"]),
+                        draw=inner.draw, update=inner.update,
+                        depth=1, retx_k=k, fresh=bool(args["fresh"]))
+
+
 def _scaled_lag(lag: float, chan_scale):
     """Mean lag × grid coordinate (no extra ops when None)."""
     if chan_scale is None:
@@ -338,9 +390,9 @@ def net_init(policy, num_agents: int, params=None):
         return rows
     if params is None:
         raise ValueError(
-            "policy attaches a delay channel (@ delay(...)): net_init "
-            "needs the params tree to size the payload delay line — "
-            "call net_init(policy, num_agents, params)"
+            "policy attaches a payload-buffering channel (@ delay / "
+            "@ retx): net_init needs the params tree to size the "
+            "payload buffer — call net_init(policy, num_agents, params)"
         )
     meta = jnp.zeros((num_agents, depth, 2), jnp.float32)
     buf = jax.tree_util.tree_map(
@@ -489,6 +541,93 @@ def delay_round(model: ChannelModel, net_i, step, chan_scale):
     return d, stale, commit
 
 
+def retx_round(model: ChannelModel, net_i, step, chan_scale, cost: float):
+    """One agent's retransmit round (``@ retx(k,...)`` — ROADMAP item 2's
+    retransmit-vs-re-gate axis).
+
+    ``net_i`` is the agent's ``(row, line)`` slice, exactly the delay
+    line's layout with the meta columns reinterpreted as ``[valid,
+    tries]``: slot 0 of the buffer holds the one payload awaiting
+    retransmission (``valid``), and ``tries`` counts the re-offer
+    rounds it has consumed.  Returns ``(d, stale, pending, commit)``:
+
+    * ``d`` — the inner loss model's delivery draw for this round
+      (bernoulli / gilbert_elliott through the shared per-round PRNG
+      convention), decided before the trigger runs so adaptive
+      controllers can price delivery.
+    * ``stale`` / ``pending`` — the staleness counter (for
+      :func:`stale_scale`) and the buffered-payload indicator.
+    * ``commit(alpha, payload) -> (attempt, out_sent, delivered, fold,
+      new_net_i)`` — resolves the round.  With a pending payload the
+      agent RETRANSMITS it: the attempt is unconditional
+      (``fresh=false``) or re-gated by this round's trigger decision
+      (``fresh=true``, which also consumes a retry when the gate stays
+      shut); the current gradient is not offered (a retransmitting
+      agent is silent for new content, like a gated-off agent).  With
+      an empty buffer the trigger decides as usual, and a lost first
+      offer is buffered instead of folding into EF.  ``attempt`` is
+      the realized wire decision (re-offers are priced in attempted
+      wire bytes), ``delivered = attempt × d``, ``out_sent`` the
+      payload the server actually receives (buffered on a re-offer,
+      current otherwise), and ``fold`` a params-shaped tree that is
+      the buffered payload on FINAL failure (``tries`` exhausted all
+      ``k`` re-offers) and zeros otherwise — the EF fold is deferred
+      until the wire has truly given up on the payload.
+    """
+    row, line = net_i
+    stale, aux, uid = row[0], row[1], row[2]
+    meta, buf = line["meta"], line["buf"]
+    valid = meta[0, 0]
+    tries = meta[0, 1]
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(model.seed), step),
+        uid.astype(jnp.int32),
+    )
+    d, aux_mid = model.draw(key, aux, chan_scale, cost)
+    pending = valid
+
+    def commit(alpha, payload):
+        # pending: re-offer unconditionally, or re-gate when fresh;
+        # empty buffer: the trigger decides as usual
+        re_gate = alpha if model.fresh else 1.0
+        attempt = pending * re_gate + (1.0 - pending) * alpha
+        delivered = attempt * d
+        # the server receives the BUFFERED payload on a re-offer round
+        pend = pending > 0.5
+        out_sent = jax.tree_util.tree_map(
+            lambda b, s: jnp.where(pend, b[0], s.astype(b.dtype)),
+            buf, payload,
+        )
+        # every pending round consumes a retry; the payload expires
+        # (EF fold) when undelivered after its k-th re-offer round
+        tries1 = tries + pending
+        resolved = pending * delivered
+        expired = (pending * (1.0 - delivered)
+                   * (tries1 >= jnp.float32(model.retx_k)))
+        fold = jax.tree_util.tree_map(
+            lambda b: jnp.where(expired > 0.5, b[0], jnp.zeros_like(b[0])),
+            buf,
+        )
+        # a lost FIRST offer enters the buffer (tries reset to 0)
+        enq = (1.0 - pending) * alpha * (1.0 - d)
+        new_valid = pending * (1.0 - resolved - expired) + enq
+        new_tries = tries1 * pending * (1.0 - resolved - expired)
+        meta_new = meta.at[0].set(jnp.stack([new_valid, new_tries]))
+        buf_new = jax.tree_util.tree_map(
+            lambda b, s: b.at[0].set(
+                jnp.where(enq > 0.5, s.astype(b.dtype), b[0])
+            ),
+            buf, payload,
+        )
+        new_stale = (stale + 1.0) * (1.0 - delivered)
+        new_aux = model.update(aux_mid, delivered, cost)
+        new_row = jnp.stack([new_stale, new_aux, uid])
+        return (attempt, out_sent, delivered, fold,
+                (new_row, {"meta": meta_new, "buf": buf_new}))
+
+    return d, stale, pending, commit
+
+
 def stale_scale(scale, boost: float, stale, adaptive: bool):
     """The staleness-escalated trigger knob scale.
 
@@ -516,6 +655,7 @@ __all__ = [
     "delay_round",
     "net_init",
     "net_rows",
+    "retx_round",
     "spec_is_trivial",
     "stale_scale",
     "tx_cost",

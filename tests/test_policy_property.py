@@ -73,6 +73,11 @@ CHANNEL_TABLE = (
     ("delay", {"dist": (_CH, ("geometric", "deterministic")),
                "max_lag": (_I, 1, 6), "discount": (_F, 0.0, 4.0),
                "boost": (_F, 0.0, 1.0), "seed": (_I, 0, 99)}),
+    # retx's p only composes with the (default) bernoulli inner model —
+    # the model override is drawn jointly below
+    ("retx", {"k": (_I, 1, 4), "fresh": (_CH, ("true", "false")),
+              "p": (_F, 0.0, 1.0), "boost": (_F, 0.0, 1.0),
+              "seed": (_I, 0, 99)}),
 )
 
 
@@ -103,6 +108,13 @@ def _draw_stage(data, table):
             args["lag"] = data.draw(st.floats(
                 1.0, float(args["max_lag"]), allow_nan=False,
                 allow_infinity=False))
+    if name == "retx" and data.draw(st.booleans()):
+        # p is only a bernoulli knob — a non-bernoulli inner model
+        # rejects it, so the draws stay jointly valid
+        args["model"] = data.draw(
+            st.sampled_from(("bernoulli", "gilbert_elliott")))
+        if args["model"] != "bernoulli":
+            args.pop("p", None)
     if not args:
         return name
     body = ",".join(f"{k}={v!r}" if isinstance(v, str) else f"{k}={v}"
@@ -175,6 +187,9 @@ EXAMPLES = (
     " @ delay(dist=deterministic,lag=3.0,max_lag=4,discount=1.0,seed=5)",
     "gain_lookahead(lam=2.0)|bf16+ef @ delay(discount=0.5)",
     "always @ delay(dist=geometric,lag=2.0,max_lag=6)",
+    "gain_lookahead(lam=2.0)|int8 @ retx(k=2,fresh=true,p=0.25,seed=3)",
+    "always|topk(0.5)+ef @ retx",
+    "grad_norm(mu=1.0)|int8 @ retx(k=3,model=gilbert_elliott,seed=1)",
 )
 
 
@@ -193,6 +208,15 @@ def test_delay_defaults_render_away():
         "always @ delay(dist=geometric,lag=2.0,max_lag=4,discount=0.0,"
         "boost=0.0,seed=0)")
     assert str(pol) == "always @ delay"
+    assert CommPolicy.parse_one(str(pol)) == pol
+
+
+def test_retx_defaults_render_away():
+    """The all-defaults retx spec renders bare, like every stage."""
+    pol = CommPolicy.parse_one(
+        "always @ retx(k=1,fresh=false,p=0.1,model=bernoulli,boost=0.0,"
+        "seed=0)")
+    assert str(pol) == "always @ retx"
     assert CommPolicy.parse_one(str(pol)) == pol
 
 
